@@ -1,0 +1,50 @@
+"""Paper Fig 6 (F3): battery effectiveness across carbon regions.
+
+One vmapped program evaluates all regions; reports the reduction
+distribution, the fraction of regions with >=5% reduction, and the fraction
+where batteries INCREASE emissions (embodied > operational savings).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import carbon_reduction_pct, sweep_regions
+from .common import battery_cfg, pct, regions, save_rows, setup
+
+N_REGIONS = 158
+
+
+def run(quick: bool = True):
+    rows = []
+    n_regions = 48 if quick else N_REGIONS
+    for wl in ("surf", "marconi", "borg"):
+        tasks, hosts, meta, cfg = setup(wl, quick)
+        traces = regions(n_regions, cfg.n_steps)
+        base = sweep_regions(tasks, hosts, traces, cfg)
+        treated = sweep_regions(
+            tasks, hosts, traces,
+            cfg.replace(battery=battery_cfg(meta)))
+        red = np.asarray(carbon_reduction_pct(base, treated))
+        rows.append({
+            "bench": "battery_regions", "workload": wl,
+            "regions": n_regions,
+            "metric": "mean_reduction_pct", "value": pct(red.mean()),
+            "frac_ge_5pct": pct((red >= 5).mean()),
+            "frac_negative": pct((red < 0).mean()),
+            "best_pct": pct(red.max()), "worst_pct": pct(red.min()),
+        })
+    save_rows("battery_regions", rows)
+    return rows
+
+
+def check(rows) -> list[str]:
+    out = []
+    for r in rows:
+        # F3: some regions benefit >=5%, some regions get WORSE; mean small+
+        ok = (r["frac_ge_5pct"] > 0.05 and r["frac_negative"] > 0.05
+              and -2.0 < r["value"] < 15.0)
+        out.append(
+            f"F3 {r['workload']}: mean {r['value']}%, >=5% in "
+            f"{r['frac_ge_5pct']:.0%}, negative in {r['frac_negative']:.0%} "
+            f"of regions ({'OK' if ok else 'WEAK'})")
+    return out

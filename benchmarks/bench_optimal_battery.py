@@ -1,0 +1,58 @@
+"""Paper Fig 12 (F6): the optimal battery size shrinks when techniques are
+combined.
+
+Grid: battery capacities x regions, with and without temporal shifting; the
+optimal (argmax total-carbon-reduction) capacity per region is compared
+between the two settings.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ShiftingConfig, sweep_regions_x_battery
+from .common import battery_cfg, pct, regions, save_rows, setup
+
+
+def run(quick: bool = True):
+    n_regions = 16 if quick else 48
+    tasks, hosts, meta, cfg = setup("surf", quick)
+    traces = regions(n_regions, cfg.n_steps)
+    kwh0 = 1.1 * meta["n_hosts"]
+    caps = np.linspace(0.3, 3.0, 7) * kwh0
+
+    rows = []
+    opt = {}
+    for label, c in {
+        "B": cfg.replace(battery=battery_cfg(meta)),
+        "B+TS": cfg.replace(battery=battery_cfg(meta),
+                            shifting=ShiftingConfig(enabled=True)),
+    }.items():
+        res = sweep_regions_x_battery(tasks, hosts, traces, caps, c)
+        total = np.asarray(res.total_carbon_kg)      # [R, C]
+        best_idx = np.argmin(total, axis=1)
+        best_caps = caps[best_idx]
+        opt[label] = best_caps
+        rows.append({
+            "bench": "optimal_battery", "combo": label,
+            "metric": "mean_optimal_kwh", "value": pct(best_caps.mean()),
+            "median_optimal_kwh": pct(np.median(best_caps)),
+            "capacities": [pct(x) for x in caps],
+        })
+    rows.append({
+        "bench": "optimal_battery", "combo": "delta",
+        "metric": "mean_optimal_shift_kwh",
+        "value": pct(opt["B"].mean() - opt["B+TS"].mean()),
+        "frac_regions_smaller_with_ts":
+            pct((opt["B+TS"] <= opt["B"]).mean()),
+    })
+    save_rows("optimal_battery", rows)
+    return rows
+
+
+def check(rows) -> list[str]:
+    d = next(r for r in rows if r["combo"] == "delta")
+    ok = d["frac_regions_smaller_with_ts"] >= 0.5
+    return [f"F6 optimal battery: combining with TS shifts mean optimal size "
+            f"by {d['value']} kWh; smaller-or-equal in "
+            f"{d['frac_regions_smaller_with_ts']:.0%} of regions "
+            f"({'OK' if ok else 'WEAK'})"]

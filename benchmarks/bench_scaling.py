@@ -1,0 +1,88 @@
+"""Paper Fig 5 (F1/F2): horizontal scaling vs SLA violations and carbon,
+with and without failures+checkpointing.
+
+Reproduces: (i) under-provisioned datacenters saturate SLA violations while
+barely changing operational carbon; (ii) an over-provisioned datacenter can
+be down-scaled to a minimum-SLA scale with a double-digit total-carbon
+reduction; (iii) failures RAISE the required scale and shrink the reduction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (FailureConfig, SimConfig, find_min_scale, simulate,
+                        summarize, with_scale)
+from .common import pct, regions, save_rows, setup
+
+
+def _sla_and_carbon(tasks, hosts, cfg, trace, n_active):
+    final, _ = simulate(tasks, with_scale(hosts, n_active), trace, cfg)
+    res = summarize(final, cfg)
+    done = max(float(res.done_frac), 1e-3)
+    return (float(res.sla_violation_frac), float(res.total_carbon_kg),
+            float(res.op_carbon_kg), done)
+
+
+def run(quick: bool = True):
+    rows = []
+    for wl in ("surf", "marconi", "borg"):
+        tasks, hosts, meta, cfg = setup(wl, quick)
+        n_hosts = meta["n_hosts"]
+        trace = regions(1, cfg.n_steps, seed=1)[0]
+
+        for failures in (False, True):
+            c = cfg.replace(failures=FailureConfig(
+                enabled=failures, mtbf_h=400.0, repair_h=4.0,
+                checkpointing=True))
+            fracs = [0.25, 0.5, 0.65, 0.8, 1.0]
+            sweep = {}
+            for f in fracs:
+                n = max(int(n_hosts * f), 1)
+                sweep[f] = _sla_and_carbon(tasks, hosts, c, trace, n)
+            # minimum scale meeting <1% SLA
+            best, _ = find_min_scale(
+                lambda n: _sla_and_carbon(tasks, hosts, c, trace, n)[0],
+                lo=1, hi=n_hosts, target=0.01)
+            reachable = best <= n_hosts
+            full = sweep[1.0]
+            red = (100.0 * (1 - _sla_and_carbon(tasks, hosts, c, trace, best)[1]
+                            / full[1]) if reachable else 0.0)
+            rows.append({
+                "bench": "scaling", "workload": wl, "failures": failures,
+                "full_hosts": n_hosts,
+                "min_scale_hosts": int(best) if reachable else None,
+                "metric": "carbon_reduction_at_min_scale_pct",
+                "value": pct(red),
+                "sla_curve": {str(f): pct(100 * s[0]) for f, s in sweep.items()},
+                "op_carbon_curve": {str(f): pct(s[2]) for f, s in sweep.items()},
+                "op_per_done_curve": {str(f): pct(s[2] / s[3])
+                                      for f, s in sweep.items()},
+            })
+    save_rows("scaling", rows)
+    return rows
+
+
+def check(rows) -> list[str]:
+    """F1/F2 validation assertions (returned as human-readable verdicts)."""
+    out = []
+    by = {(r["workload"], r["failures"]): r for r in rows}
+    for wl in ("surf", "marconi", "borg"):
+        nf, wf = by[(wl, False)], by[(wl, True)]
+        ok_red = nf["value"] > 0
+        out.append(f"F1 {wl}: down-scaling saves {nf['value']}% total carbon "
+                   f"({'OK' if ok_red else 'FAIL'})")
+        if nf["min_scale_hosts"] and wf["min_scale_hosts"]:
+            ok_fail = wf["min_scale_hosts"] >= nf["min_scale_hosts"]
+            out.append(f"F1 {wl}: failures raise min scale "
+                       f"{nf['min_scale_hosts']}->{wf['min_scale_hosts']} "
+                       f"({'OK' if ok_fail else 'FAIL'})")
+        sla = {float(k): v for k, v in nf["sla_curve"].items()}
+        opc = {float(k): v for k, v in nf["op_per_done_curve"].items()}
+        # under-provisioning: SLA explodes at low scale but op-carbon PER
+        # COMPLETED WORK stays comparable (the paper's fixed-work horizon
+        # extends instead; per-work normalization is the equivalent claim)
+        ok_f2 = sla[0.25] > 20.0 and abs(opc[0.25] - opc[1.0]) / opc[1.0] < 0.6
+        out.append(f"F2 {wl}: under-provision SLA {sla[0.25]}% vs op-carbon/"
+                   f"work delta {abs(opc[0.25]-opc[1.0])/opc[1.0]:.0%} "
+                   f"({'OK' if ok_f2 else 'WEAK'})")
+    return out

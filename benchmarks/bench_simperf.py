@@ -1,0 +1,77 @@
+"""Paper §VIII: simulator performance — simulated datacenter-time per
+wall-second.
+
+The paper: 2,787 years simulated in 60 compute-hours (single-threaded Java,
+~0.0127 sim-years/core-second).  Here one jitted+vmapped tensor program
+sweeps regions simultaneously; we report sim-years/second for the single and
+vmapped paths, plus the Pallas-kernel engine variant (interpret mode on CPU
+— the TPU target is where its VMEM fusion pays off).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SimConfig, simulate, summarize, sweep_regions
+from .common import pct, regions, save_rows, setup
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))       # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def run(quick: bool = True):
+    rows = []
+    tasks, hosts, meta, cfg = setup("surf", quick, days=14.0, tasks_cap=1024)
+    sim_years = cfg.n_steps * cfg.dt_h / 8766.0
+    task_steps = float(meta["n_tasks"]) * cfg.n_steps   # fairness unit
+
+    jit_one = jax.jit(lambda tr: summarize(simulate(tasks, hosts, tr, cfg)[0],
+                                           cfg))
+    trace = regions(1, cfg.n_steps)[0]
+    t_one = _time(jit_one, trace)
+    rows.append({"bench": "simperf", "metric": "sim_years_per_s_single",
+                 "value": pct(sim_years / t_one), "wall_s": pct(t_one),
+                 "task_steps_per_s": pct(task_steps / t_one),
+                 "paper_java_years_per_core_s": 0.0127})
+
+    for r in (16, 64):
+        traces = regions(r, cfg.n_steps)
+        # pre-jit ONCE: sweep_regions(jit=True) builds a fresh jit wrapper
+        # per call, which times compilation instead of the sweep
+        fn = jax.jit(lambda tr: sweep_regions(tasks, hosts, tr, cfg,
+                                              jit=False))
+        t_vmap = _time(fn, traces)
+        rows.append({"bench": "simperf",
+                     "metric": f"sim_years_per_s_vmap{r}",
+                     "value": pct(sim_years * r / t_vmap),
+                     "task_steps_per_s": pct(task_steps * r / t_vmap),
+                     "wall_s": pct(t_vmap)})
+
+    cfg_p = cfg.replace(use_pallas=True)
+    jit_p = jax.jit(lambda tr: summarize(simulate(tasks, hosts, tr, cfg_p)[0],
+                                         cfg_p))
+    t_pal = _time(jit_p, trace, reps=1)
+    rows.append({"bench": "simperf", "metric": "sim_years_per_s_pallas_interp",
+                 "value": pct(sim_years / t_pal), "wall_s": pct(t_pal)})
+    save_rows("simperf", rows)
+    return rows
+
+
+def check(rows) -> list[str]:
+    one = next(r for r in rows if r["metric"] == "sim_years_per_s_single")
+    vm = next(r for r in rows if "vmap64" in r["metric"])
+    speedup = vm["value"] / max(one["value"], 1e-9)
+    vs_paper = one["value"] / 0.0127
+    return [
+        f"simperf: single-sim {one['value']} sim-years/s = {vs_paper:.0f}x "
+        f"the paper's per-core Java rate",
+        f"simperf: vmap(64) batches to {vm['value']} sim-years/s "
+        f"({speedup:.1f}x single) ({'OK' if speedup > 4 else 'WEAK'})",
+    ]

@@ -1,0 +1,54 @@
+"""Paper Fig 9/14/15: peak power, mean task delay, and total energy per
+technique combination (the trade-off panel).
+
+Validates: batteries raise PEAK grid draw (up to ~8x in the paper) while
+leaving task delay untouched; temporal shifting adds hours of delay but no
+power spike; technique choice barely changes total energy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ShiftingConfig, simulate, summarize
+from .common import battery_cfg, pct, regions, save_rows, setup
+
+
+def run(quick: bool = True):
+    rows = []
+    for wl in ("surf", "marconi", "borg"):
+        tasks, hosts, meta, cfg = setup(wl, quick)
+        trace = regions(2, cfg.n_steps, seed=7)[1]
+        combos = {
+            "none": cfg,
+            "B": cfg.replace(battery=battery_cfg(meta)),
+            "TS": cfg.replace(shifting=ShiftingConfig(enabled=True)),
+            "B+TS": cfg.replace(battery=battery_cfg(meta),
+                                shifting=ShiftingConfig(enabled=True)),
+        }
+        for name, c in combos.items():
+            res = summarize(simulate(tasks, hosts, trace, c)[0], c)
+            rows.append({
+                "bench": "tradeoffs", "workload": wl, "combo": name,
+                "metric": "peak_power_kw", "value": pct(res.peak_power_kw),
+                "mean_delay_h": pct(res.mean_delay_h),
+                "energy_mwh": pct(res.dc_energy_kwh / 1000.0),
+                "grid_energy_mwh": pct(res.grid_energy_kwh / 1000.0),
+            })
+    save_rows("tradeoffs", rows)
+    return rows
+
+
+def check(rows) -> list[str]:
+    out = []
+    for wl in ("surf", "marconi", "borg"):
+        by = {r["combo"]: r for r in rows if r["workload"] == wl}
+        spike = by["B"]["value"] / max(by["none"]["value"], 1e-9)
+        out.append(f"F4 {wl}: battery peak-power spike x{spike:.1f} "
+                   f"({'OK' if spike > 1.3 else 'WEAK'})")
+        d_ts = by["TS"]["mean_delay_h"] - by["none"]["mean_delay_h"]
+        d_b = abs(by["B"]["mean_delay_h"] - by["none"]["mean_delay_h"])
+        out.append(f"F5 {wl}: TS adds {d_ts:.2f}h delay, B adds {d_b:.2f}h "
+                   f"({'OK' if d_ts > 0.5 and d_b < 0.1 else 'WEAK'})")
+        de = abs(by['TS']['energy_mwh'] - by['none']['energy_mwh'])
+        out.append(f"F5 {wl}: TS energy delta {de:.2f} MWh (idle-draw effect)")
+    return out

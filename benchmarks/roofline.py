@@ -1,0 +1,105 @@
+"""Roofline table assembly (§Roofline of EXPERIMENTS.md).
+
+Reads results/dryrun/*.json (produced by launch/dryrun.py) and prints the
+per-(arch x shape x mesh) roofline: the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-device memory.  Also emits the
+markdown table EXPERIMENTS.md embeds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(tag: str = "") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def table_rows(recs, mesh="single"):
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "SKIP", "note": r["reason"]})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": "ERROR", "note": r.get("error", "")[:80]})
+            continue
+        rf = r["roofline"]
+        pd = r["per_device"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute_s": rf["t_compute_s"], "t_memory_s": rf["t_memory_s"],
+            "t_collective_s": rf["t_collective_s"],
+            "dominant": rf["dominant"],
+            "model_flops": rf["model_flops"],
+            "hlo_flops_global": rf["hlo_flops_global"],
+            "useful_ratio": rf["useful_ratio"],
+            "peak_gb": pd["peak_bytes"] / 2**30,
+            "coll_gb": pd["collective_bytes"] / 2**30,
+        })
+    return rows
+
+
+def markdown(rows, title="single-pod (16x16)") -> str:
+    out = [f"### Roofline — {title}", "",
+           "| arch | shape | t_compute | t_memory | t_coll | dominant | "
+           "useful (6ND/HLO) | peak GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | {r.get('note','')} | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} | "
+            f"{r['peak_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def run(quick: bool = True):
+    recs = load()
+    rows = table_rows(recs, "single")
+    ok = [r for r in rows if r["status"] == "ok"]
+    summary = {
+        "bench": "roofline", "metric": "cells_ok",
+        "value": len(ok),
+        "cells_total": len(rows),
+        "dominant_breakdown": {},
+        "worst_useful": min((r["useful_ratio"], r["arch"], r["shape"])
+                            for r in ok) if ok else None,
+        "multi_pod_ok": sum(1 for r in table_rows(recs, "multi")
+                            if r["status"] == "ok"),
+    }
+    for r in ok:
+        d = r["dominant"]
+        summary["dominant_breakdown"][d] = \
+            summary["dominant_breakdown"].get(d, 0) + 1
+    return [summary] + rows
+
+
+def check(rows) -> list[str]:
+    s = rows[0]
+    return [f"dry-run: {s['value']}/{s['cells_total']} single-pod cells ok, "
+            f"{s['multi_pod_ok']} multi-pod cells ok; dominant terms: "
+            f"{s['dominant_breakdown']}"]
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(markdown(table_rows(recs, "single")))
+    print()
+    print(markdown(table_rows(recs, "multi"), "multi-pod (2x16x16)"))

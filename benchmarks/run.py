@@ -1,0 +1,70 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints `name,us_per_call,derived` CSV rows (one per benchmark) followed by
+the per-claim validation verdicts each bench module derives from its rows.
+Raw rows land in results/bench/*.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_analytical_gap, bench_battery_capacity,
+               bench_battery_regions, bench_combinations, bench_embodied,
+               bench_optimal_battery, bench_scaling, bench_simperf,
+               bench_spatial, bench_tradeoffs, roofline)
+
+MODULES = {
+    "scaling": bench_scaling,                # paper Fig 5  (F1/F2)
+    "battery_regions": bench_battery_regions,  # Fig 6      (F3)
+    "battery_capacity": bench_battery_capacity,  # Fig 7/8  (F4)
+    "tradeoffs": bench_tradeoffs,            # Fig 9/14/15  (F4/F5)
+    "embodied": bench_embodied,              # Fig 10       (F3/F4)
+    "combinations": bench_combinations,      # Fig 11/16-19 (F5/F6)
+    "optimal_battery": bench_optimal_battery,  # Fig 12     (F6)
+    "analytical_gap": bench_analytical_gap,  # §III/§VI-C   (F5)
+    "spatial": bench_spatial,                # beyond-paper (§IX/§XI ext.)
+    "simperf": bench_simperf,                # §VIII
+    "roofline": roofline,                    # §Dry-run / §Roofline
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale region counts / horizons (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    verdicts = []
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+            dt = time.time() - t0
+            head = rows[0] if rows else {}
+            derived = f"{head.get('metric','rows')}={head.get('value', len(rows))}"
+            print(f"{name},{dt*1e6:.0f},{derived}", flush=True)
+            if hasattr(mod, "check"):
+                verdicts += [f"[{name}] {v}" for v in mod.check(rows)]
+        except Exception as e:  # keep the suite going; report the failure
+            dt = time.time() - t0
+            print(f"{name},{dt*1e6:.0f},ERROR:{type(e).__name__}:{e}",
+                  flush=True)
+            verdicts.append(f"[{name}] SUITE ERROR: {e}")
+    print()
+    print("=== paper-claim validation (F1-F6 + §III/§VIII) ===")
+    for v in verdicts:
+        print(v)
+    bad = sum("FAIL" in v or "SUITE ERROR" in v for v in verdicts)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

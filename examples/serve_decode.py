@@ -1,0 +1,51 @@
+"""Serving example: batched autoregressive decoding through the serve_step
+path (the same function the dry-run lowers for decode_32k / long_500k).
+
+Greedy-decodes continuations for a batch of prompts with a reduced config of
+each family — demonstrating the KV-cache (dense), latent-cache (MLA), and
+O(1) recurrent-state (SSM/hybrid) serving paths behind one API.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced
+from repro.models.registry import get_model
+
+PROMPT_LEN, GEN = 12, 20
+BATCH = 4
+
+for arch in ["qwen2-1.5b", "deepseek-v2-236b", "mamba2-2.7b", "zamba2-7b"]:
+    cfg = reduced(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(model.decode_step)
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (BATCH, PROMPT_LEN), 0, cfg.vocab)
+    cache = model.init_cache(BATCH, PROMPT_LEN + GEN)
+
+    # prefill via the decode path (teacher-forcing the prompt)
+    tok = prompt[:, :1]
+    for t in range(PROMPT_LEN):
+        logits, cache = step(params, cache, prompt[:, t:t + 1], jnp.int32(t))
+    # greedy generation
+    out = []
+    tok = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for t in range(PROMPT_LEN, PROMPT_LEN + GEN):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        tok = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    state_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(cache))
+    print(f"{arch:22s} generated {gen.shape} in {dt:.2f}s "
+          f"({BATCH * GEN / dt:.0f} tok/s CPU) | decode-state "
+          f"{state_bytes / 1e6:.2f} MB | sample: {gen[0, :8].tolist()}")
+print("done.")

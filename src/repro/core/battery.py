@@ -1,0 +1,87 @@
+"""Battery model + threshold charge/discharge policy (paper §V-B1).
+
+Policy: charge while the carbon intensity is below a rolling-mean threshold
+(past week), discharge above it.  As an optimization the battery waits until
+the carbon intensity stops decreasing before charging (charging at the trough
+rather than on the way down).  Charge/discharge rate scales linearly with
+capacity (3 kW/kWh by default).
+
+The threshold and trough signals depend only on the exogenous carbon trace, so
+they are precomputed outside the scan (`precompute_battery_signals`) — a
+tensorization win unavailable to the event-driven design.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import BatteryConfig
+from .state import BatteryState
+
+
+def precompute_battery_signals(ci_trace, dt_h: float, cfg: BatteryConfig):
+    """Returns (threshold[S], ci_rising[S]) for a carbon trace ci_trace[S].
+
+    threshold[t] = mean of the trailing week's carbon intensity (expanding mean
+    before a full window exists).  ci_rising[t] = trace stopped decreasing at t.
+    """
+    ci = jnp.asarray(ci_trace, jnp.float32)
+    s = ci.shape[0]
+    w = max(int(round(cfg.threshold_window_h / dt_h)), 1)
+    csum = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(ci)])
+    idx = jnp.arange(s)
+    lo = jnp.maximum(idx + 1 - w, 0)
+    window = (idx + 1 - lo).astype(jnp.float32)
+    threshold = (csum[idx + 1] - csum[lo]) / window
+    prev = jnp.concatenate([ci[:1], ci[:-1]])
+    ci_rising = ci >= prev
+    return threshold, ci_rising
+
+
+def battery_step(batt: BatteryState, dc_power_kw, ci, threshold, ci_rising,
+                 dt_h: float, cfg: BatteryConfig, capacity_kwh=None,
+                 rate_kw=None):
+    """One battery decision.  Returns (new_state, grid_power_kw, discharged_kwh).
+
+    Charging ADDS to the grid draw (this is the power-spike effect the paper
+    quantifies in Fig 9A); discharging serves datacenter load from storage.
+    `capacity_kwh` / `rate_kw` may be traced values to sweep battery sizing
+    inside a single compiled program (paper Fig 7/8/12).
+    """
+    if not cfg.enabled:
+        return batt, dc_power_kw, jnp.float32(0.0)
+
+    cap = jnp.float32(cfg.capacity_kwh) if capacity_kwh is None else capacity_kwh
+    rate_kw = (cap * cfg.charge_rate_kw_per_kwh if rate_kw is None
+               else rate_kw)
+    eff = jnp.float32(cfg.round_trip_efficiency)
+
+    want_charge = ci < threshold
+    if cfg.wait_for_trough:
+        want_charge = want_charge & ci_rising
+    want_discharge = (ci > threshold) & (batt.charge > 0.0)
+
+    # charge: limited by C-rate and remaining headroom
+    headroom_kw = (cap - batt.charge) / dt_h
+    charge_kw = jnp.minimum(rate_kw, jnp.maximum(headroom_kw, 0.0))
+    charge_kw = jnp.where(want_charge, charge_kw, 0.0)
+
+    # discharge: limited by C-rate, stored energy, and actual load
+    avail_kw = batt.charge / dt_h
+    discharge_kw = jnp.minimum(jnp.minimum(rate_kw, avail_kw), dc_power_kw)
+    discharge_kw = jnp.where(want_discharge & ~want_charge, discharge_kw, 0.0)
+
+    new_charge = jnp.clip(batt.charge + (charge_kw * eff - discharge_kw) * dt_h,
+                          0.0, cap)
+    grid_kw = dc_power_kw + charge_kw - discharge_kw
+    new_state = BatteryState(charge=new_charge, was_charging=want_charge)
+    return new_state, grid_kw, discharge_kw * dt_h
+
+
+def battery_embodied_rate_kg_per_h(cfg: BatteryConfig) -> float:
+    """Embodied carbon attributed per hour of battery ownership (paper §V-C2)."""
+    if not cfg.enabled:
+        return 0.0
+    from .config import HOURS_PER_YEAR
+
+    total = cfg.capacity_kwh * cfg.embodied_kg_per_kwh
+    return total / (cfg.lifetime_years * HOURS_PER_YEAR)

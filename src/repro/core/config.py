@@ -1,0 +1,113 @@
+"""Static configuration for the STEAM engine.
+
+Everything here is hashable (frozen dataclasses of scalars/strings), so a
+config can be a static argument to jit and switch code paths at trace time —
+that is how technique composition stays free of runtime branching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+HOURS_PER_YEAR = 8766.0
+
+
+@dataclass(frozen=True)
+class PowerModelConfig:
+    """Utilization -> power for one component class (paper §IV-A).
+
+    model: 'linear' | 'sqrt' | 'square' | 'cubic'.  Paper §V-C1 uses sqrt for
+    CPUs and linear for GPUs, following Brewer et al. (SC'24).
+    """
+    idle_w: float = 100.0
+    max_w: float = 300.0
+    model: str = "sqrt"
+
+
+@dataclass(frozen=True)
+class BatteryConfig:
+    enabled: bool = False
+    capacity_kwh: float = 300.0
+    # Paper §V-B1: charging speed scales linearly with capacity, 3 kW/kWh
+    # (Tesla Model 3 DC charging); discharge is limited by the same C-rate.
+    charge_rate_kw_per_kwh: float = 3.0
+    round_trip_efficiency: float = 0.9
+    embodied_kg_per_kwh: float = 100.0   # paper §V-C2, range 30-500
+    lifetime_years: float = 10.0
+    # threshold = rolling mean of the past week's carbon intensity
+    threshold_window_h: float = 168.0
+    # wait until carbon intensity stops decreasing before charging
+    wait_for_trough: bool = True
+
+    @property
+    def charge_rate_kw(self) -> float:
+        return self.capacity_kwh * self.charge_rate_kw_per_kwh
+
+
+@dataclass(frozen=True)
+class ShiftingConfig:
+    enabled: bool = False
+    # task starts allowed while ci <= quantile(next week's forecast)
+    forecast_window_h: float = 168.0
+    quantile: float = 0.35
+    max_delay_h: float = 24.0
+    # optional task-stopper: pause RUNNING tasks in high-carbon periods
+    stop_running: bool = False
+
+
+@dataclass(frozen=True)
+class FailureConfig:
+    enabled: bool = False
+    # stochastic model: per-host failure probability per hour, repair time
+    mtbf_h: float = 1000.0          # mean time between failures per host
+    repair_h: float = 2.0           # mean repair duration
+    checkpoint_interval_h: float = 1.0  # paper §VI-A2 (Cloud Uptime Archive rate)
+    checkpointing: bool = True
+
+
+@dataclass(frozen=True)
+class EmbodiedConfig:
+    host_kg: float = 1022.0         # Surf default (Table II)
+    host_lifetime_years: float = 5.0
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    # 'first_fit'  : exact bounded first-fit placement (K slots/step)
+    # 'aggregate'  : capacity-only admission (analytical-model-like placement)
+    mode: str = "first_fit"
+    slots_per_step: int = 64
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    dt_h: float = 0.25
+    n_steps: int = 1000
+    seed: int = 0
+    cpu_power: PowerModelConfig = PowerModelConfig(idle_w=100.0, max_w=300.0, model="sqrt")
+    gpu_power: PowerModelConfig = PowerModelConfig(idle_w=40.0, max_w=300.0, model="linear")
+    # power drawn by a provisioned-but-idle host beyond component idle (PSU
+    # overhead etc.) is folded into cpu idle_w; non-active hosts draw zero.
+    battery: BatteryConfig = BatteryConfig()
+    shifting: ShiftingConfig = ShiftingConfig()
+    failures: FailureConfig = FailureConfig()
+    embodied: EmbodiedConfig = EmbodiedConfig()
+    scheduler: SchedulerConfig = SchedulerConfig()
+    sla_grace_h: float = 24.0       # task meets SLA if done within 24h of expected
+    collect_series: bool = False    # emit per-step (power, ci, running) series
+    use_pallas: bool = False        # fused power/carbon Pallas kernel path
+
+    def replace(self, **kw) -> "SimConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def techniques(cfg: SimConfig) -> str:
+    """Short label of enabled techniques, e.g. 'HS+B+TS' (HS is expressed via
+    the host table's active mask, so it is not knowable from the config; the
+    label covers B/TS only unless callers append HS themselves)."""
+    parts = []
+    if cfg.battery.enabled:
+        parts.append("B")
+    if cfg.shifting.enabled:
+        parts.append("TS")
+    return "+".join(parts) if parts else "none"

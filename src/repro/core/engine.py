@@ -1,0 +1,257 @@
+"""The STEAM engine: composable stage pipeline + lax.scan executor.
+
+This is the paper's component-graph composability (§IV-B) adapted to TPU: a
+simulation step is a *pipeline* of pure stages `(state, ctx) -> (state, ctx)`.
+Each sustainability technique is one stage; enabling a technique means adding
+its stage to the pipeline (neighbouring stages communicate through ctx keys,
+mirroring the supplier/consumer edges of the component graph).  Because the
+pipeline is composed at trace time, XLA fuses the entire step — there is no
+runtime dispatch.
+
+Default pipeline (order matters and mirrors OpenDC's event cascade):
+  failures -> checkpoint -> task_stopper -> shifting_gate -> scheduler
+  -> progress -> utilization -> power -> battery -> carbon -> metrics
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import battery as battery_mod
+from . import carbon as carbon_mod
+from . import failures as failures_mod
+from . import scheduler as scheduler_mod
+from . import shifting as shifting_mod
+from .config import SimConfig
+from .power import host_power_kw
+from .state import (DONE, PENDING, RUNNING, HostTable, MetricsAcc, SimState,
+                    TaskTable, init_sim_state)
+
+Stage = Callable[[SimState, dict], tuple[SimState, dict]]
+
+
+class StepInputs(NamedTuple):
+    """Exogenous per-step inputs (the xs of the scan), all precomputed."""
+    ci: jax.Array              # f32[S] carbon intensity gCO2/kWh
+    batt_threshold: jax.Array  # f32[S]
+    ci_rising: jax.Array       # bool[S]
+    shift_threshold: jax.Array # f32[S]
+
+
+def build_step_inputs(ci_trace, cfg: SimConfig) -> StepInputs:
+    ci = jnp.asarray(ci_trace, jnp.float32)
+    assert ci.shape[0] >= cfg.n_steps, (
+        f"carbon trace too short: {ci.shape[0]} < {cfg.n_steps}")
+    ci = ci[: cfg.n_steps]
+    bt, rising = battery_mod.precompute_battery_signals(ci, cfg.dt_h, cfg.battery)
+    st = (shifting_mod.precompute_shift_threshold(ci, cfg.dt_h, cfg.shifting)
+          if cfg.shifting.enabled else jnp.zeros_like(ci))
+    return StepInputs(ci=ci, batt_threshold=bt, ci_rising=rising,
+                      shift_threshold=st)
+
+
+# --------------------------------------------------------------------------
+# stages
+# --------------------------------------------------------------------------
+
+def stage_failures(cfg: SimConfig) -> Stage:
+    def fn(state: SimState, ctx: dict):
+        rng, hosts, newly_down = failures_mod.step_host_failures(
+            state.rng, state.hosts, state.t, cfg.dt_h, cfg.failures)
+        tasks, n_int = failures_mod.interrupt_tasks(state.tasks, newly_down,
+                                                    cfg.failures)
+        metrics = state.metrics._replace(
+            n_interrupts=state.metrics.n_interrupts + n_int)
+        return state._replace(rng=rng, hosts=hosts, tasks=tasks,
+                              metrics=metrics), ctx
+    return fn
+
+
+def stage_checkpoint(cfg: SimConfig) -> Stage:
+    def fn(state: SimState, ctx: dict):
+        tasks = failures_mod.checkpoint_tick(state.tasks, state.t, cfg.dt_h,
+                                             cfg.failures)
+        return state._replace(tasks=tasks), ctx
+    return fn
+
+
+def stage_task_stopper(cfg: SimConfig) -> Stage:
+    def fn(state: SimState, ctx: dict):
+        tasks = state.tasks
+        stop = shifting_mod.should_stop(ctx["ci"], ctx["shift_threshold"],
+                                        state.t, tasks.arrival, cfg.shifting)
+        stop = stop & (tasks.status == RUNNING)
+        n = jnp.sum(stop.astype(jnp.float32))
+        tasks = tasks._replace(
+            status=jnp.where(stop, PENDING, tasks.status).astype(jnp.int32),
+            host=jnp.where(stop, -1, tasks.host).astype(jnp.int32))
+        metrics = state.metrics._replace(
+            n_interrupts=state.metrics.n_interrupts + n)
+        return state._replace(tasks=tasks, metrics=metrics), ctx
+    return fn
+
+
+def stage_scheduler(cfg: SimConfig) -> Stage:
+    def fn(state: SimState, ctx: dict):
+        shift_ok = shifting_mod.start_allowed(
+            ctx["ci"], ctx["shift_threshold"], state.t, state.tasks.arrival,
+            cfg.shifting)
+        n_delayed = jnp.sum(
+            ((state.tasks.status == PENDING) & (state.tasks.arrival <= state.t)
+             & ~shift_ok).astype(jnp.float32))
+        tasks = scheduler_mod.schedule_step(state.tasks, state.hosts, state.t,
+                                            shift_ok, cfg.scheduler)
+        metrics = state.metrics._replace(
+            n_shift_delays=state.metrics.n_shift_delays + n_delayed)
+        return state._replace(tasks=tasks, metrics=metrics), ctx
+    return fn
+
+
+def stage_progress(cfg: SimConfig) -> Stage:
+    def fn(state: SimState, ctx: dict):
+        tasks = state.tasks
+        running = tasks.status == RUNNING
+        # straggler hosts advance work at speed < 1 (host of each task)
+        h = state.hosts.speed.shape[0]
+        speed = state.hosts.speed[jnp.clip(tasks.host, 0, h - 1)]
+        advance = cfg.dt_h * jnp.where(running, speed, 1.0)
+        done_now = running & (tasks.remaining <= advance)
+        finish = jnp.where(done_now,
+                           state.t + tasks.remaining / jnp.maximum(speed, 1e-6),
+                           tasks.finish)
+        remaining = jnp.where(running, jnp.maximum(tasks.remaining - advance, 0.0),
+                              tasks.remaining)
+        tasks = tasks._replace(
+            remaining=remaining,
+            finish=finish,
+            status=jnp.where(done_now, DONE, tasks.status).astype(jnp.int32),
+            host=jnp.where(done_now, -1, tasks.host).astype(jnp.int32))
+        return state._replace(tasks=tasks), ctx
+    return fn
+
+
+def stage_power(cfg: SimConfig) -> Stage:
+    def fn(state: SimState, ctx: dict):
+        cpu_u, gpu_u = scheduler_mod.host_utilization(state.tasks, state.hosts)
+        on = (state.hosts.active & state.hosts.up).astype(jnp.float32)
+        if cfg.collect_series:  # capacity-invariant probe for tests/debugging
+            free_c, free_g = scheduler_mod.free_capacity(state.tasks, state.hosts)
+            ctx["max_overcommit"] = jnp.maximum(jnp.max(-free_c), jnp.max(-free_g))
+        if cfg.use_pallas:
+            from repro.kernels import ops as pc_ops
+            p = pc_ops.host_power(cpu_u, gpu_u, state.hosts.n_gpus, on,
+                                  cfg.cpu_power, cfg.gpu_power)
+        else:
+            p = host_power_kw(cpu_u, gpu_u, state.hosts.n_gpus, on,
+                              cfg.cpu_power, cfg.gpu_power)
+        ctx = dict(ctx, host_power_kw=p, dc_power_kw=jnp.sum(p),
+                   host_cpu_util=cpu_u, host_gpu_util=gpu_u)
+        return state, ctx
+    return fn
+
+
+def stage_battery(cfg: SimConfig) -> Stage:
+    def fn(state: SimState, ctx: dict):
+        batt, grid_kw, discharged = battery_mod.battery_step(
+            state.battery, ctx["dc_power_kw"], ctx["ci"],
+            ctx["batt_threshold"], ctx["ci_rising"], cfg.dt_h, cfg.battery,
+            capacity_kwh=ctx.get("batt_capacity_kwh"),
+            rate_kw=ctx.get("batt_rate_kw"))
+        metrics = state.metrics._replace(
+            batt_discharged=state.metrics.batt_discharged + discharged)
+        ctx = dict(ctx, grid_power_kw=grid_kw)
+        return state._replace(battery=batt, metrics=metrics), ctx
+    return fn
+
+
+def stage_carbon(cfg: SimConfig) -> Stage:
+    static_batt_rate = battery_mod.battery_embodied_rate_kg_per_h(cfg.battery)
+
+    def fn(state: SimState, ctx: dict):
+        grid_kw = ctx.get("grid_power_kw", ctx["dc_power_kw"])
+        n_active = jnp.sum(state.hosts.active.astype(jnp.float32))
+        cap = ctx.get("batt_capacity_kwh")
+        if cap is not None and cfg.battery.enabled:
+            from .config import HOURS_PER_YEAR
+            batt_rate = (cap * cfg.battery.embodied_kg_per_kwh
+                         / (cfg.battery.lifetime_years * HOURS_PER_YEAR))
+        else:
+            batt_rate = static_batt_rate
+        op, emb = carbon_mod.carbon_delta(grid_kw, ctx["ci"], cfg.dt_h,
+                                          n_active, cfg.embodied, batt_rate)
+        m = state.metrics
+        metrics = m._replace(
+            op_carbon=m.op_carbon + op,
+            emb_carbon=m.emb_carbon + emb,
+            grid_energy=m.grid_energy + grid_kw * cfg.dt_h,
+            dc_energy=m.dc_energy + ctx["dc_power_kw"] * cfg.dt_h,
+            peak_power=jnp.maximum(m.peak_power, grid_kw))
+        return state._replace(metrics=metrics), ctx
+    return fn
+
+
+def default_pipeline(cfg: SimConfig) -> list[Stage]:
+    """Technique composition: each enabled technique contributes its stage.
+
+    Mirrors paper Fig 4 — adding the task stopper or the battery touches only
+    its own stage; everything else is unchanged.
+    """
+    stages: list[Stage] = []
+    if cfg.failures.enabled:
+        stages.append(stage_failures(cfg))
+        if cfg.failures.checkpointing:
+            stages.append(stage_checkpoint(cfg))
+    if cfg.shifting.enabled and cfg.shifting.stop_running:
+        stages.append(stage_task_stopper(cfg))
+    stages += [stage_scheduler(cfg), stage_progress(cfg), stage_power(cfg)]
+    if cfg.battery.enabled:
+        stages.append(stage_battery(cfg))
+    stages.append(stage_carbon(cfg))
+    return stages
+
+
+# --------------------------------------------------------------------------
+# executor
+# --------------------------------------------------------------------------
+
+def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
+                  dyn: dict | None = None):
+    stages = default_pipeline(cfg) if stages is None else list(stages)
+    dyn = dyn or {}
+
+    def step(state: SimState, inputs: StepInputs):
+        ctx = {"ci": inputs.ci, "batt_threshold": inputs.batt_threshold,
+               "ci_rising": inputs.ci_rising,
+               "shift_threshold": inputs.shift_threshold, **dyn}
+        for stage in stages:
+            state, ctx = stage(state, ctx)
+        state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
+        if cfg.collect_series:
+            ys = {"grid_power_kw": ctx.get("grid_power_kw", ctx["dc_power_kw"]),
+                  "dc_power_kw": ctx["dc_power_kw"], "ci": ctx["ci"],
+                  "n_running": jnp.sum((state.tasks.status == RUNNING)
+                                       .astype(jnp.int32)),
+                  "battery_charge": state.battery.charge,
+                  "max_overcommit": ctx.get("max_overcommit", jnp.float32(0.0))}
+        else:
+            ys = None
+        return state, ys
+
+    return step
+
+
+def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
+             stages: Sequence[Stage] | None = None, dyn: dict | None = None):
+    """Run one simulation.  Returns (final SimState, per-step series or None).
+
+    jit-able; vmap over scenario axes is done by core/sweep.py.  `dyn` holds
+    traced scenario parameters (e.g. batt_capacity_kwh) that static config
+    cannot sweep without recompiling.
+    """
+    inputs = build_step_inputs(ci_trace, cfg)
+    state0 = init_sim_state(tasks, hosts, cfg.seed)
+    step = build_step_fn(cfg, stages, dyn)
+    final, series = jax.lax.scan(step, state0, inputs)
+    return final, series

@@ -1,0 +1,56 @@
+"""Host failures and checkpointing (paper §VI-A2).
+
+Failures follow a memoryless model calibrated to an availability trace
+(per-host MTBF + repair time); the paper uses the Cloud Uptime Archive's
+Facebook Messenger incident trace.  When a host fails, tasks running on it are
+interrupted and requeued; with checkpointing enabled they resume from the last
+snapshot (default every 1 h), otherwise they restart from scratch.  Lost work
+is tracked per task — it is the mechanism behind the paper's finding that
+failures erode the carbon savings of down-scaling (F1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import FailureConfig
+from .state import HostTable, TaskTable, PENDING, RUNNING
+
+
+def step_host_failures(rng, hosts: HostTable, now, dt_h: float, cfg: FailureConfig):
+    """Sample failure/repair transitions.  Returns (rng, hosts, newly_down[H])."""
+    if not cfg.enabled:
+        return rng, hosts, jnp.zeros(hosts.up.shape, bool)
+    rng, k_fail = jax.random.split(rng)
+    p_fail = 1.0 - jnp.exp(-dt_h / cfg.mtbf_h)
+    fail_draw = jax.random.bernoulli(k_fail, p_fail, hosts.up.shape)
+    newly_down = hosts.up & hosts.active & fail_draw
+    repaired = (~hosts.up) & (now >= hosts.repair_at)
+    up = (hosts.up & ~newly_down) | repaired
+    repair_at = jnp.where(newly_down, now + cfg.repair_h, hosts.repair_at)
+    return rng, hosts._replace(up=up, repair_at=repair_at), newly_down
+
+
+def interrupt_tasks(tasks: TaskTable, newly_down, cfg: FailureConfig):
+    """Requeue tasks whose host just failed.  Returns (tasks, n_interrupted)."""
+    on_down = (tasks.status == RUNNING) & (tasks.host >= 0) & newly_down[
+        jnp.clip(tasks.host, 0, newly_down.shape[0] - 1)]
+    rollback = tasks.ckpt_remaining if cfg.checkpointing else tasks.duration
+    lost = jnp.where(on_down, rollback - tasks.remaining, 0.0)
+    return tasks._replace(
+        status=jnp.where(on_down, PENDING, tasks.status).astype(jnp.int32),
+        host=jnp.where(on_down, -1, tasks.host).astype(jnp.int32),
+        remaining=jnp.where(on_down, rollback, tasks.remaining),
+        lost_work=tasks.lost_work + jnp.maximum(lost, 0.0),
+    ), jnp.sum(on_down.astype(jnp.float32))
+
+
+def checkpoint_tick(tasks: TaskTable, now, dt_h: float, cfg: FailureConfig):
+    """Snapshot running tasks' progress every checkpoint_interval_h."""
+    if not (cfg.enabled and cfg.checkpointing):
+        return tasks
+    period = cfg.checkpoint_interval_h
+    boundary = jnp.floor(now / period) != jnp.floor((now - dt_h) / period)
+    take = boundary & (tasks.status == RUNNING)
+    return tasks._replace(
+        ckpt_remaining=jnp.where(take, tasks.remaining, tasks.ckpt_remaining))

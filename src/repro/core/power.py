@@ -1,0 +1,75 @@
+"""Statistical power models (paper §IV-A, §V-C1).
+
+Converts component utilization (0..1) into power draw (kW).  STEAM ships
+linear / sqrt / square / cubic models that users calibrate per component; the
+paper's experiments use sqrt for CPUs and linear for GPUs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import PowerModelConfig
+
+_CURVES = {
+    "linear": lambda u: u,
+    "sqrt": lambda u: jnp.sqrt(u),
+    "square": lambda u: u * u,
+    "cubic": lambda u: u * u * u,
+}
+
+
+def component_power_kw(util, cfg: PowerModelConfig, present=None):
+    """Power draw of one component class.
+
+    util:    f32[...] utilization in [0, 1]
+    present: optional f32[...] multiplier (e.g. number of GPUs on the host)
+    Returns kW with idle draw charged whenever the component is present.
+    """
+    if cfg.model not in _CURVES:
+        raise ValueError(f"unknown power model '{cfg.model}'")
+    curve = _CURVES[cfg.model]
+    u = jnp.clip(util, 0.0, 1.0)
+    watts = cfg.idle_w + (cfg.max_w - cfg.idle_w) * curve(u)
+    if present is not None:
+        watts = watts * present
+    return watts / 1000.0
+
+
+def host_power_kw(cpu_util, gpu_util, n_gpus, on_mask, cpu_cfg: PowerModelConfig,
+                  gpu_cfg: PowerModelConfig):
+    """Per-host power draw.
+
+    cpu_util/gpu_util: f32[H] utilizations; n_gpus: f32[H]; on_mask: bool/f32[H]
+    (active AND up — powered-off or failed hosts draw nothing).
+    """
+    p = component_power_kw(cpu_util, cpu_cfg)
+    p = p + component_power_kw(gpu_util, gpu_cfg, present=n_gpus)
+    return p * on_mask
+
+
+def calibrate_power_model(utils, watts, model: str = "sqrt",
+                          idle_bounds=(0.0, 1e4)) -> PowerModelConfig:
+    """Least-squares calibration of (idle_w, max_w) on telemetry (paper §VIII).
+
+    With a fixed curve f, P = idle + (max-idle) f(u) is linear in
+    (idle, max-idle); solve the 2-parameter least squares in closed form.
+    """
+    import numpy as np
+
+    u = np.clip(np.asarray(utils, np.float64), 0.0, 1.0)
+    w = np.asarray(watts, np.float64)
+    f = {"linear": u, "sqrt": np.sqrt(u), "square": u**2, "cubic": u**3}[model]
+    a = np.stack([np.ones_like(f), f], axis=-1)
+    coef, *_ = np.linalg.lstsq(a, w, rcond=None)
+    idle = float(np.clip(coef[0], *idle_bounds))
+    mx = float(idle + max(coef[1], 0.0))
+    return PowerModelConfig(idle_w=idle, max_w=mx, model=model)
+
+
+def mape(pred, actual) -> float:
+    import numpy as np
+
+    pred = np.asarray(pred, np.float64)
+    actual = np.asarray(actual, np.float64)
+    mask = np.abs(actual) > 1e-9
+    return float(np.mean(np.abs((pred[mask] - actual[mask]) / actual[mask])) * 100.0)

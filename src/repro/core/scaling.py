@@ -1,0 +1,41 @@
+"""Horizontal scaling (paper §VI-A).
+
+Scaling is expressed through the host table's `active` mask: a scale of N
+provisions the first N hosts and powers the rest off entirely (no idle draw,
+no embodied attribution).  `find_min_scale` binary-searches the smallest scale
+meeting the SLA target — the paper's 'smallest datacenter with <1% SLA
+violations' procedure.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .state import HostTable
+
+
+def with_scale(hosts: HostTable, n_active: int) -> HostTable:
+    idx = jnp.arange(hosts.cores.shape[0])
+    return hosts._replace(active=idx < n_active)
+
+
+def find_min_scale(eval_sla: Callable[[int], float], lo: int, hi: int,
+                   target: float = 0.01) -> tuple[int, dict[int, float]]:
+    """Binary search the smallest n_active in [lo, hi] with SLA violations
+    <= target.  eval_sla(n) -> violation fraction; assumed non-increasing in n.
+    Returns (best_n, evaluated {n: sla}); best_n = hi+1 if unreachable."""
+    evaluated: dict[int, float] = {}
+    if eval_sla(hi) > target:
+        evaluated[hi] = eval_sla(hi)
+        return hi + 1, evaluated
+    best = hi
+    while lo < hi:
+        mid = (lo + hi) // 2
+        sla = eval_sla(mid)
+        evaluated[mid] = sla
+        if sla <= target:
+            best, hi = mid, mid
+        else:
+            lo = mid + 1
+    return best, evaluated

@@ -1,0 +1,132 @@
+"""Tensorized FIFO scheduling (paper §IV-A resource managers).
+
+OpenDC's scheduler walks an event queue and places each task with first-fit.
+The tensorized equivalent exploits one invariant: FIFO priority is arrival
+order, and the task table is pre-sorted by arrival, so "the next tasks to
+schedule" are simply *the first K eligible rows* — selected with a cumsum
+instead of a per-step argsort.  Placement itself is a bounded `fori_loop`
+(first-fit needs sequential core accounting); K bounds work per step and is
+exact whenever K >= eligible tasks that can start this step.
+
+Two modes:
+  first_fit  — exact greedy placement, the production path (also available as
+               a Pallas kernel, kernels/first_fit.py).
+  aggregate  — capacity-only admission that ignores per-host fragmentation;
+               this reproduces the optimistic behaviour of analytical models
+               the paper critiques (§III), and is also much cheaper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import SchedulerConfig
+from .state import HostTable, TaskTable, PENDING, RUNNING
+
+
+def free_capacity(tasks: TaskTable, hosts: HostTable):
+    """Recompute per-host free CPU cores and GPUs from the task table."""
+    h = hosts.cores.shape[0]
+    running = tasks.status == RUNNING
+    seg = jnp.clip(tasks.host, 0, h - 1)
+    used_c = jax.ops.segment_sum(jnp.where(running, tasks.cores, 0.0), seg, h)
+    used_g = jax.ops.segment_sum(jnp.where(running, tasks.gpus, 0.0), seg, h)
+    avail = (hosts.active & hosts.up).astype(jnp.float32)
+    return hosts.cores * avail - used_c, hosts.n_gpus * avail - used_g
+
+
+def host_utilization(tasks: TaskTable, hosts: HostTable):
+    """Per-host CPU/GPU utilization in [0,1] from running tasks."""
+    h = hosts.cores.shape[0]
+    running = tasks.status == RUNNING
+    seg = jnp.clip(tasks.host, 0, h - 1)
+    cpu = jax.ops.segment_sum(
+        jnp.where(running, tasks.cores * tasks.cpu_util, 0.0), seg, h)
+    gpu = jax.ops.segment_sum(
+        jnp.where(running, tasks.gpus * tasks.gpu_util, 0.0), seg, h)
+    cpu_u = jnp.where(hosts.cores > 0, cpu / jnp.maximum(hosts.cores, 1e-6), 0.0)
+    gpu_u = jnp.where(hosts.n_gpus > 0, gpu / jnp.maximum(hosts.n_gpus, 1e-6), 0.0)
+    return jnp.clip(cpu_u, 0.0, 1.0), jnp.clip(gpu_u, 0.0, 1.0)
+
+
+def _eligible(tasks: TaskTable, now, shift_ok):
+    arrived = tasks.arrival <= now
+    return (tasks.status == PENDING) & arrived & shift_ok
+
+
+def _first_k_indices(mask, k: int):
+    """Indices of the first k True rows of mask (padded with -1), via cumsum."""
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    slot = jnp.where(mask & (rank < k), rank, k)
+    idx = jnp.arange(mask.shape[0], dtype=jnp.int32)
+    return jnp.full((k,), -1, jnp.int32).at[slot].set(idx, mode="drop")
+
+
+def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
+                       cfg: SchedulerConfig):
+    """Exact bounded first-fit.  Returns updated task table."""
+    k = cfg.slots_per_step
+    elig = _eligible(tasks, now, shift_ok)
+    cand = _first_k_indices(elig, k)
+    free_c, free_g = free_capacity(tasks, hosts)
+
+    def body(i, carry):
+        free_c, free_g, status, host, first_start = carry
+        ti = cand[i]
+        valid = ti >= 0
+        tj = jnp.maximum(ti, 0)
+        need_c, need_g = tasks.cores[tj], tasks.gpus[tj]
+        fits = (free_c >= need_c) & (free_g >= need_g)
+        h = jnp.argmax(fits)            # first host that fits (first-fit)
+        placed = valid & fits[h]
+        hj = jnp.where(placed, h, 0).astype(jnp.int32)
+        take_c = jnp.where(placed, need_c, 0.0)
+        take_g = jnp.where(placed, need_g, 0.0)
+        free_c = free_c.at[hj].add(-take_c)
+        free_g = free_g.at[hj].add(-take_g)
+        tset = jnp.where(placed, tj, tasks.arrival.shape[0])  # OOB -> dropped
+        status = status.at[tset].set(RUNNING, mode="drop")
+        host = host.at[tset].set(h.astype(jnp.int32), mode="drop")
+        first_start = first_start.at[tset].min(now, mode="drop")
+        return free_c, free_g, status, host, first_start
+
+    free_c, free_g, status, host, first_start = jax.lax.fori_loop(
+        0, k, body, (free_c, free_g, tasks.status, tasks.host, tasks.first_start))
+    return tasks._replace(status=status, host=host, first_start=first_start)
+
+
+def schedule_aggregate(tasks: TaskTable, hosts: HostTable, now, shift_ok,
+                       cfg: SchedulerConfig):
+    """Capacity-only admission (fragmentation-blind, analytical-model-like).
+
+    Admits the longest FIFO prefix of eligible tasks whose total core/GPU
+    demand fits the total free capacity, then maps each admitted task onto a
+    host by position in the free-capacity cumsum (approximate placement).
+    """
+    elig = _eligible(tasks, now, shift_ok)
+    free_c, free_g = free_capacity(tasks, hosts)
+    total_c, total_g = jnp.sum(free_c), jnp.sum(free_g)
+    need_c = jnp.where(elig, tasks.cores, 0.0)
+    need_g = jnp.where(elig, tasks.gpus, 0.0)
+    admit = elig & (jnp.cumsum(need_c) <= total_c) & (jnp.cumsum(need_g) <= total_g)
+    # approximate host: position of the task's core-demand midpoint in the
+    # cumulative free-core distribution over hosts
+    cum_c = jnp.cumsum(jnp.maximum(free_c, 0.0))
+    pos = jnp.cumsum(need_c) - need_c * 0.5
+    host = jnp.searchsorted(cum_c, pos).astype(jnp.int32)
+    host = jnp.clip(host, 0, hosts.cores.shape[0] - 1)
+    return tasks._replace(
+        status=jnp.where(admit, RUNNING, tasks.status).astype(jnp.int32),
+        host=jnp.where(admit, host, tasks.host).astype(jnp.int32),
+        first_start=jnp.where(admit, jnp.minimum(tasks.first_start, now),
+                              tasks.first_start),
+    )
+
+
+def schedule_step(tasks: TaskTable, hosts: HostTable, now, shift_ok,
+                  cfg: SchedulerConfig):
+    if cfg.mode == "first_fit":
+        return schedule_first_fit(tasks, hosts, now, shift_ok, cfg)
+    if cfg.mode == "aggregate":
+        return schedule_aggregate(tasks, hosts, now, shift_ok, cfg)
+    raise ValueError(f"unknown scheduler mode '{cfg.mode}'")

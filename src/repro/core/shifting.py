@@ -1,0 +1,48 @@
+"""Temporal shifting (paper §V-B2).
+
+A task may start only while the carbon intensity is at or below the 35th
+percentile of the NEXT week's forecast (we use the trace itself as a perfect
+short-term forecast, as the paper does); each task may be delayed at most 24 h,
+after which plain FIFO applies.  An optional task-stopper pauses running tasks
+during high-carbon periods (gracefully: no work is lost) and resumes them when
+green energy returns.
+
+The per-step threshold depends only on the carbon trace -> precomputed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import ShiftingConfig
+
+
+def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig):
+    """threshold[t] = `quantile` of ci over the forward window [t, t + window)."""
+    ci = jnp.asarray(ci_trace, jnp.float32)
+    s = ci.shape[0]
+    w = max(int(round(cfg.forecast_window_h / dt_h)), 1)
+    idx = jnp.minimum(jnp.arange(s)[:, None] + jnp.arange(w)[None, :], s - 1)
+    windows = ci[idx]                                   # f32[S, W]
+    return jnp.quantile(windows, cfg.quantile, axis=1).astype(jnp.float32)
+
+
+def start_allowed(ci, threshold, now, arrival, cfg: ShiftingConfig):
+    """Eligibility modifier for PENDING tasks.
+
+    Returns bool[T]: True if the shifting policy permits starting the task now.
+    Tasks that have waited past max_delay_h bypass the gate (FIFO fallback).
+    """
+    if not cfg.enabled:
+        return jnp.ones_like(arrival, dtype=bool)
+    green = ci <= threshold
+    overdue = (now - arrival) >= cfg.max_delay_h
+    return green | overdue
+
+
+def should_stop(ci, threshold, now, arrival, cfg: ShiftingConfig):
+    """Task-stopper predicate for RUNNING tasks (graceful pause)."""
+    if not (cfg.enabled and cfg.stop_running):
+        return jnp.zeros_like(arrival, dtype=bool)
+    red = ci > threshold
+    within_budget = (now - arrival) < cfg.max_delay_h
+    return red & within_budget

@@ -1,0 +1,100 @@
+"""Spatial workload shifting — a NEW technique composed into STEAM.
+
+The paper evaluates temporal shifting and cites Sukprasert et al. on
+spatial+temporal shifting as the natural extension (§IX, §XI).  This module
+demonstrates the composability claim (contribution C1) by adding the fourth
+technique without touching the engine: tasks are assigned at submission to
+one of R regional datacenters by a carbon-aware placement policy, then each
+region's sub-workload runs through the UNCHANGED engine — one vmapped
+program over regions, exactly like every other sweep.
+
+Placement policy (practical, forecast-based — mirroring the temporal policy
+of §V-B2 rather than an oracle): each task goes to the region with the
+lowest mean forecast carbon intensity over [arrival, arrival+duration],
+subject to a per-region running-load cap (expected core-hours per region may
+not exceed `capacity_frac` of its share) — the capacity constraint is what
+the paper's §III argues analytical models forget.
+
+All placement happens host-side at build time (it is exogenous: it depends
+only on traces + the task list, like the engine's threshold precomputes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .state import TaskTable, make_task_table, pad_task_table
+
+
+def spatial_assign(tasks: TaskTable, traces, dt_h: float,
+                   capacity_core_h=None, forecast_h: float = 24.0):
+    """Assign each task to a region.  Returns i32[T] region ids (-1 pad).
+
+    traces: f32[R, S] carbon traces.  capacity_core_h: optional per-region
+    cap on total assigned core-hours (None = uncapped).
+    """
+    traces = np.asarray(traces, np.float32)
+    r, s = traces.shape
+    arrival = np.asarray(tasks.arrival)
+    duration = np.asarray(tasks.duration)
+    cores = np.asarray(tasks.cores)
+    valid = np.isfinite(arrival)
+
+    csum = np.concatenate([np.zeros((r, 1), np.float64),
+                           np.cumsum(traces, axis=1)], axis=1)
+
+    def mean_ci(t0, t1):
+        i0 = np.clip(int(t0 / dt_h), 0, s - 1)
+        i1 = np.clip(int(np.ceil(t1 / dt_h)), i0 + 1, s)
+        return (csum[:, i1] - csum[:, i0]) / (i1 - i0)
+
+    load = np.zeros(r)
+    cap = (np.full(r, np.inf) if capacity_core_h is None
+           else np.asarray(capacity_core_h, np.float64))
+    region = np.full(arrival.shape[0], -1, np.int32)
+    order = np.argsort(arrival)           # FIFO placement
+    for i in order:
+        if not valid[i]:
+            continue
+        horizon = min(duration[i], forecast_h)
+        ci = mean_ci(arrival[i], arrival[i] + horizon)
+        work = cores[i] * duration[i]
+        pref = np.argsort(ci)
+        for rr in pref:                   # cheapest region with headroom
+            if load[rr] + work <= cap[rr]:
+                region[i] = rr
+                load[rr] += work
+                break
+        else:                             # all full: least-loaded fallback
+            rr = int(np.argmin(load / np.maximum(cap, 1e-9)))
+            region[i] = rr
+            load[rr] += work
+    return region
+
+
+def split_by_region(tasks: TaskTable, region, n_regions: int):
+    """Per-region padded task tables (equal row count for vmap batching)."""
+    region = np.asarray(region)
+    arrival = np.asarray(tasks.arrival)
+    out = []
+    width = 0
+    subsets = []
+    for rr in range(n_regions):
+        idx = np.where(region == rr)[0]
+        subsets.append(idx)
+        width = max(width, len(idx))
+    width = max(width, 1)
+    for idx in subsets:
+        if len(idx):
+            t = make_task_table(arrival[idx],
+                                np.asarray(tasks.duration)[idx],
+                                np.asarray(tasks.cores)[idx],
+                                np.asarray(tasks.gpus)[idx],
+                                np.asarray(tasks.cpu_util)[idx],
+                                np.asarray(tasks.gpu_util)[idx])
+        else:
+            t = make_task_table(np.array([np.inf]), np.array([0.0]),
+                                np.array([0.0]))
+        out.append(pad_task_table(t, width))
+    import jax
+    return jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                        *out)

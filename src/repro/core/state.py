@@ -1,0 +1,187 @@
+"""Dense simulation state for the tensorized STEAM engine.
+
+OpenDC-STEAM models a datacenter as an object graph traversed by events.  On a
+TPU that shape is hostile (pointer chasing, data-dependent control flow), so the
+state here is struct-of-arrays: a padded task table, a host table, and scalar
+battery/accumulator state.  Every stage of the engine is a pure function over
+these pytrees; `lax.scan` drives the timeline and `vmap` drives scenario
+parallelism.  All times are hours (f32), energy kWh, power kW, carbon kgCO2-eq.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Task status codes (i32).  PENDING covers never-started, shifted, stopped and
+# failure-requeued tasks alike: the scheduler only looks at eligibility.
+PENDING = 0
+RUNNING = 1
+DONE = 2
+INVALID = 3  # padding rows
+
+_INF = jnp.float32(jnp.inf)
+
+
+class TaskTable(NamedTuple):
+    """Padded struct-of-arrays task table, pre-sorted by arrival time.
+
+    Pre-sorting by arrival makes FIFO priority the row order, which lets the
+    scheduler select "first K eligible" with a cumsum instead of a per-step
+    argsort (see core/scheduler.py).
+    """
+
+    arrival: jax.Array        # f32[T] hours; +inf for padding rows
+    duration: jax.Array       # f32[T] nominal runtime at full speed
+    remaining: jax.Array      # f32[T] remaining runtime
+    ckpt_remaining: jax.Array # f32[T] remaining at the last checkpoint
+    cores: jax.Array          # f32[T] CPU cores required
+    gpus: jax.Array           # f32[T] GPUs required (0 for CPU-only tasks)
+    cpu_util: jax.Array       # f32[T] utilization of allocated cores while running
+    gpu_util: jax.Array       # f32[T] utilization of allocated GPUs while running
+    status: jax.Array         # i32[T]
+    host: jax.Array           # i32[T]; -1 when not placed
+    first_start: jax.Array    # f32[T]; +inf until first scheduled
+    finish: jax.Array         # f32[T]; +inf until done
+    lost_work: jax.Array      # f32[T] hours of work redone due to failures
+
+    @property
+    def n(self) -> int:
+        return self.arrival.shape[0]
+
+
+class HostTable(NamedTuple):
+    """Host inventory.  `active` is the horizontal-scaling mask (static during a
+    run); `up` tracks failures.  Free capacity is recomputed from the task table
+    each step (robust against any interrupt path forgetting to release)."""
+
+    cores: jax.Array   # f32[H] total CPU cores per host
+    n_gpus: jax.Array  # f32[H] GPUs per host
+    active: jax.Array  # bool[H] provisioned by horizontal scaling
+    up: jax.Array      # bool[H] not currently failed
+    repair_at: jax.Array  # f32[H] absolute hour when a failed host recovers
+    speed: jax.Array   # f32[H] execution-speed factor (<1 = straggler host)
+
+
+class BatteryState(NamedTuple):
+    charge: jax.Array       # f32[] kWh currently stored
+    was_charging: jax.Array # bool[] hysteresis memory for the trough-wait rule
+
+
+class MetricsAcc(NamedTuple):
+    op_carbon: jax.Array       # f32[] kg CO2 from grid energy
+    emb_carbon: jax.Array      # f32[] kg CO2 embodied (hosts + battery share)
+    grid_energy: jax.Array     # f32[] kWh drawn from the grid
+    dc_energy: jax.Array       # f32[] kWh consumed by the datacenter itself
+    peak_power: jax.Array      # f32[] kW max grid draw
+    batt_discharged: jax.Array # f32[] kWh served from the battery
+    n_interrupts: jax.Array    # f32[] task interruptions (failures + stops)
+    n_shift_delays: jax.Array  # f32[] task-steps spent delayed by shifting
+
+
+class SimState(NamedTuple):
+    t: jax.Array          # f32[] current time in hours
+    step: jax.Array       # i32[] current step index
+    tasks: TaskTable
+    hosts: HostTable
+    battery: BatteryState
+    metrics: MetricsAcc
+    rng: jax.Array        # PRNG key for stochastic failures
+
+
+def make_task_table(arrival, duration, cores, gpus=None, cpu_util=None,
+                    gpu_util=None) -> TaskTable:
+    """Build a task table from per-task arrays; sorts by arrival (FIFO order)."""
+    arrival = jnp.asarray(arrival, jnp.float32)
+    duration = jnp.asarray(duration, jnp.float32)
+    cores = jnp.asarray(cores, jnp.float32)
+    t = arrival.shape[0]
+    gpus = jnp.zeros(t, jnp.float32) if gpus is None else jnp.asarray(gpus, jnp.float32)
+    cpu_util = (jnp.ones(t, jnp.float32) if cpu_util is None
+                else jnp.asarray(cpu_util, jnp.float32))
+    gpu_util = (jnp.where(gpus > 0, 1.0, 0.0).astype(jnp.float32) if gpu_util is None
+                else jnp.asarray(gpu_util, jnp.float32))
+    order = jnp.argsort(arrival)
+    arrival, duration, cores = arrival[order], duration[order], cores[order]
+    gpus, cpu_util, gpu_util = gpus[order], cpu_util[order], gpu_util[order]
+    inf = jnp.full(t, _INF)
+    return TaskTable(
+        arrival=arrival, duration=duration, remaining=duration,
+        ckpt_remaining=duration, cores=cores, gpus=gpus,
+        cpu_util=cpu_util, gpu_util=gpu_util,
+        status=jnp.where(jnp.isfinite(arrival), PENDING, INVALID).astype(jnp.int32),
+        host=jnp.full(t, -1, jnp.int32), first_start=inf, finish=inf,
+        lost_work=jnp.zeros(t, jnp.float32),
+    )
+
+
+def pad_task_table(tasks: TaskTable, n: int) -> TaskTable:
+    """Pad a task table to n rows with INVALID entries (for batching)."""
+    t = tasks.n
+    if t == n:
+        return tasks
+    assert t < n, f"cannot shrink task table {t} -> {n}"
+    k = n - t
+
+    def _pad(x, fill):
+        return jnp.concatenate([x, jnp.full((k,), fill, x.dtype)])
+
+    return TaskTable(
+        arrival=_pad(tasks.arrival, jnp.inf), duration=_pad(tasks.duration, 0),
+        remaining=_pad(tasks.remaining, 0), ckpt_remaining=_pad(tasks.ckpt_remaining, 0),
+        cores=_pad(tasks.cores, 0), gpus=_pad(tasks.gpus, 0),
+        cpu_util=_pad(tasks.cpu_util, 0), gpu_util=_pad(tasks.gpu_util, 0),
+        status=_pad(tasks.status, INVALID), host=_pad(tasks.host, -1),
+        first_start=_pad(tasks.first_start, jnp.inf),
+        finish=_pad(tasks.finish, jnp.inf), lost_work=_pad(tasks.lost_work, 0),
+    )
+
+
+def make_host_table(n_hosts: int, cores_per_host: float, gpus_per_host: float = 0.0,
+                    n_active: int | None = None,
+                    straggler_frac: float = 0.0,
+                    straggler_speed: float = 0.5,
+                    seed: int = 0) -> HostTable:
+    """Homogeneous host inventory; `n_active` < n_hosts models horizontal
+    down-scaling (the remaining hosts are powered off entirely).
+
+    straggler_frac > 0 marks that fraction of hosts as STRAGGLERS running at
+    `straggler_speed` x nominal — the operational phenomenon (degraded disks,
+    thermal throttling, noisy neighbours) that inflates task durations and
+    SLA violations; a datacenter mitigates by over-provisioning (horizontal
+    scaling interacts!) or draining, both expressible here."""
+    n_active = n_hosts if n_active is None else n_active
+    idx = jnp.arange(n_hosts)
+    speed = jnp.ones(n_hosts, jnp.float32)
+    if straggler_frac > 0.0:
+        k = jax.random.PRNGKey(seed)
+        slow = jax.random.uniform(k, (n_hosts,)) < straggler_frac
+        speed = jnp.where(slow, straggler_speed, 1.0).astype(jnp.float32)
+    return HostTable(
+        cores=jnp.full(n_hosts, cores_per_host, jnp.float32),
+        n_gpus=jnp.full(n_hosts, gpus_per_host, jnp.float32),
+        active=(idx < n_active),
+        up=jnp.ones(n_hosts, bool),
+        repair_at=jnp.zeros(n_hosts, jnp.float32),
+        speed=speed,
+    )
+
+
+def init_battery() -> BatteryState:
+    return BatteryState(charge=jnp.float32(0.0), was_charging=jnp.array(False))
+
+
+def init_metrics() -> MetricsAcc:
+    z = jnp.float32(0.0)
+    return MetricsAcc(op_carbon=z, emb_carbon=z, grid_energy=z, dc_energy=z,
+                      peak_power=z, batt_discharged=z, n_interrupts=z,
+                      n_shift_delays=z)
+
+
+def init_sim_state(tasks: TaskTable, hosts: HostTable, seed: int = 0) -> SimState:
+    return SimState(
+        t=jnp.float32(0.0), step=jnp.int32(0), tasks=tasks, hosts=hosts,
+        battery=init_battery(), metrics=init_metrics(),
+        rng=jax.random.PRNGKey(seed),
+    )

@@ -1,0 +1,115 @@
+"""Scenario sweeps: vmap over regions/parameters, pjit over the mesh.
+
+The paper ran ~5,500 single-threaded simulations per workload on a CPU
+cluster.  Here a sweep is ONE tensor program: `vmap` turns the scenario axis
+(carbon region x battery size x seed) into a batch dimension and `jit` with
+NamedSharding shards it over the mesh's `data` axis.  This is the paper's
+"simulations are independent" observation expressed as SPMD — and the object
+whose roofline we analyse and hillclimb in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .config import SimConfig
+from .engine import simulate
+from .metrics import SimResult, summarize
+from .state import HostTable, TaskTable
+
+
+def _one(tasks, hosts, cfg: SimConfig, ci_trace, dyn_vals: dict | None):
+    final, _ = simulate(tasks, hosts, ci_trace, cfg, dyn=dyn_vals)
+    return summarize(final, cfg)
+
+
+def sweep_regions(tasks: TaskTable, hosts: HostTable, ci_traces, cfg: SimConfig,
+                  jit: bool = True) -> SimResult:
+    """Run the same (workload, topology, config) in R carbon regions.
+
+    ci_traces: f32[R, S].  Returns a SimResult with leading axis R.
+    """
+    fn = jax.vmap(lambda tr: _one(tasks, hosts, cfg, tr, None))
+    if jit:
+        fn = jax.jit(fn)
+    return fn(jnp.asarray(ci_traces, jnp.float32))
+
+
+def sweep_battery_sizes(tasks: TaskTable, hosts: HostTable, ci_trace,
+                        capacities_kwh, cfg: SimConfig,
+                        rates_kw=None, jit: bool = True) -> SimResult:
+    """Sweep battery capacity (and optionally absolute charge rate) in one
+    region — one compiled program evaluates the whole curve (paper Fig 7/8)."""
+    caps = jnp.asarray(capacities_kwh, jnp.float32)
+    if rates_kw is None:
+        fn = jax.vmap(lambda c: _one(tasks, hosts, cfg, ci_trace,
+                                     {"batt_capacity_kwh": c}))
+        args = (caps,)
+    else:
+        rates = jnp.asarray(rates_kw, jnp.float32)
+        fn = jax.vmap(lambda c, r: _one(tasks, hosts, cfg, ci_trace,
+                                        {"batt_capacity_kwh": c,
+                                         "batt_rate_kw": r}))
+        args = (caps, rates)
+    if jit:
+        fn = jax.jit(fn)
+    return fn(*args)
+
+
+def sweep_regions_x_battery(tasks: TaskTable, hosts: HostTable, ci_traces,
+                            capacities_kwh, cfg: SimConfig,
+                            jit: bool = True) -> SimResult:
+    """[R regions x C capacities] grid in one program (paper Fig 12)."""
+    caps = jnp.asarray(capacities_kwh, jnp.float32)
+    traces = jnp.asarray(ci_traces, jnp.float32)
+    inner = jax.vmap(lambda tr, c: _one(tasks, hosts, cfg, tr,
+                                        {"batt_capacity_kwh": c}),
+                     in_axes=(None, 0))
+    fn = jax.vmap(inner, in_axes=(0, None))
+    if jit:
+        fn = jax.jit(fn)
+    return fn(traces, caps)
+
+
+# --------------------------------------------------------------------------
+# mesh-sharded sweeps (the production path; also the dry-run target)
+# --------------------------------------------------------------------------
+
+def sweep_step_fn(tasks: TaskTable, hosts: HostTable, cfg: SimConfig):
+    """The jit-able sweep function f(ci_traces[R,S]) -> SimResult[R], for
+    lowering against a mesh.  Scenario axis shards over ('pod','data')."""
+
+    def fn(ci_traces):
+        return jax.vmap(lambda tr: _one(tasks, hosts, cfg, tr, None))(ci_traces)
+
+    return fn
+
+
+def sharded_sweep(mesh, tasks: TaskTable, hosts: HostTable, ci_traces,
+                  cfg: SimConfig) -> SimResult:
+    """Shard the scenario axis of a region sweep over the mesh's data axes."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    spec = P(tuple(axes))
+    traces = jax.device_put(jnp.asarray(ci_traces, jnp.float32),
+                            NamedSharding(mesh, spec))
+    fn = jax.jit(sweep_step_fn(tasks, hosts, cfg),
+                 in_shardings=NamedSharding(mesh, spec),
+                 out_shardings=NamedSharding(mesh, spec))
+    with mesh:
+        return fn(traces)
+
+
+def lower_sweep(mesh, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
+                n_regions: int, n_steps: int):
+    """Lower (without running) the sweep for dry-run/roofline analysis."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    spec = P(tuple(axes))
+    traces_spec = jax.ShapeDtypeStruct((n_regions, n_steps), jnp.float32)
+    fn = jax.jit(sweep_step_fn(tasks, hosts, cfg),
+                 in_shardings=NamedSharding(mesh, spec),
+                 out_shardings=NamedSharding(mesh, P()))
+    with mesh:
+        return fn.lower(traces_spec)

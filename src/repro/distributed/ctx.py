@@ -1,0 +1,67 @@
+"""Mesh context threading for intermediate sharding constraints.
+
+Model code annotates activations with logical PartitionSpecs via `constrain`.
+When a mesh is installed (launch/dry-run path) the constraint becomes a real
+`with_sharding_constraint`; on single-device CPU tests it is a no-op, so the
+same model code runs everywhere.  Axis names absent from the installed mesh
+(e.g. "pod" on the single-pod mesh) are dropped from the spec.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _filter_spec(spec: P, axis_names) -> P:
+    """Drop mesh axes the installed mesh does not have."""
+    out = []
+    for part in spec:
+        if part is None:
+            out.append(None)
+        elif isinstance(part, (tuple, list)):
+            kept = tuple(a for a in part if a in axis_names)
+            out.append(kept if kept else None)
+        else:
+            out.append(part if part in axis_names else None)
+    return P(*out)
+
+
+def filter_spec(spec: P) -> P:
+    mesh = current_mesh()
+    if mesh is None:
+        return spec
+    return _filter_spec(spec, set(mesh.axis_names))
+
+
+def constrain(x, spec: P):
+    mesh = current_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    fspec = _filter_spec(spec, set(mesh.axis_names))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fspec))
+
+
+def sharding_for(spec: P) -> NamedSharding | None:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, _filter_spec(spec, set(mesh.axis_names)))

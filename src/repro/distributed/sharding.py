@@ -1,0 +1,96 @@
+"""Sharding utilities: PartitionSpec trees -> NamedShardings, parameter
+placement, and elastic re-meshing.
+
+Specs in model code are written against the *logical* axis set
+("pod", "data", "model"); `shardings_for` drops axes the concrete mesh does
+not have, so the same spec tree serves the single-pod (16,16) mesh, the
+multi-pod (2,16,16) mesh, and tiny CPU test meshes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .ctx import _filter_spec
+
+
+def shardings_for(mesh: Mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree on `mesh`."""
+    names = set(mesh.axis_names)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _filter_spec(s, names)),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _divisible_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes that do not evenly divide the array dimension.
+
+    pjit rejects input shardings whose axis size does not divide the dim
+    (e.g. batch=1 decode cells over the ("pod","data") axes, or odd vocab
+    sizes over `model`); replicating that dimension is always legal."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, part in enumerate(spec):
+        if part is None or i >= len(shape):
+            out.append(None if i >= len(shape) else part)
+            continue
+        axes = part if isinstance(part, (tuple, list)) else (part,)
+        div = 1
+        for a in axes:
+            div *= sizes.get(a, 1)
+        out.append(part if div and shape[i] % div == 0 else None)
+    return P(*out)
+
+
+def shardings_for_shaped(mesh: Mesh, abstract_tree, spec_tree):
+    """Like shardings_for, but validates divisibility against the abstract
+    (ShapeDtypeStruct) tree and replicates any non-dividing dimension."""
+    names = set(mesh.axis_names)
+    flat_a, treedef = jax.tree.flatten(abstract_tree)
+    flat_s = treedef.flatten_up_to(spec_tree)
+    out = [NamedSharding(mesh, _divisible_spec(_filter_spec(s, names),
+                                               a.shape, mesh))
+           for a, s in zip(flat_a, flat_s)]
+    return treedef.unflatten(out)
+
+
+def place(mesh: Mesh, tree, spec_tree):
+    """device_put a concrete pytree according to a spec tree."""
+    sh = shardings_for(mesh, spec_tree)
+    return jax.tree.map(jax.device_put, tree, sh)
+
+
+def remesh(tree, old_mesh: Mesh, new_mesh: Mesh, spec_tree):
+    """Elastic re-meshing: move a sharded pytree onto a different mesh
+    (different device count / topology).  Used on restart after losing or
+    gaining nodes; combined with checkpoint.restore this is the recovery
+    path for node failures."""
+    del old_mesh  # resharding goes host-side; source mesh is implicit
+    host = jax.tree.map(jax.device_get, tree)
+    return place(new_mesh, host, spec_tree)
+
+
+def bytes_per_device(tree, mesh: Mesh, spec_tree) -> int:
+    """Static estimate of per-device bytes for a spec'd pytree (upper bound:
+    ceil-divides uneven shards)."""
+    names = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(leaf, spec):
+        shape = list(leaf.shape)
+        fspec = _filter_spec(spec, set(mesh.axis_names))
+        for i, part in enumerate(fspec):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            div = 1
+            for a in axes:
+                div *= names[a]
+            shape[i] = -(-shape[i] // div)
+        n = 1
+        for s in shape:
+            n *= s
+        return n * jax.numpy.dtype(leaf.dtype).itemsize
+
+    flat_l, treedef = jax.tree.flatten(tree)
+    flat_s = treedef.flatten_up_to(spec_tree)
+    return sum(leaf_bytes(l, s) for l, s in zip(flat_l, flat_s))

@@ -1,0 +1,103 @@
+"""First-fit placement Pallas kernel.
+
+The scheduler's inner loop is inherently sequential over candidate tasks
+(each placement changes the free-capacity vector the next decision reads),
+but fully vectorizable over hosts.  This kernel keeps the free-core/free-GPU
+vectors resident in VMEM across the whole K-candidate loop — the pure-XLA
+fori_loop version round-trips them through HBM every iteration.
+
+Single grid cell; host vectors are padded to lanes of 128.  Candidate demands
+arrive pre-gathered as (K,) vectors; -1 rows are inert (cores = +inf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128
+
+
+def _kernel(cores_ref, gpus_ref, freec_ref, freeg_ref,
+            assign_ref, outc_ref, outg_ref, *, k: int, h_pad: int):
+    freec = freec_ref[...]          # (rows, 128)
+    freeg = freeg_ref[...]
+    rows = freec.shape[0]
+    # flat host index per lane element, padding rows get a huge index so the
+    # argmin below never picks them (their free cores are -inf anyway)
+    hidx = (jax.lax.broadcasted_iota(jnp.int32, (rows, _LANE), 0) * _LANE
+            + jax.lax.broadcasted_iota(jnp.int32, (rows, _LANE), 1))
+
+    def body(i, carry):
+        freec, freeg, assign = carry
+        need_c = cores_ref[0, i]
+        need_g = gpus_ref[0, i]
+        fits = (freec >= need_c) & (freeg >= need_g)
+        cand = jnp.where(fits, hidx, h_pad)
+        first = jnp.min(cand)                 # lowest-index fitting host
+        found = first < h_pad
+        sel = (hidx == first) & found
+        freec = freec - jnp.where(sel, need_c, 0.0)
+        freeg = freeg - jnp.where(sel, need_g, 0.0)
+        assign = assign.at[0, i].set(jnp.where(found, first, -1).astype(jnp.int32))
+        return freec, freeg, assign
+
+    assign0 = jnp.full((1, k), -1, jnp.int32)
+    freec, freeg, assign = jax.lax.fori_loop(
+        0, k, body, (freec, freeg, assign0))
+    assign_ref[...] = assign
+    outc_ref[...] = freec
+    outg_ref[...] = freeg
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def first_fit_place(cand_cores, cand_gpus, free_cores, free_gpus, *,
+                    interpret: bool = True):
+    """Greedy first-fit of K candidates onto H hosts.
+
+    cand_cores/cand_gpus: f32[K] demands (+inf demand = skip row).
+    free_cores/free_gpus: f32[H] current free capacity.
+    Returns (assign i32[K] host index or -1, new_free_cores, new_free_gpus).
+    """
+    k = cand_cores.shape[0]
+    h = free_cores.shape[0]
+    kp = max(-(-k // _LANE) * _LANE, _LANE)
+    hp = max(-(-h // _LANE) * _LANE, _LANE)
+
+    def padk(x):
+        return jnp.pad(jnp.asarray(x, jnp.float32), (0, kp - k),
+                       constant_values=jnp.inf).reshape(1, kp)
+
+    def padh(x):
+        return jnp.pad(jnp.asarray(x, jnp.float32), (0, hp - h),
+                       constant_values=-jnp.inf).reshape(hp // _LANE, _LANE)
+
+    kern = functools.partial(_kernel, k=kp, h_pad=hp)
+    assign, freec, freeg = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, kp), lambda i: (0, 0)),
+            pl.BlockSpec((1, kp), lambda i: (0, 0)),
+            pl.BlockSpec((hp // _LANE, _LANE), lambda i: (0, 0)),
+            pl.BlockSpec((hp // _LANE, _LANE), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kp), lambda i: (0, 0)),
+            pl.BlockSpec((hp // _LANE, _LANE), lambda i: (0, 0)),
+            pl.BlockSpec((hp // _LANE, _LANE), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, kp), jnp.int32),
+            jax.ShapeDtypeStruct((hp // _LANE, _LANE), jnp.float32),
+            jax.ShapeDtypeStruct((hp // _LANE, _LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(padk(cand_cores), padk(jnp.where(jnp.isinf(cand_cores), jnp.inf,
+                                       cand_gpus)),
+      padh(free_cores), padh(free_gpus))
+    return (assign.reshape(-1)[:k],
+            freec.reshape(-1)[:h],
+            freeg.reshape(-1)[:h])

@@ -1,0 +1,115 @@
+"""Flash attention (forward) Pallas TPU kernel.
+
+The roofline analysis (EXPERIMENTS.md §Roofline) shows every attention arch
+is memory-dominated because the XLA-fallback blockwise attention writes
+per-block score tensors to HBM.  This kernel is the TPU answer: the classic
+online-softmax accumulation with grid (batch·heads, q_blocks, kv_blocks),
+kv innermost — scores, running max/sum and the output accumulator live in
+VMEM scratch for the whole kv sweep; only the final [Bq, D] output block
+leaves the core.
+
+VMEM per grid cell = Bq·D (q) + 2·Bk·D (k,v) + Bq·Bk (scores)
+                   + Bq·D (acc) ≈ 0.7 MB at Bq=Bk=256, D=128 f32 — far under
+the ~16 MB VMEM budget, leaving room for double buffering.
+
+GQA is handled with a kv-head index map in the BlockSpecs (each q-head group
+reads its shared kv head; no HBM broadcast copy).  Forward-only: training
+keeps the XLA path (autodiff backward); serving prefill is where this kernel
+lands first.  Validated in interpret mode against layers.sdpa.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)                  # (Bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (Bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # (Bq, Bk)
+        alpha = jnp.exp(m_prev - m_new)                   # (Bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                  # (Bk, D)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # block-level causal pruning: skip fully-masked kv blocks
+        pl.when(k_start <= q_start + bq - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = True):
+    """q: [B,Sq,H,D]; k/v: [B,Sk,KV,D] with H % KV == 0.  Returns like q."""
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running sum
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,57 @@
+"""jit'd public wrappers for the Pallas kernels (the ops layer).
+
+Each op dispatches to the Pallas kernel (interpret=True on CPU — the kernel
+body executes in Python for validation; on TPU set interpret=False) with
+the pure-jnp oracle available in kernels/ref.py for testing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import first_fit as _first_fit
+from . import power_carbon as _power_carbon
+from . import ssd_chunk as _ssd_chunk
+from repro.core.config import PowerModelConfig
+
+_INTERPRET = True  # CPU container: Pallas interpret mode
+
+
+def host_power(cpu_util, gpu_util, n_gpus, on, cpu_cfg: PowerModelConfig,
+               gpu_cfg: PowerModelConfig):
+    """Fused utilization->power for the STEAM engine (power only)."""
+    p, _, _ = _power_carbon.fused_power_carbon(
+        cpu_util, gpu_util, n_gpus, on, 0.0, 0.0,
+        cpu_idle=cpu_cfg.idle_w, cpu_max=cpu_cfg.max_w, cpu_curve=cpu_cfg.model,
+        gpu_idle=gpu_cfg.idle_w, gpu_max=gpu_cfg.max_w, gpu_curve=gpu_cfg.model,
+        interpret=_INTERPRET)
+    return p
+
+
+def fused_power_carbon(cpu_util, gpu_util, n_gpus, on, ci, dt_h,
+                       cpu_cfg: PowerModelConfig, gpu_cfg: PowerModelConfig):
+    """(power_kw[H], dc_power_kw, op_carbon_kg) in one VMEM pass."""
+    return _power_carbon.fused_power_carbon(
+        cpu_util, gpu_util, n_gpus, on, ci, dt_h,
+        cpu_idle=cpu_cfg.idle_w, cpu_max=cpu_cfg.max_w, cpu_curve=cpu_cfg.model,
+        gpu_idle=gpu_cfg.idle_w, gpu_max=gpu_cfg.max_w, gpu_curve=gpu_cfg.model,
+        interpret=_INTERPRET)
+
+
+def first_fit_place(cand_cores, cand_gpus, free_cores, free_gpus):
+    """Greedy first-fit placement of K candidates onto H hosts."""
+    return _first_fit.first_fit_place(cand_cores, cand_gpus, free_cores,
+                                      free_gpus, interpret=_INTERPRET)
+
+
+def ssd_intra_chunk(xdt, da, b, c):
+    """Mamba-2 SSD intra-chunk quadratic form (see kernels/ssd_chunk.py)."""
+    return _ssd_chunk.ssd_intra_chunk(xdt, da, b, c, interpret=_INTERPRET)
+
+
+def flash_attention(q, k, v, *, scale, causal=True, block_q=256, block_k=256):
+    """Fused online-softmax attention (see kernels/flash_attn.py)."""
+    from . import flash_attn as _fa
+    return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_INTERPRET)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_CURVES = {
+    "linear": lambda u: u,
+    "sqrt": lambda u: jnp.sqrt(u),
+    "square": lambda u: u * u,
+    "cubic": lambda u: u * u * u,
+}
+
+
+def fused_power_carbon(cpu_util, gpu_util, n_gpus, on, ci, dt_h, *,
+                       cpu_idle, cpu_max, cpu_curve, gpu_idle, gpu_max,
+                       gpu_curve):
+    cpu_u = jnp.clip(cpu_util, 0.0, 1.0)
+    gpu_u = jnp.clip(gpu_util, 0.0, 1.0)
+    p_cpu = cpu_idle + (cpu_max - cpu_idle) * _CURVES[cpu_curve](cpu_u)
+    p_gpu = (gpu_idle + (gpu_max - gpu_idle) * _CURVES[gpu_curve](gpu_u)) * n_gpus
+    p_kw = (p_cpu + p_gpu) * on / 1000.0
+    dc = jnp.sum(p_kw)
+    return p_kw, dc, dc * dt_h * ci / 1000.0
+
+
+def first_fit_place(cand_cores, cand_gpus, free_cores, free_gpus):
+    """Sequential greedy first-fit oracle (lax.scan over candidates)."""
+    h = free_cores.shape[0]
+    hidx = jnp.arange(h, dtype=jnp.int32)
+
+    def step(carry, need):
+        freec, freeg = carry
+        need_c, need_g = need
+        fits = (freec >= need_c) & (freeg >= need_g)
+        first = jnp.min(jnp.where(fits, hidx, h))
+        found = first < h
+        sel = (hidx == first) & found
+        freec = freec - jnp.where(sel, need_c, 0.0)
+        freeg = freeg - jnp.where(sel, need_g, 0.0)
+        out = jnp.where(found, first, -1).astype(jnp.int32)
+        return (freec, freeg), out
+
+    (freec, freeg), assign = jax.lax.scan(
+        step, (jnp.asarray(free_cores, jnp.float32),
+               jnp.asarray(free_gpus, jnp.float32)),
+        (jnp.asarray(cand_cores, jnp.float32),
+         jnp.asarray(cand_gpus, jnp.float32)))
+    return assign, freec, freeg
+
+
+def ssd_chunk(x, dt, a, b, c, chunk: int = 64):
+    """Mamba-2 SSD reference: exact sequential state-space recurrence.
+
+    x:  f32[T, H, P]   inputs per head
+    dt: f32[T, H]      softplus-ed step sizes (>0)
+    a:  f32[H]         negative state decay rates (A = -exp(a_log))
+    b:  f32[T, G, N]   input projections (G groups broadcast over H)
+    c:  f32[T, G, N]   output projections
+    Returns y: f32[T, H, P] with y_t = C_t^T h_t,
+    h_t = exp(dt_t * a) h_{t-1} + dt_t * B_t x_t^T  (per head, state [N, P]).
+    """
+    t, h, p = x.shape
+    g, n = b.shape[1], b.shape[2]
+    heads_per_group = h // g
+    bh = jnp.repeat(b, heads_per_group, axis=1)     # [T, H, N]
+    ch = jnp.repeat(c, heads_per_group, axis=1)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                       # [H,P],[H],[H,N],[H,N]
+        decay = jnp.exp(dtt * a)[:, None, None]     # [H,1,1]
+        upd = (dtt[:, None] * bt)[..., None] * xt[:, None, :]  # [H,N,P]
+        state = state * decay + upd
+        y = jnp.einsum("hn,hnp->hp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((h, n, p), jnp.float32)
+    _, y = jax.lax.scan(step, state0, (x, dt, bh, ch))
+    return y

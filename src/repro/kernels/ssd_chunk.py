@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the SSD intra-chunk dual form (Mamba-2 hot spot).
+
+The intra-chunk computation per (batch, chunk, head) is:
+    y[q,p] = sum_{k<=q} exp(cum[q]-cum[k]) * (C_q . B_k) * xdt[k,p]
+
+i.e. two QxQ/QxP matmuls plus a masked exponential decay — an MXU-friendly
+quadratic form.  The grid iterates (batch*chunks, heads); each grid cell
+keeps the whole (Q,N)/(Q,P) working set in VMEM:
+
+    VMEM per cell  =  Q*(2N + 2P) * 4B  + Q*Q * 4B
+    Q=256, N=128, P=64:  256*384*4 + 256*256*4  = 0.64 MB   << 16 MB VMEM
+
+Q is the model's SSD chunk length, so the BlockSpec tiling IS the algorithmic
+chunking — the kernel and the math agree on the blocking (the paper's "tile
+for the memory hierarchy" insight mapped to VMEM).
+
+Validated in interpret mode against models/ssm ssd_scan's intra-chunk path
+and the exact sequential oracle in kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xdt_ref, da_ref, b_ref, c_ref, y_ref):
+    # blocks (leading grid dims are size-1): xdt (1,1,Q,P), da (1,1,1,Q),
+    # b/c (1,1,Q,N), y (1,1,Q,P)
+    da = da_ref[0, 0, 0, :]                        # (Q,)
+    cum = jnp.cumsum(da)
+    q = da.shape[0]
+    # decay[i,j] = exp(cum_i - cum_j) for j<=i else 0
+    diff = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(ki <= qi, jnp.exp(diff), 0.0)
+    cb = jnp.dot(c_ref[0, 0], b_ref[0, 0].T,
+                 preferred_element_type=jnp.float32)      # (Q,Q) MXU
+    y_ref[0, 0] = jnp.dot(cb * decay, xdt_ref[0, 0],
+                          preferred_element_type=jnp.float32)  # (Q,P) MXU
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(xdt, da, b, c, *, interpret: bool = True):
+    """Intra-chunk SSD outputs.
+
+    xdt: f32[B,C,Q,H,P]  (x * dt)
+    da:  f32[B,C,H,Q]    (dt * a, a<0)
+    b,c: f32[B,C,Q,H,N]
+    returns y_intra: f32[B,C,Q,H,P]
+    """
+    bt, nc, q, h, p = xdt.shape
+    n = b.shape[-1]
+    g = bt * nc
+    # flatten (batch, chunk) and move head next to it: grid = (g, h)
+    xdt_f = xdt.reshape(g, q, h, p).transpose(0, 2, 1, 3)   # (g,h,q,p)
+    da_f = da.reshape(g, h, q)[:, :, None, :]               # (g,h,1,q)
+    b_f = b.reshape(g, q, h, n).transpose(0, 2, 1, 3)       # (g,h,q,n)
+    c_f = c.reshape(g, q, h, n).transpose(0, 2, 1, 3)
+
+    y = pl.pallas_call(
+        _kernel,
+        grid=(g, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, h, q, p), jnp.float32),
+        interpret=interpret,
+    )(xdt_f.astype(jnp.float32), da_f.astype(jnp.float32),
+      b_f.astype(jnp.float32), c_f.astype(jnp.float32))
+    return y.transpose(0, 2, 1, 3).reshape(bt, nc, q, h, p)

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The 512 host devices exist ONLY in this process (dry-run); tests and
+# benches see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell against the production meshes and extract the roofline terms.
+
+For each cell this:
+  1. builds the full-size ArchConfig and the abstract train/prefill/serve
+     step inputs (ShapeDtypeStructs — nothing is allocated),
+  2. jit-lowers with in/out shardings from the model's PartitionSpec trees,
+  3. compiles (XLA:CPU stands in for the TPU compiler; GSPMD partitioning,
+     collective insertion, and memory analysis are backend-independent),
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     into results/dryrun/<cell>.json for §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config
+from repro.distributed import ctx
+from repro.distributed.sharding import shardings_for_shaped
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.config import ShapeCell
+from repro.models.registry import get_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import (TrainConfig, abstract_train_state,
+                              make_train_step, train_state_specs)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(\S+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective in the per-device HLO."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_s, kind = m.group(1), m.group(2)
+        nbytes = 0.0
+        # result may be a tuple shape "(f32[8,128], f32[8,128])"
+        for dt, dims in re.findall(r"(\w+)\[([\d,]*)\]", shape_s):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + nbytes
+        count[kind] = count.get(kind, 0) + 1
+    out["_counts"] = count
+    return out
+
+
+def build_cell_fn(arch_id: str, shape_name: str, mesh,
+                  grad_compression: bool = False, overrides=None,
+                  microbatches: int = 1):
+    """Returns (fn, example_args, in_shardings) for the cell's step."""
+    cfg = get_config(arch_id)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    model = get_model(cfg)
+    tcfg = TrainConfig(opt=AdamWConfig(), grad_compression=grad_compression,
+                       microbatches=microbatches)
+
+    if shape.kind == "train":
+        state = abstract_train_state(model, tcfg)
+        sspecs = train_state_specs(model, tcfg)
+        batch, bspecs = model.batch_specs(shape)
+        fn = make_train_step(model, tcfg)
+        args = (state, batch)
+        shardings = (shardings_for_shaped(mesh, state, sspecs),
+                     shardings_for_shaped(mesh, batch, bspecs))
+        out_shard = (shardings[0], None)
+    elif shape.kind == "prefill":
+        params = model.abstract_params()
+        pspecs = model.param_specs()
+        batch, bspecs = model.batch_specs(shape)
+        fn = model.prefill
+        args = (params, batch)
+        shardings = (shardings_for_shaped(mesh, params, pspecs),
+                     shardings_for_shaped(mesh, batch, bspecs))
+        out_shard = None
+    else:  # decode
+        params = model.abstract_params()
+        pspecs = model.param_specs()
+        (cache, tokens, pos), (cspec, tspec, posspec) = model.decode_specs(shape)
+        fn = model.decode_step
+        args = (params, cache, tokens, pos)
+        cache_sh = shardings_for_shaped(mesh, cache, cspec)
+        shardings = (shardings_for_shaped(mesh, params, pspecs), cache_sh,
+                     shardings_for_shaped(mesh, tokens, tspec),
+                     shardings_for_shaped(mesh, pos, posspec))
+        out_shard = (None, cache_sh)
+    return fn, args, shardings, out_shard, cfg, shape
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             grad_compression: bool = False, overrides=None,
+             tag: str = "", microbatches: int = 1) -> dict:
+    cfg0 = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg0, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "status": "skip", "reason": why}
+    if not ok:
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with ctx.use_mesh(mesh):
+        fn, args, in_shard, out_shard, cfg, shape = build_cell_fn(
+            arch_id, shape_name, mesh, grad_compression, overrides,
+            microbatches)
+        jfn = jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    # loop-trip-scaled whole-program analysis (XLA's HloCostAnalysis counts
+    # scan bodies once; see launch/hlo_analysis.py)
+    full = hlo_analysis.analyze(hlo_text)
+    coll = dict(full["collectives"])
+    coll["_counts"] = parse_collective_bytes(hlo_text).get("_counts", {})
+
+    chips = mesh.size
+    flops_dev = float(full["flops"])
+    bytes_dev = float(full["bytes"])
+    coll_dev = float(full["collective_bytes"])
+
+    # roofline terms (seconds; cost_analysis is per-device on SPMD modules,
+    # so term = per-device work / per-chip rate == global/(chips*rate))
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    # MODEL_FLOPS: 6*N*D for train, 2*N*D for forward-only shapes
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    rec.update({
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device": {
+            "flops": flops_dev, "bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+            "xla_cost_flops_unscaled": float(cost.get("flops", 0.0)),
+            "xla_cost_bytes_unscaled": float(cost.get("bytes accessed", 0.0)),
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        },
+        "collectives": coll,
+        "roofline": {
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops": float(model_flops),
+            "hlo_flops_global": flops_dev * chips,
+            "useful_ratio": float(model_flops / max(flops_dev * chips, 1.0)),
+        },
+    })
+    return rec
+
+
+def cell_path(rec_or_key, out_dir=RESULTS_DIR):
+    if isinstance(rec_or_key, dict):
+        key = (rec_or_key["arch"], rec_or_key["shape"], rec_or_key["mesh"],
+               rec_or_key.get("tag", ""))
+    else:
+        key = rec_or_key
+    arch, shape, mesh, tag = key
+    name = f"{arch}__{shape}__{mesh}" + (f"__{tag}" if tag else "")
+    return os.path.join(out_dir, name + ".json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    if args.list:
+        for a in ARCHS:
+            for s in SHAPES:
+                ok, why = cell_applicable(get_config(a), SHAPES[s])
+                print(f"{a:24s} {s:12s} {'OK' if ok else 'SKIP: ' + why}")
+        return
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "multi" if mp else "single", args.tag)
+                path = cell_path(key, args.out)
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp,
+                                   grad_compression=args.grad_compression,
+                                   tag=args.tag)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "tag": args.tag, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"dominant={r['dominant']} "
+                          f"t=(C {r['t_compute_s']:.3e}, M {r['t_memory_s']:.3e}, "
+                          f"X {r['t_collective_s']:.3e}) "
+                          f"useful={r['useful_ratio']:.2f} "
+                          f"peakMB={rec['per_device']['peak_bytes']/2**20:.0f}",
+                          flush=True)
+                elif rec["status"] == "skip":
+                    print(f"  skip: {rec['reason']}")
+                else:
+                    print(f"  ERROR: {rec['error']}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

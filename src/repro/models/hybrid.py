@@ -1,0 +1,177 @@
+"""zamba2-7b: Mamba-2 backbone with a weight-SHARED attention+MLP block.
+
+Zamba2 interleaves one shared transformer block (its parameters reused at
+every invocation site) into a Mamba2 backbone, with small per-site linear
+adapters.  We model the assignment's 81-layer backbone as 13 groups of 6
+mamba blocks each followed by the shared attention block (13 sites), plus 3
+trailing mamba blocks — see DESIGN.md §Arch-applicability for the exact
+mapping.  Sharing means the attention KV cache at decode exists once per
+*site* but all sites use the same weights; the per-site adapters are the only
+site-local parameters.
+
+Structure per group g:  x -> [mamba x 6] -> x + SharedAttnBlock(adapter_g(x))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import constrain
+from . import layers as L
+from .config import ArchConfig
+from .ssm import (mamba2_block, mamba2_block_decode, ssm_block_defs,
+                  ssm_state_shape, ssm_state_spec, _dims)
+
+BATCH = ("pod", "data")
+
+
+def _split(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(n_groups, per_group, trailing) mamba-layer layout."""
+    per = cfg.attn_every
+    n_groups = cfg.n_layers // per
+    trailing = cfg.n_layers - n_groups * per
+    return n_groups, per, trailing
+
+
+def hybrid_model_defs(cfg: ArchConfig) -> dict:
+    n_groups, per, trailing = _split(cfg)
+    mamba_layer = {"ln": L.norm_defs(cfg), "mix": ssm_block_defs(cfg)}
+    shared = {
+        "ln1": L.norm_defs(cfg),
+        "attn": L.attn_defs(cfg),
+        "ln2": L.norm_defs(cfg),
+        "mlp": L.ffn_defs(cfg, cfg.d_ff),
+    }
+    defs = {
+        "embed": L.embed_defs(cfg),
+        "groups": L.stack_defs(L.stack_defs(mamba_layer, per), n_groups),
+        "adapters": L.stack_defs(
+            {"w": L.ParamDef((cfg.d_model, cfg.d_model), P(None, "model"),
+                             scale=0.1)}, n_groups),
+        "shared": shared,
+        "ln_f": L.norm_defs(cfg),
+    }
+    if trailing:
+        defs["trailing"] = L.stack_defs(mamba_layer, trailing)
+    return defs
+
+
+def _shared_block(cfg: ArchConfig, sp: dict, ap: dict, x, positions):
+    h = jnp.einsum("bsd,de->bse", x, ap["w"].astype(x.dtype))
+    h = L.apply_norm(cfg, sp["ln1"], h)
+    h = L.attention(cfg, sp["attn"], h, positions)
+    x = x + h
+    h = L.apply_norm(cfg, sp["ln2"], x)
+    return constrain(x + L.ffn(cfg, sp["mlp"], h), L.residual_spec(cfg))
+
+
+def _mamba_stack(cfg: ArchConfig, lps, x, use_pallas):
+    def fn(x, lp):
+        h = L.apply_norm(cfg, lp["ln"], x)
+        return constrain(x + mamba2_block(cfg, lp["mix"], h, use_pallas),
+                         L.residual_spec(cfg))
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=L.remat_policy(cfg))
+    x, _ = L.scan_layers(cfg, lambda x, lp: (fn(x, lp), None), x, lps)
+    return x
+
+
+def hybrid_logits(cfg: ArchConfig, params: dict, tokens, use_pallas=False,
+                  last_only: bool = False):
+    x = L.embed(cfg, params["embed"], tokens)
+    x = constrain(x, P(BATCH, None, None))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def group_fn(x, xs):
+        glp, alp = xs
+        x = _mamba_stack(cfg, glp, x, use_pallas)
+        x = _shared_block(cfg, params["shared"], alp, x, positions)
+        return x, None
+
+    x, _ = L.scan_layers(cfg, group_fn, x,
+                         (params["groups"], params["adapters"]))
+    if "trailing" in params:
+        x = _mamba_stack(cfg, params["trailing"], x, use_pallas)
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    if last_only:
+        x = x[:, -1:]
+    return L.logits_out(cfg, params["embed"], x)
+
+
+def hybrid_loss(cfg: ArchConfig, params: dict, batch: dict, use_pallas=False):
+    logits = hybrid_logits(cfg, params, batch["tokens"], use_pallas)
+    return L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def hybrid_state_shape(cfg: ArchConfig, batch: int, seq: int):
+    """Mamba recurrent state per layer + one KV cache per shared-attn site.
+
+    The KV caches grow with seq (13 sites x kv heads), but the mamba state is
+    O(1) — this is what makes long_500k run for the hybrid while pure
+    attention archs skip it."""
+    n_groups, per, trailing = _split(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    mcfg = cfg.replace(n_layers=n_groups * per + trailing)
+    st = ssm_state_shape(mcfg, batch, seq)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    st["shared_k"] = jax.ShapeDtypeStruct((n_groups, batch, seq, kv, hd), dt)
+    st["shared_v"] = jax.ShapeDtypeStruct((n_groups, batch, seq, kv, hd), dt)
+    return st
+
+
+def hybrid_state_spec(cfg: ArchConfig) -> dict:
+    spec = ssm_state_spec(cfg)
+    spec["shared_k"] = P(None, BATCH, "model", None, None)
+    spec["shared_v"] = P(None, BATCH, "model", None, None)
+    return spec
+
+
+def hybrid_decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens, pos):
+    n_groups, per, trailing = _split(cfg)
+    x = L.embed(cfg, params["embed"], tokens)
+    x = constrain(x, P(BATCH, None, None))
+    mamba_keys = ("h", "conv_x", "conv_b", "conv_c")
+    mstate = {k: cache[k] for k in mamba_keys}
+    grouped = {k: v[: n_groups * per].reshape((n_groups, per) + v.shape[1:])
+               for k, v in mstate.items()}
+
+    def layer_body(x, xs):
+        lp, st = xs
+        h = L.apply_norm(cfg, lp["ln"], x)
+        out, st = mamba2_block_decode(cfg, lp["mix"], h, st)
+        return x + out, st
+
+    def group_body(x, xs):
+        glp, alp, gst, ck, cv = xs
+        x, gst = L.scan_layers(cfg, layer_body, x, (glp, gst))
+        # shared attention block with per-site KV cache
+        h = jnp.einsum("bsd,de->bse", x, alp["w"].astype(x.dtype))
+        h = L.apply_norm(cfg, params["shared"]["ln1"], h)
+        h, ck, cv = L.attention_decode(
+            cfg, params["shared"]["attn"], h, ck, cv, pos,
+            cache_spec=P(BATCH, "model", None, None))
+        x = x + h
+        h = L.apply_norm(cfg, params["shared"]["ln2"], x)
+        x = x + L.ffn(cfg, params["shared"]["mlp"], h)
+        return x, (gst, ck, cv)
+
+    x, (gstate, ck, cv) = L.scan_layers(
+        cfg, group_body, x, (params["groups"], params["adapters"], grouped,
+                             cache["shared_k"], cache["shared_v"]))
+    new_state = {k: v.reshape((n_groups * per,) + v.shape[2:])
+                 for k, v in gstate.items()}
+    if trailing:
+        tstate = {k: cache[k][n_groups * per:] for k in mamba_keys}
+        x, tstate = L.scan_layers(cfg, layer_body, x,
+                                  (params["trailing"], tstate))
+        new_state = {k: jnp.concatenate([new_state[k], tstate[k]])
+                     for k in mamba_keys}
+    new_state["shared_k"] = ck
+    new_state["shared_v"] = cv
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    return L.logits_out(cfg, params["embed"], x), new_state

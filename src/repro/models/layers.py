@@ -1,0 +1,535 @@
+"""Shared neural building blocks for all assigned architectures.
+
+Everything is a pure function over explicit parameter dicts (no framework
+modules): params are pytrees whose leaves carry an optional stacked layer
+axis, built from `ParamDef` tables so that initialisation, abstract
+ShapeDtypeStructs (dry-run) and PartitionSpecs (distribution) all derive from
+one source of truth.
+
+Numerics: parameters live in `cfg.param_dtype`; all matmuls run in
+`cfg.compute_dtype` (bf16 on TPU targets); normalisation statistics, softmax,
+and losses accumulate in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import constrain
+from .config import ArchConfig
+
+# --------------------------------------------------------------------------
+# parameter definition tables
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: P                       # PartitionSpec over ("data","model")
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float = 1.0            # fan-in style scale multiplier
+    dtype: str | None = None      # override cfg.param_dtype
+
+
+def _init_leaf(key, d: ParamDef, dtype) -> jax.Array:
+    dt = jnp.dtype(d.dtype or dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32)
+                * d.scale).astype(dt)
+    # fan-in scaled normal: last-but-one axis is fan-in for matrices
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(defs: dict, key, param_dtype: str):
+    """Materialise a ParamDef tree into arrays (smoke tests / real training)."""
+    flat = {}
+    leaves = sorted(_flatten(defs).items())
+    keys = jax.random.split(key, len(leaves))
+    for k, (path, d) in zip(keys, leaves):
+        flat[path] = _init_leaf(k, d, param_dtype)
+    return _unflatten(flat)
+
+
+def abstract_params(defs: dict, param_dtype: str):
+    """ShapeDtypeStruct tree — the dry-run's no-allocation stand-in."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or param_dtype)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_specs(defs: dict):
+    """PartitionSpec tree matching the params tree."""
+    return jax.tree.map(lambda d: d.spec, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _flatten(tree, prefix=()):
+    out = {}
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            out.update(_flatten(v, prefix + (k,)))
+        else:
+            out[prefix + (k,)] = v
+    return out
+
+
+def _unflatten(flat):
+    out: dict = {}
+    for path, v in flat.items():
+        d = out
+        for k in path[:-1]:
+            d = d.setdefault(k, {})
+        d[path[-1]] = v
+    return out
+
+
+def stack_defs(defs: dict, n: int) -> dict:
+    """Prefix every ParamDef with a stacked layer axis of length n."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + d.shape, spec=P(*((None,) + tuple(d.spec)))),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def scan_layers(cfg: ArchConfig, body, init, xs):
+    """lax.scan over stacked layer weights, or a python unroll.
+
+    Scan keeps the HLO one-layer-sized (fast 512-device compiles, natural
+    remat boundary).  The unrolled form exists because XLA's HloCostAnalysis
+    counts a while-loop body ONCE — the dry-run lowers the unrolled form
+    (without compiling it) to get exact whole-program FLOP/byte counts.
+    """
+    if getattr(cfg, "scan_layers", True):
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# --------------------------------------------------------------------------
+# normalisation
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float, plus_one: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_defs(cfg: ArchConfig, kind: str | None = None) -> dict:
+    kind = kind or getattr(cfg, "norm", "rms")
+    if cfg.family == "encdec" or kind == "layer":
+        return {"w": ParamDef((cfg.d_model,), P(None), "ones"),
+                "b": ParamDef((cfg.d_model,), P(None), "zeros")}
+    init = "zeros" if _gemma_like(cfg) else "ones"   # gemma stores w-1
+    return {"w": ParamDef((cfg.d_model,), P(None), init)}
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x):
+    if "b" in p:
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps, plus_one=_gemma_like(cfg))
+
+
+def _gemma_like(cfg: ArchConfig) -> bool:
+    return cfg.name.startswith(("gemma", "paligemma"))
+
+
+def remat_policy(cfg: ArchConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def residual_spec(cfg: ArchConfig) -> P:
+    """Layer-boundary sharding of the [B,S,D] residual stream."""
+    if cfg.seq_shard_residual:
+        return P(("pod", "data"), "model", None)
+    return P(("pod", "data"), None, None)
+
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions i32[...]; returns (cos, sin) f32[..., dim//2]."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rope_dim: int | None = None):
+    """x: [..., S, H, D] (cos/sin [..., S, d/2] broadcast over H)."""
+    d = rope_dim or x.shape[-1]
+    rot, rest = x[..., :d], x[..., d:]
+    x1, x2 = rot[..., : d // 2], rot[..., d // 2:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return jnp.concatenate([out, rest], axis=-1) if rest.shape[-1] else out
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def _softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def _model_divisible(n_heads: int) -> bool:
+    """Baseline head sharding only when heads divide the 16-way model axis."""
+    return n_heads % 16 == 0
+
+
+def head_spec(n_heads: int) -> P:
+    return P(None, "model", None) if _model_divisible(n_heads) else P(None, None, None)
+
+
+def attn_defs(cfg: ArchConfig, d_model: int | None = None) -> dict:
+    d = d_model or cfg.d_model
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    defs = {
+        "wq": ParamDef((d, h, hd), head_spec(h)),
+        "wk": ParamDef((d, kv, hd), head_spec(kv)),
+        "wv": ParamDef((d, kv, hd), head_spec(kv)),
+        "wo": ParamDef((h, hd, d), P("model", None, None)
+                       if _model_divisible(h) else P(None, None, None)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, hd), P(None, None), "zeros")
+        defs["bk"] = ParamDef((kv, hd), P(None, None), "zeros")
+        defs["bv"] = ParamDef((kv, hd), P(None, None), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), P(None),
+                                  "zeros" if _gemma_like(cfg) else "ones")
+        defs["k_norm"] = ParamDef((hd,), P(None),
+                                  "zeros" if _gemma_like(cfg) else "ones")
+    return defs
+
+
+def _qk_project(cfg: ArchConfig, p: dict, x, positions, theta: float):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, plus_one=_gemma_like(cfg))
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps, plus_one=_gemma_like(cfg))
+    cos, sin = rope_angles(positions, cfg.hd, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def causal_mask(s_q: int, s_k: int, q_offset=0, window: int = 0):
+    """bool[s_q, s_k]; True = attend.  window>0 adds a sliding-window band."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    m = ki <= qi
+    if window:
+        m &= ki > qi - window
+    return m
+
+
+def sdpa(q, k, v, mask, scale: float, softcap: float = 0.0):
+    """q:[B,Sq,H,D] k/v:[B,Sk,KV,D]; GQA broadcast; f32 softmax."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    logits = _softcap(logits, softcap)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def sdpa_blockwise(q, k, v, scale: float, softcap: float = 0.0, *,
+                   block: int, window=0, q_offset=0, kv_mask=None,
+                   causal: bool = True, row_shard: bool = False):
+    """Flash-style attention: scan over query blocks, each block attending to
+    the full K/V with a causal(+sliding-window) band mask.
+
+    Never materializes the [Sq,Sk] score matrix — peak transient is
+    [B,H,block,Sk], which keeps 32k-prefill activations inside HBM (and
+    VMEM-tileable for the Pallas twin in kernels/flash_attn.py).
+    `window` may be a traced scalar (0 = global).  kv_mask: optional
+    bool[Sk] extra mask (e.g. encoder padding).
+
+    row_shard: shard the in-block query-row axis over the `model` mesh axis
+    (sequence parallelism inside the block).  Used by archs whose head count
+    does not divide the model axis — without it their attention compute and
+    score memory REPLICATE across `model`.  K/V stay replicated (they are
+    the small operand); only the q rows, scores, and block outputs split.
+    Returns [B,Sq,H,D].
+    """
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                   # may differ from d (MLA)
+    blk = max(min(block, sq), 1)
+    if sq % blk:
+        blk = sq  # fallback: one block (smoke-test shapes)
+    nb = sq // blk
+    g = h // kvh
+    qb = q.reshape(b, nb, blk, kvh, g, d)
+    ki = jnp.arange(sk)
+
+    def body(_, qi_blk):
+        qi, qblk = qi_blk                      # qi: scalar block start
+        if row_shard:
+            qblk = constrain(qblk, P(("pod", "data"), "model", None, None, None))
+        rows = qi + jnp.arange(blk) + q_offset
+        if causal:
+            m = ki[None, :] <= rows[:, None]
+            m &= (window == 0) | (ki[None, :] > rows[:, None] - window)
+        else:
+            m = jnp.ones((blk, sk), bool)
+        if kv_mask is not None:
+            m &= kv_mask[None, :]
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, k).astype(jnp.float32)
+        logits = _softcap(logits * scale, softcap)
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        if row_shard:  # out rows (dim 1) carry the q-block sharding
+            out = constrain(out, P(("pod", "data"), "model", None, None, None))
+        return None, out
+
+    starts = jnp.arange(nb) * blk
+    # checkpoint each q-block: backward recomputes the block's scores instead
+    # of saving S^2 softmax residuals across all blocks (flash-style memory)
+    _, ob = jax.lax.scan(jax.checkpoint(body),
+                         None, (starts, jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(ob, 0, 1).reshape(b, sq, h, dv)
+
+
+def attention(cfg: ArchConfig, p: dict, x, positions, *, window: int = 0,
+              theta: float | None = None, scale: float | None = None):
+    """Full (training/prefill) self-attention with causal (+window) mask."""
+    theta = cfg.rope_theta if theta is None else theta
+    q, k, v = _qk_project(cfg, p, x, positions, theta)
+    k = constrain(k, P(("pod", "data"), None, None, None))
+    scale = (1.0 / math.sqrt(cfg.hd)) if scale is None else scale
+    if (cfg.attn_impl == "flash" and not cfg.attn_softcap and not window):
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, scale=scale, causal=True,
+                                   block_q=cfg.attn_block or 256,
+                                   block_k=cfg.attn_block or 256)
+    elif cfg.attn_block:
+        out = sdpa_blockwise(q, k, v, scale, cfg.attn_softcap,
+                             block=cfg.attn_block, window=window,
+                             row_shard=not _model_divisible(cfg.n_heads))
+    else:
+        mask = causal_mask(x.shape[1], x.shape[1], 0, window)
+        out = sdpa(q, k, v, mask, scale, cfg.attn_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+
+
+def cache_update(cache, new, pos):
+    """Insert `new` [B,1,...] into `cache` [B,S,...] at scalar position `pos`.
+
+    dynamic_update_slice keeps the S axis shardable (the update touches one
+    slice, so GSPMD emits a masked in-place update on the owning shard —
+    no scatter, no all-gather of the cache).
+    """
+    zeros = (0,) * (cache.ndim - 2)
+    return jax.lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype), (0, pos) + zeros)
+
+
+def attention_decode(cfg: ArchConfig, p: dict, x, cache_k, cache_v, pos, *,
+                     window=0, theta: float | None = None,
+                     scale: float | None = None, cache_spec: P | None = None):
+    """One-token decode against a KV cache.
+
+    x: [B,1,D]; cache_k/v: [B,S,KV,hd] (sequence axis sharded over `model`
+    for long contexts); pos: scalar i32 current position (uniform batched
+    decode).  `window` may be a traced scalar (0 = global).
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    theta = cfg.rope_theta if theta is None else theta
+    b = x.shape[0]
+    posv = jnp.broadcast_to(pos, (b,))[:, None]
+    q, k, v = _qk_project(cfg, p, x, posv, theta)
+    s = cache_k.shape[1]
+    cache_k = cache_update(cache_k, k, pos)
+    cache_v = cache_update(cache_v, v, pos)
+    if cache_spec is not None:
+        cache_k = constrain(cache_k, cache_spec)
+        cache_v = constrain(cache_v, cache_spec)
+    ki = jnp.arange(s)
+    mask = ki <= pos
+    mask &= (window == 0) | (ki > pos - window)
+    h, d = q.shape[2], q.shape[3]
+    kvh = cache_k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    scale = (1.0 / math.sqrt(cfg.hd)) if scale is None else scale
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, cache_k).astype(jnp.float32) * scale
+    logits = _softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, cache_v).reshape(b, 1, h, d)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    return out, cache_k, cache_v
+
+
+def layer_window(cfg: ArchConfig, layer_idx) -> jax.Array:
+    """Per-layer sliding window size (0 = global) for local/global patterns.
+
+    gemma2 (local_pattern=2): even layers local; gemma3 (local_pattern=6):
+    layers where (idx % 6) != 5 are local.  Returns traced i32 window.
+    """
+    if not cfg.local_pattern:
+        return jnp.int32(0)
+    is_local = (layer_idx % cfg.local_pattern) != (cfg.local_pattern - 1)
+    return jnp.where(is_local, cfg.sliding_window, 0).astype(jnp.int32)
+
+
+def attention_traced_window(cfg: ArchConfig, p, x, positions, window):
+    """Attention where `window` is a traced scalar (scan-over-layers path):
+    the band mask is built with broadcast compares, window==0 => global."""
+    theta = cfg.rope_theta
+    q, k, v = _qk_project(cfg, p, x, positions, theta)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    if cfg.attn_block:
+        out = sdpa_blockwise(q, k, v, scale, cfg.attn_softcap,
+                             block=cfg.attn_block, window=window,
+                             row_shard=not _model_divisible(cfg.n_heads))
+    else:
+        s = x.shape[1]
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        mask = ki <= qi
+        mask &= (window == 0) | (ki > qi - window)
+        out = sdpa(q, k, v, mask, scale, cfg.attn_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+
+
+# --------------------------------------------------------------------------
+# feed-forward
+# --------------------------------------------------------------------------
+
+_ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+def ffn_defs(cfg: ArchConfig, d_ff: int, fsdp: bool = False) -> dict:
+    d = cfg.d_model
+    dspec = "data" if fsdp else None
+    if cfg.act == "gelu_mlp":   # plain 2-matrix MLP (whisper)
+        return {"w_in": ParamDef((d, d_ff), P(dspec, "model")),
+                "b_in": ParamDef((d_ff,), P("model"), "zeros"),
+                "w_out": ParamDef((d_ff, d), P("model", dspec)),
+                "b_out": ParamDef((d,), P(None), "zeros")}
+    return {"w_gate": ParamDef((d, d_ff), P(dspec, "model")),
+            "w_up": ParamDef((d, d_ff), P(dspec, "model")),
+            "w_down": ParamDef((d_ff, d), P("model", dspec))}
+
+
+def ffn(cfg: ArchConfig, p: dict, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if "w_in" in p:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(cdt)) + p["b_in"].astype(cdt)
+        h = jax.nn.gelu(h, approximate=True)
+        return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(cdt)) + p["b_out"].astype(cdt)
+    act = _ACTS[cfg.act]
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cdt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cdt))
+    h = act(g) * u
+    h = constrain(h, P(("pod", "data"), None, "model"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cdt))
+
+
+# --------------------------------------------------------------------------
+# embedding / logits / loss
+# --------------------------------------------------------------------------
+
+def embed_defs(cfg: ArchConfig, fsdp: bool = False) -> dict:
+    spec = P("model", "data") if fsdp else P("model", None)
+    unembed_spec = P("data", "model") if fsdp else P(None, "model")
+    vp = cfg.padded_vocab    # odd vocabs padded so the axis shards
+    defs = {"tok": ParamDef((vp, cfg.d_model), spec, "embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.d_model, vp), unembed_spec)
+    return defs
+
+
+def embed(cfg: ArchConfig, p: dict, tokens):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = p["tok"].astype(cdt)[tokens]
+    if _gemma_like(cfg):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+    return x
+
+
+def logits_out(cfg: ArchConfig, p: dict, x):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    w = p["unembed"].astype(cdt) if "unembed" in p else p["tok"].astype(cdt).T
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = _softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:   # mask pad columns
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, -1e30, logits)
+    return logits
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits f32[B,S,V], labels i32[B,S]; mean NLL over unmasked tokens.
+
+    The gold logit is extracted with a compare-and-reduce over the vocab axis
+    rather than take_along_axis: a gather over a vocab-sharded logits tensor
+    makes GSPMD all-gather the logits (100s of GB at 152k vocab); the
+    compare form keeps every operand sharded and reduces with a psum.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_ids = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    onehot = labels[..., None] == vocab_ids
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

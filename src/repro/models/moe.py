@@ -1,0 +1,433 @@
+"""Mixture-of-Experts decoders: qwen3-moe (GQA + 128e top-8) and
+deepseek-v2 (MLA + 2 shared + 160e top-6).
+
+Dispatch is the GShard/MaxText group-limited scheme: tokens are split into
+groups of `router_group`, each group dispatches into per-expert capacity
+buffers with one-hot einsums.  All shapes are static, everything shards under
+GSPMD: the group axis follows the batch ("pod","data") sharding, the expert
+axis shards over "model" (expert parallelism), and expert weights additionally
+FSDP-shard their d_model axis over "data".  The einsum dispatch costs
+~2*Gs*topk*cf*D extra FLOPs per token (~25% at Gs=512) — that waste is visible
+in the roofline MODEL/HLO ratio and is a designated hillclimb target
+(sort-based dispatch / shard_map all_to_all).
+
+MLA (deepseek) implements the paper-faithful latent attention: training uses
+the expanded form; decode uses the *absorbed* form that attends in the
+compressed kv_lora space, caching only rank+rope bytes per token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import constrain
+from . import layers as L
+from .config import ArchConfig
+from .transformer import BATCH, _windows
+
+# --------------------------------------------------------------------------
+# MoE FFN
+# --------------------------------------------------------------------------
+
+
+def moe_defs(cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    defs = {
+        "router": L.ParamDef((d, m.n_experts), P(None, None), scale=0.1),
+        "w_gate": L.ParamDef((m.n_experts, d, fe), P("model", "data", None)),
+        "w_up": L.ParamDef((m.n_experts, d, fe), P("model", "data", None)),
+        "w_down": L.ParamDef((m.n_experts, fe, d), P("model", None, "data")),
+    }
+    if m.n_shared:
+        defs["shared"] = L.ffn_defs(cfg, m.n_shared * fe, fsdp=True)
+    return defs
+
+
+def _capacity(cfg: ArchConfig, gs: int | None = None) -> int:
+    m = cfg.moe
+    gs = m.router_group if gs is None else gs
+    c = int(gs * m.top_k * m.capacity_factor / m.n_experts)
+    return max(c, 1)
+
+
+def moe_ffn_sort(cfg: ArchConfig, p: dict, x):
+    """Sort-based dispatch (the beyond-paper §Perf variant).
+
+    Instead of the GShard one-hot dispatch/combine einsums (which cost
+    ~2·Gs·topk·cf·D FLOPs AND bytes per token), tokens are routed with an
+    argsort over expert assignments, gathered into static [E, C] capacity
+    buffers, and scatter-added back — dispatch cost drops from a matmul to
+    a gather (~topk·cf·D bytes/token, no FLOPs).  Capacity is global
+    (C = T·topk·cf/E) rather than per-group; with a generous capacity
+    factor both paths are numerically identical (tested).
+    """
+    m = cfg.moe
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)       # [T,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    onehot_k = jax.nn.one_hot(gate_idx, m.n_experts, dtype=jnp.float32)
+    frac_tokens = jnp.mean(jnp.sum(onehot_k, 1), axis=0) / m.top_k
+    aux = m.n_experts * jnp.sum(frac_tokens * jnp.mean(probs, axis=0))
+
+    c = max(int(t * m.top_k * m.capacity_factor / m.n_experts), 1)
+    e_flat = gate_idx.reshape(-1)                              # [T*K]
+    w_flat = gate_vals.reshape(-1)
+    tok_of = jnp.arange(t * m.top_k, dtype=jnp.int32) // m.top_k
+    order = jnp.argsort(e_flat, stable=True)                   # FIFO per expert
+    e_sorted = e_flat[order]
+    tok_sorted = tok_of[order]
+    w_sorted = w_flat[order]
+    # rank within expert = position - start(expert); start via searchsorted
+    pos = jnp.arange(t * m.top_k, dtype=jnp.int32)
+    starts = jnp.searchsorted(e_sorted, jnp.arange(m.n_experts), side="left")
+    rank = pos - starts[e_sorted]
+    keep = rank < c
+    slot = e_sorted * c + jnp.where(keep, rank, 0)
+
+    # token index per (expert, slot); dropped slots read token 0 with w=0
+    dispatch_tok = jnp.zeros((m.n_experts * c,), jnp.int32).at[
+        jnp.where(keep, slot, m.n_experts * c)].set(tok_sorted, mode="drop")
+    dispatch_w = jnp.zeros((m.n_experts * c,), jnp.float32).at[
+        jnp.where(keep, slot, m.n_experts * c)].set(w_sorted, mode="drop")
+
+    xe = xf.astype(cdt)[dispatch_tok].reshape(m.n_experts, c, d)
+    xe = constrain(xe, P("model", None, None))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(cdt))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(cdt))
+    h = L._ACTS[cfg.act](g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cdt))
+    ye = constrain(ye, P("model", None, None))
+    ye = ye.reshape(m.n_experts * c, d) * dispatch_w[:, None].astype(cdt)
+    y = jnp.zeros((t, d), cdt).at[dispatch_tok].add(ye)
+    y = y.reshape(b, s, d)
+    if m.n_shared:
+        y = y + L.ffn(cfg, p["shared"], x)
+    return constrain(y, L.residual_spec(cfg)), aux
+
+
+def moe_ffn(cfg: ArchConfig, p: dict, x):
+    """x: [B,S,D] -> ([B,S,D], aux_loss scalar)."""
+    if cfg.moe.dispatch == "sort":
+        return moe_ffn_sort(cfg, p, x)
+    m = cfg.moe
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    t = b * s
+    gs = min(m.router_group, t)
+    n = t // gs
+    xg = x.reshape(n, gs, d)
+
+    # --- routing (f32 for numerics) ---
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)      # [N,Gs,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)          # renormalise
+
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    onehot_k = jax.nn.one_hot(gate_idx, m.n_experts, dtype=jnp.float32)
+    sel = jnp.sum(onehot_k, axis=2)                           # [N,Gs,E]
+    frac_tokens = jnp.mean(sel, axis=(0, 1)) / m.top_k
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = m.n_experts * jnp.sum(frac_tokens * frac_probs)
+
+    # --- capacity assignment: position of each (token,k) within its expert ---
+    c = _capacity(cfg, gs)
+    flatsel = onehot_k.reshape(n, gs * m.top_k, m.n_experts)  # FIFO over (g,k)
+    pos = jnp.cumsum(flatsel, axis=1) - flatsel               # [N,G*K,E]
+    pos = jnp.sum(pos * flatsel, axis=-1).reshape(n, gs, m.top_k)
+    keep = pos < c
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, c), c, dtype=jnp.float32)
+
+    # combine[n,g,e,c] = gate weight routed to (expert e, slot c)
+    combine = jnp.einsum("ngke,ngkc->ngec", onehot_k,
+                         pos_oh * gate_vals[..., None])
+    dispatch = (combine > 0).astype(cdt)
+    combine = constrain(combine.astype(cdt), P(BATCH, None, "model", None))
+    dispatch = constrain(dispatch, P(BATCH, None, "model", None))
+
+    # --- dispatch -> expert FFN -> combine ---
+    xe = jnp.einsum("ngd,ngec->necd", xg.astype(cdt), dispatch)
+    xe = constrain(xe, P(BATCH, "model", None, None))
+    g = jnp.einsum("necd,edf->necf", xe, p["w_gate"].astype(cdt))
+    u = jnp.einsum("necd,edf->necf", xe, p["w_up"].astype(cdt))
+    h = L._ACTS[cfg.act](g) * u
+    ye = jnp.einsum("necf,efd->necd", h, p["w_down"].astype(cdt))
+    ye = constrain(ye, P(BATCH, "model", None, None))
+    y = jnp.einsum("necd,ngec->ngd", ye, combine)
+    y = y.reshape(b, s, d)
+
+    if m.n_shared:
+        y = y + L.ffn(cfg, p["shared"], x)
+    return constrain(y, P(BATCH, None, None)), aux
+
+
+# --------------------------------------------------------------------------
+# MLA attention (deepseek-v2)
+# --------------------------------------------------------------------------
+
+def mla_defs(cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    defs: dict = {}
+    if m.q_lora_rank:
+        defs["wq_a"] = L.ParamDef((d, m.q_lora_rank), P(None, None))
+        defs["q_norm"] = L.ParamDef((m.q_lora_rank,), P(None), "ones")
+        defs["wq_b"] = L.ParamDef((m.q_lora_rank, h, qk), P(None, "model", None))
+    else:
+        defs["wq"] = L.ParamDef((d, h, qk), P(None, "model", None))
+    defs["wkv_a"] = L.ParamDef((d, m.kv_lora_rank + m.rope_head_dim), P(None, None))
+    defs["kv_norm"] = L.ParamDef((m.kv_lora_rank,), P(None), "ones")
+    defs["wkv_b"] = L.ParamDef(
+        (m.kv_lora_rank, h, m.nope_head_dim + m.v_head_dim), P(None, "model", None))
+    defs["wo"] = L.ParamDef((h, m.v_head_dim, d), P("model", None, None))
+    return defs
+
+
+def _mla_q(cfg: ArchConfig, p, x, positions, cdt):
+    m = cfg.mla
+    if "wq_a" in p:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(cdt))
+        cq = L.rms_norm(cq, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(cdt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    cos, sin = L.rope_angles(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_attention(cfg: ArchConfig, p: dict, x, positions):
+    """Expanded-form MLA (training / prefill)."""
+    m = cfg.mla
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, positions, cdt)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(cdt))
+    ckv, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    ckv = L.rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    cos, sin = L.rope_angles(positions, m.rope_head_dim, cfg.rope_theta)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)    # [B,S,1,R]
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"].astype(cdt))
+    k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    # fold the shared rope key into per-head keys so the blockwise kernel
+    # sees a standard MHA with head_dim = nope+rope
+    q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_eff = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.rope_head_dim))], axis=-1)
+    if cfg.attn_block:
+        out = L.sdpa_blockwise(q_eff, k_eff, v, scale, block=cfg.attn_block)
+    else:
+        out = L.sdpa(q_eff, k_eff, v, L.causal_mask(s, s), scale)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+
+def mla_decode(cfg: ArchConfig, p: dict, x, cache_ckv, cache_kr, pos):
+    """Absorbed-form MLA decode: attend in the kv_lora latent space.
+
+    cache_ckv: [B,S,R] compressed latents; cache_kr: [B,S,Rr] shared rope keys.
+    Caches ~ (512+64) * 2 bytes/token — the MLA memory win the paper family
+    is built around.
+    """
+    m = cfg.mla
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b = x.shape[0]
+    posv = jnp.broadcast_to(pos, (b,))[:, None]
+    q_nope, q_rope = _mla_q(cfg, p, x, posv, cdt)             # [B,1,H,*]
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(cdt))
+    ckv, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    ckv = L.rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    cos, sin = L.rope_angles(posv, m.rope_head_dim, cfg.rope_theta)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    cache_ckv = L.cache_update(cache_ckv, ckv, pos)
+    cache_kr = L.cache_update(cache_kr, k_rope, pos)
+    cache_ckv = constrain(cache_ckv, P(BATCH, "model", None))
+    cache_kr = constrain(cache_kr, P(BATCH, "model", None))
+
+    wkv_b = p["wkv_b"].astype(cdt)
+    wk = wkv_b[..., : m.nope_head_dim]                        # [R,H,Dn]
+    wv = wkv_b[..., m.nope_head_dim:]                         # [R,H,Dv]
+    # absorb k-projection into q: q_lat[b,h,r] = sum_d q_nope[b,h,d] wk[r,h,d]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk)[:, 0]    # [B,H,R]
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s_len = cache_ckv.shape[1]
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat, cache_ckv)
+              + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], cache_kr))
+    logits = logits.astype(jnp.float32) * scale
+    mask = jnp.arange(s_len) <= pos
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs, cache_ckv)      # [B,H,R]
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, wv)[:, None]      # [B,1,H,Dv]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return out, cache_ckv, cache_kr
+
+
+# --------------------------------------------------------------------------
+# full MoE decoder models
+# --------------------------------------------------------------------------
+
+def moe_model_defs(cfg: ArchConfig) -> dict:
+    attn = mla_defs(cfg) if cfg.mla is not None else L.attn_defs(cfg)
+    layer = {"ln1": L.norm_defs(cfg), "attn": attn,
+             "ln2": L.norm_defs(cfg), "moe": moe_defs(cfg)}
+    defs = {"embed": L.embed_defs(cfg, fsdp=True),
+            "layers": L.stack_defs(layer, cfg.n_layers - cfg.moe.first_dense),
+            "ln_f": L.norm_defs(cfg)}
+    if cfg.moe.first_dense:
+        dense_layer = {"ln1": L.norm_defs(cfg), "attn": attn,
+                       "ln2": L.norm_defs(cfg),
+                       "mlp": L.ffn_defs(cfg, cfg.d_ff, fsdp=True)}
+        defs["dense_layers"] = L.stack_defs(dense_layer, cfg.moe.first_dense)
+    return defs
+
+
+def _moe_layer_fn(cfg: ArchConfig):
+    def fn(x, lp, positions):
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        if cfg.mla is not None:
+            h = mla_attention(cfg, lp["attn"], h, positions)
+        else:
+            h = L.attention(cfg, lp["attn"], h, positions)
+        x = x + h
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            h, aux = moe_ffn(cfg, lp["moe"], h)
+        else:
+            h, aux = L.ffn(cfg, lp["mlp"], h), jnp.float32(0.0)
+        x = constrain(x + h, L.residual_spec(cfg))
+        return x, aux
+    return fn
+
+
+def moe_logits(cfg: ArchConfig, params: dict, tokens, last_only: bool = False):
+    x = L.embed(cfg, params["embed"], tokens)
+    x = constrain(x, P(BATCH, None, None))
+    positions = jnp.arange(x.shape[1])[None, :]
+    fn = _moe_layer_fn(cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=L.remat_policy(cfg))
+    aux_total = jnp.float32(0.0)
+    if cfg.moe.first_dense:
+        def dbody(carry, lp):
+            x, aux = carry
+            x, a = fn(x, lp, positions)
+            return (x, aux + a), None
+        (x, aux_total), _ = L.scan_layers(cfg, dbody, (x, aux_total),
+                                          params["dense_layers"])
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = fn(x, lp, positions)
+        return (x, aux + a), None
+
+    (x, aux_total), _ = L.scan_layers(cfg, body, (x, aux_total),
+                                      params["layers"])
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    if last_only:
+        x = x[:, -1:]
+    return L.logits_out(cfg, params["embed"], x), aux_total
+
+
+def moe_loss(cfg: ArchConfig, params: dict, batch: dict, aux_weight=0.01):
+    logits, aux = moe_logits(cfg, params, batch["tokens"])
+    return (L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+            + aux_weight * aux / cfg.n_layers)
+
+
+# ---- decode ----------------------------------------------------------------
+
+def moe_cache_shape(cfg: ArchConfig, batch: int, seq: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    nl = cfg.n_layers - cfg.moe.first_dense
+    if cfg.mla is not None:
+        m = cfg.mla
+        out = {"ckv": jax.ShapeDtypeStruct((nl, batch, seq, m.kv_lora_rank), dt),
+               "kr": jax.ShapeDtypeStruct((nl, batch, seq, m.rope_head_dim), dt)}
+        if cfg.moe.first_dense:
+            out["dense_ckv"] = jax.ShapeDtypeStruct(
+                (cfg.moe.first_dense, batch, seq, m.kv_lora_rank), dt)
+            out["dense_kr"] = jax.ShapeDtypeStruct(
+                (cfg.moe.first_dense, batch, seq, m.rope_head_dim), dt)
+        return out
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {"k": jax.ShapeDtypeStruct((nl, batch, seq, kv, hd), dt),
+            "v": jax.ShapeDtypeStruct((nl, batch, seq, kv, hd), dt)}
+
+
+def moe_cache_spec(cfg: ArchConfig) -> dict:
+    if cfg.mla is not None:
+        spec3 = P(None, BATCH, "model", None)
+        out = {"ckv": spec3, "kr": spec3}
+        if cfg.moe.first_dense:
+            out["dense_ckv"] = spec3
+            out["dense_kr"] = spec3
+        return out
+    spec = P(None, BATCH, "model", None, None)
+    return {"k": spec, "v": spec}
+
+
+def moe_decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens, pos):
+    x = L.embed(cfg, params["embed"], tokens)
+    x = constrain(x, P(BATCH, None, None))
+
+    def attn_step(lp, x, ck, cv):
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        if cfg.mla is not None:
+            h, ck, cv = mla_decode(cfg, lp["attn"], h, ck, cv, pos)
+        else:
+            h, ck, cv = L.attention_decode(
+                cfg, lp["attn"], h, ck, cv, pos,
+                cache_spec=P(BATCH, "model", None, None))
+        return x + h, ck, cv
+
+    if cfg.moe.first_dense:
+        def dbody(x, xs):
+            lp, ck, cv = xs
+            x, ck, cv = attn_step(lp, x, ck, cv)
+            h = L.apply_norm(cfg, lp["ln2"], x)
+            x = x + L.ffn(cfg, lp["mlp"], h)
+            return x, (ck, cv)
+        keys = ("dense_ckv", "dense_kr") if cfg.mla is not None else ("k", "v")
+        x, (ck, cv) = L.scan_layers(
+            cfg, dbody, x,
+            (params["dense_layers"], cache[keys[0]], cache[keys[1]]))
+        new_dense = {keys[0]: ck, keys[1]: cv}
+    else:
+        new_dense = {}
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, ck, cv = attn_step(lp, x, ck, cv)
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        h, _ = moe_ffn(cfg, lp["moe"], h)
+        return x + h, (ck, cv)
+
+    keys = ("ckv", "kr") if cfg.mla is not None else ("k", "v")
+    x, (ck, cv) = L.scan_layers(
+        cfg, body, x, (params["layers"], cache[keys[0]], cache[keys[1]]))
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    new_cache = {keys[0]: ck, keys[1]: cv, **new_dense}
+    return L.logits_out(cfg, params["embed"], x), new_cache

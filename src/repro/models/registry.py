@@ -1,0 +1,158 @@
+"""Uniform model API over all assigned architecture families.
+
+Every architecture exposes the same five entry points regardless of family:
+
+    model = get_model(cfg)
+    loss  = model.loss(params, batch)                  # train_4k / prefill
+    logits, cache = model.decode_step(params, cache, tokens, pos)  # decode_*
+    model.param_defs / abstract_params / param_specs   # init + dry-run + dist
+    model.input_specs(shape) -> (batch pytree of ShapeDtypeStruct, specs)
+
+The dry-run lowers `train_step`/`serve_step` built from these; the smoke
+tests materialise reduced configs through the same code path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import hybrid, layers, moe, ssm, transformer, whisper
+from .config import ArchConfig, ShapeCell
+
+BATCH = ("pod", "data")
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    param_defs: dict
+    loss: Callable                 # (params, batch) -> scalar
+    prefill: Callable              # (params, batch) -> last-position logits
+    decode_step: Callable | None   # (params, cache, tokens[B,1], pos) -> (logits, cache)
+    cache_shape: Callable | None   # (batch, seq) -> pytree of ShapeDtypeStruct
+    cache_spec: Callable | None    # () -> pytree of PartitionSpec
+
+    # ---- derived ----
+    def init(self, key):
+        return layers.init_params(self.param_defs, key, self.cfg.param_dtype)
+
+    def abstract_params(self):
+        return layers.abstract_params(self.param_defs, self.cfg.param_dtype)
+
+    def param_specs(self):
+        return layers.param_specs(self.param_defs)
+
+    def batch_specs(self, shape: ShapeCell):
+        """(abstract batch, sharding specs) for the train/prefill input."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if cfg.family == "encdec":
+            batch = {"frames": jax.ShapeDtypeStruct(
+                         (b, cfg.enc_seq, cfg.d_model), jnp.float32),
+                     "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+            specs = {"frames": P(BATCH, None, None),
+                     "tokens": P(BATCH, None), "labels": P(BATCH, None)}
+        elif cfg.family == "vlm":
+            st = s - cfg.n_frontend_tokens
+            batch = {"patch_embeds": jax.ShapeDtypeStruct(
+                         (b, cfg.n_frontend_tokens, cfg.frontend_dim),
+                         jnp.float32),
+                     "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                     "labels": jax.ShapeDtypeStruct((b, st), i32)}
+            specs = {"patch_embeds": P(BATCH, None, None),
+                     "tokens": P(BATCH, None), "labels": P(BATCH, None)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                     "labels": jax.ShapeDtypeStruct((b, s), i32)}
+            specs = {"tokens": P(BATCH, None), "labels": P(BATCH, None)}
+        return batch, specs
+
+    def decode_specs(self, shape: ShapeCell):
+        """(abstract (cache, tokens, pos), sharding specs) for serve_step."""
+        b, s = shape.global_batch, shape.seq_len
+        cache = self.cache_shape(b, s)
+        cspec = self.cache_spec()
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return ((cache, tokens, pos),
+                (cspec, P(BATCH, None), P()))
+
+    def make_batch(self, key, shape: ShapeCell):
+        """Random concrete batch (smoke tests / examples)."""
+        cfg = self.cfg
+        abstract, _ = self.batch_specs(shape)
+        ks = jax.random.split(key, len(abstract))
+        out = {}
+        for k, (name, sd) in zip(ks, sorted(abstract.items())):
+            if sd.dtype == jnp.int32:
+                out[name] = jax.random.randint(k, sd.shape, 0, cfg.vocab,
+                                               jnp.int32)
+            else:
+                out[name] = jax.random.normal(k, sd.shape, sd.dtype)
+        return out
+
+    def init_cache(self, batch: int, seq: int):
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                            self.cache_shape(batch, seq))
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return Model(
+            cfg=cfg, param_defs=transformer.dense_defs(cfg, fsdp=False),
+            loss=lambda p, b: transformer.dense_loss(cfg, p, b),
+            prefill=lambda p, b: transformer.dense_logits(
+                cfg, p, b["tokens"], b.get("patch_embeds"), last_only=True),
+            decode_step=lambda p, c, t, pos: transformer.dense_decode_step(
+                cfg, p, c, t, pos),
+            cache_shape=lambda b, s: transformer.dense_cache_shape(cfg, b, s),
+            cache_spec=lambda: transformer.dense_cache_spec(cfg))
+    if fam == "moe":
+        return Model(
+            cfg=cfg, param_defs=moe.moe_model_defs(cfg),
+            loss=lambda p, b: moe.moe_loss(cfg, p, b),
+            prefill=lambda p, b: moe.moe_logits(
+                cfg, p, b["tokens"], last_only=True)[0],
+            decode_step=lambda p, c, t, pos: moe.moe_decode_step(
+                cfg, p, c, t, pos),
+            cache_shape=lambda b, s: moe.moe_cache_shape(cfg, b, s),
+            cache_spec=lambda: moe.moe_cache_spec(cfg))
+    if fam == "ssm":
+        return Model(
+            cfg=cfg, param_defs=ssm.ssm_model_defs(cfg),
+            loss=lambda p, b: ssm.ssm_loss(cfg, p, b),
+            prefill=lambda p, b: ssm.ssm_logits(
+                cfg, p, b["tokens"], last_only=True),
+            decode_step=lambda p, c, t, pos: ssm.ssm_decode_step(
+                cfg, p, c, t, pos),
+            cache_shape=lambda b, s: ssm.ssm_state_shape(cfg, b, s),
+            cache_spec=lambda: ssm.ssm_state_spec(cfg))
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg, param_defs=hybrid.hybrid_model_defs(cfg),
+            loss=lambda p, b: hybrid.hybrid_loss(cfg, p, b),
+            prefill=lambda p, b: hybrid.hybrid_logits(
+                cfg, p, b["tokens"], last_only=True),
+            decode_step=lambda p, c, t, pos: hybrid.hybrid_decode_step(
+                cfg, p, c, t, pos),
+            cache_shape=lambda b, s: hybrid.hybrid_state_shape(cfg, b, s),
+            cache_spec=lambda: hybrid.hybrid_state_spec(cfg))
+    if fam == "encdec":
+        return Model(
+            cfg=cfg, param_defs=whisper.whisper_model_defs(cfg),
+            loss=lambda p, b: whisper.whisper_loss(cfg, p, b),
+            prefill=lambda p, b: whisper.decode_train(
+                cfg, p, b["tokens"], whisper.encode(cfg, p, b["frames"]),
+                last_only=True),
+            decode_step=lambda p, c, t, pos: whisper.whisper_decode_step(
+                cfg, p, c, t, pos),
+            cache_shape=lambda b, s: whisper.whisper_cache_shape(cfg, b, s),
+            cache_spec=lambda: whisper.whisper_cache_spec(cfg))
+    raise ValueError(f"unknown family '{fam}'")

@@ -1,0 +1,300 @@
+"""Mamba-2 (SSD — state-space duality) blocks, for mamba2-2.7b and the
+zamba2-7b hybrid backbone.
+
+The SSD forward is the chunked dual form of the selective-state recurrence
+(Dao & Gu, arXiv:2405.21060): within a chunk the output is a masked
+quadratic ("attention-like") form computed on the MXU; across chunks a small
+recurrence carries the [H, N, P] state.  This is the TPU-native adaptation of
+the paper's GPU kernel — chunk size is picked so the per-chunk working set
+tiles into VMEM, and the per-head independence shards heads over the `model`
+mesh axis with zero collectives inside the scan.
+
+Decode is the O(1) recurrent form over the same parameters.
+`kernels/ssd_chunk.py` provides the Pallas version of the intra-chunk kernel;
+this module is the pure-jnp implementation used as its oracle and as the
+default CPU path.
+
+Einsum letters: b=batch, c=chunk, q/k=position-in-chunk, h=head,
+p=head-channel, s=ssm-state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import constrain
+from . import layers as L
+from .config import ArchConfig
+
+BATCH = ("pod", "data")
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads
+
+
+def ssm_block_defs(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, n_heads = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    return {
+        "in_z": L.ParamDef((d, d_in), P(None, "model")),
+        "in_x": L.ParamDef((d, d_in), P(None, "model")),
+        "in_b": L.ParamDef((d, gn), P(None, None)),
+        "in_c": L.ParamDef((d, gn), P(None, None)),
+        "in_dt": L.ParamDef((d, n_heads), P(None, "model")),
+        "conv_x": L.ParamDef((s.d_conv, d_in), P(None, "model"), scale=0.5),
+        "conv_b": L.ParamDef((s.d_conv, gn), P(None, None), scale=0.5),
+        "conv_c": L.ParamDef((s.d_conv, gn), P(None, None), scale=0.5),
+        "a_log": L.ParamDef((n_heads,), P("model"), "zeros"),
+        "dt_bias": L.ParamDef((n_heads,), P("model"), "zeros"),
+        "d_skip": L.ParamDef((n_heads,), P("model"), "ones"),
+        "gate_norm": L.ParamDef((d_in,), P("model"), "ones"),
+        "out": L.ParamDef((d_in, d), P("model", None)),
+    }
+
+
+def causal_conv(x, w):
+    """Depthwise causal conv: x [B,S,C], w [K,C] -> [B,S,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K=4: unrolled shifted adds beat a gather on TPU
+        out = out + xp[:, i: i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out
+
+
+def conv_step(state, xt, w):
+    """Decode-time conv: state [B,K-1,C] holds the last K-1 inputs."""
+    window = jnp.concatenate([state, xt[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", window, w.astype(xt.dtype))
+    return window[:, 1:], out
+
+
+# --------------------------------------------------------------------------
+# SSD chunked scan (training / prefill)
+# --------------------------------------------------------------------------
+
+def _segsum(a):
+    """a: [..., Q] -> a-sums over (k, q] as lower-triangular [..., Q, Q]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int, use_pallas: bool = False):
+    """Chunked SSD.  x:[B,S,H,P] dt:[B,S,H] a:[H] b,c:[B,S,G,N].
+
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).  Math in f32 (exp/cumsum
+    are precision-sensitive); caller casts back.
+    """
+    bt, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(bt, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bt, nc, q, h)
+    bh = jnp.repeat(b.astype(jnp.float32).reshape(bt, nc, q, g, n), rep, axis=3)
+    ch = jnp.repeat(c.astype(jnp.float32).reshape(bt, nc, q, g, n), rep, axis=3)
+
+    da = dtf * a[None, None, None, :]            # [b,c,q,h], a < 0
+    da_h = jnp.moveaxis(da, 3, 2)                # [b,c,h,q]
+    cum = jnp.cumsum(da_h, axis=-1)              # [b,c,h,q]
+    total = cum[..., -1]                         # [b,c,h]
+    xdt = xf * dtf[..., None]                    # [b,c,q,h,p]
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y_intra = kops.ssd_intra_chunk(xdt, da_h, bh, ch)
+    else:
+        decay = jnp.exp(_segsum(da_h))                        # [b,c,h,q,k]
+        cb = jnp.einsum("bcqhs,bckhs->bchqk", ch, bh)
+        y_intra = jnp.einsum("bchqk,bckhp->bcqhp", cb * decay, xdt)
+
+    # per-chunk input->state summaries
+    decay_out = jnp.exp(total[..., None] - cum)               # [b,c,h,q]
+    z_states = jnp.einsum("bcqhs,bcqhp,bchq->bchsp", bh, xdt, decay_out)
+
+    # inter-chunk recurrence + state broadcast back into each chunk
+    def body(hstate, xs):
+        z_c, total_c, cum_c, ch_c = xs
+        # y contribution of the incoming state at every position of the chunk
+        y_c = jnp.einsum("bqhs,bhsp,bhq->bqhp", ch_c, hstate, jnp.exp(cum_c))
+        hstate = hstate * jnp.exp(total_c)[..., None, None] + z_c
+        return hstate, y_c
+
+    h0 = jnp.zeros((bt, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(z_states, 1, 0), jnp.moveaxis(total, 1, 0),
+          jnp.moveaxis(cum, 1, 0), jnp.moveaxis(ch, 1, 0))
+    final_state, y_inter = jax.lax.scan(body, h0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(bt, s, h, p).astype(x.dtype), final_state.astype(x.dtype)
+
+
+def ssd_step(hstate, xt, dtt, a, bt_, ct):
+    """O(1) decode recurrence.  hstate:[B,H,N,P] xt:[B,H,P] dtt:[B,H]
+    bt_/ct:[B,G,N] -> (new_state, y [B,H,P])."""
+    h = xt.shape[1]
+    g = bt_.shape[1]
+    rep = h // g
+    bh = jnp.repeat(bt_, rep, axis=1).astype(jnp.float32)   # [B,H,N]
+    chh = jnp.repeat(ct, rep, axis=1).astype(jnp.float32)
+    dtf = dtt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a)[..., None, None]                # [B,H,1,1]
+    upd = (dtf[..., None] * bh)[..., None] * xt.astype(jnp.float32)[:, :, None, :]
+    hstate = hstate.astype(jnp.float32) * decay + upd
+    y = jnp.einsum("bhs,bhsp->bhp", chh, hstate)
+    return hstate.astype(xt.dtype), y.astype(xt.dtype)
+
+
+# --------------------------------------------------------------------------
+# mamba2 block
+# --------------------------------------------------------------------------
+
+def _block_inputs(cfg: ArchConfig, p: dict, u):
+    """Shared projections for train and decode paths."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    z = jnp.einsum("bsd,de->bse", u, p["in_z"].astype(cdt))
+    x = jnp.einsum("bsd,de->bse", u, p["in_x"].astype(cdt))
+    braw = jnp.einsum("bsd,de->bse", u, p["in_b"].astype(cdt))
+    craw = jnp.einsum("bsd,de->bse", u, p["in_c"].astype(cdt))
+    dtraw = jnp.einsum("bsd,dh->bsh", u, p["in_dt"].astype(cdt))
+    return z, x, braw, craw, dtraw
+
+
+def mamba2_block(cfg: ArchConfig, p: dict, u, use_pallas: bool = False):
+    """u: [B,S,D] -> [B,S,D] (training / prefill path)."""
+    s_cfg = cfg.ssm
+    d_in, n_heads = _dims(cfg)
+    z, x, braw, craw, dtraw = _block_inputs(cfg, p, u)
+    x = jax.nn.silu(causal_conv(x, p["conv_x"]))
+    braw = jax.nn.silu(causal_conv(braw, p["conv_b"]))
+    craw = jax.nn.silu(causal_conv(craw, p["conv_c"]))
+
+    bsz, s, _ = u.shape
+    xh = x.reshape(bsz, s, n_heads, s_cfg.head_dim)
+    xh = constrain(xh, P(BATCH, None, "model", None))
+    bmat = braw.reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+    cmat = craw.reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    y, _ = ssd_scan(xh, dt, a, bmat, cmat, s_cfg.chunk, use_pallas)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out"].astype(y.dtype))
+
+
+def mamba2_block_decode(cfg: ArchConfig, p: dict, u, state: dict):
+    """u: [B,1,D]; state = {"h":[B,H,N,P], "conv_x/b/c": [B,K-1,*]}."""
+    s_cfg = cfg.ssm
+    d_in, n_heads = _dims(cfg)
+    z, x, braw, craw, dtraw = _block_inputs(cfg, p, u)
+    cx, x1 = conv_step(state["conv_x"], x[:, 0], p["conv_x"])
+    cb, b1 = conv_step(state["conv_b"], braw[:, 0], p["conv_b"])
+    cc, c1 = conv_step(state["conv_c"], craw[:, 0], p["conv_c"])
+    x1, b1, c1 = jax.nn.silu(x1), jax.nn.silu(b1), jax.nn.silu(c1)
+
+    bsz = u.shape[0]
+    xh = x1.reshape(bsz, n_heads, s_cfg.head_dim)
+    bmat = b1.reshape(bsz, s_cfg.n_groups, s_cfg.d_state)
+    cmat = c1.reshape(bsz, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dtraw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    hstate, y = ssd_step(state["h"], xh, dt, a, bmat, cmat)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, :, None]
+    y = y.reshape(bsz, 1, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"].astype(y.dtype))
+    return out, {"h": hstate, "conv_x": cx, "conv_b": cb, "conv_c": cc}
+
+
+# --------------------------------------------------------------------------
+# full mamba2 LM
+# --------------------------------------------------------------------------
+
+def ssm_model_defs(cfg: ArchConfig) -> dict:
+    return {"embed": L.embed_defs(cfg),
+            "layers": L.stack_defs(
+                {"ln": L.norm_defs(cfg), "mix": ssm_block_defs(cfg)},
+                cfg.n_layers),
+            "ln_f": L.norm_defs(cfg)}
+
+
+def ssm_logits(cfg: ArchConfig, params: dict, tokens, use_pallas=False,
+               last_only: bool = False):
+    x = L.embed(cfg, params["embed"], tokens)
+    x = constrain(x, P(BATCH, None, None))
+
+    def fn(x, lp):
+        h = L.apply_norm(cfg, lp["ln"], x)
+        return constrain(x + mamba2_block(cfg, lp["mix"], h, use_pallas),
+                         L.residual_spec(cfg))
+
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=L.remat_policy(cfg))
+    x, _ = L.scan_layers(cfg, lambda x, lp: (fn(x, lp), None), x,
+                         params["layers"])
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    if last_only:
+        x = x[:, -1:]
+    return L.logits_out(cfg, params["embed"], x)
+
+
+def ssm_loss(cfg: ArchConfig, params: dict, batch: dict, use_pallas=False):
+    logits = ssm_logits(cfg, params, batch["tokens"], use_pallas)
+    return L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+def ssm_state_shape(cfg: ArchConfig, batch: int, seq: int):
+    """Decode state: O(1) in seq (the long_500k story).  seq is unused but
+    kept in the signature so all families share the cache API."""
+    s = cfg.ssm
+    d_in, n_heads = _dims(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    gn = s.n_groups * s.d_state
+    nl = cfg.n_layers
+    return {
+        "h": jax.ShapeDtypeStruct((nl, batch, n_heads, s.d_state, s.head_dim), dt),
+        "conv_x": jax.ShapeDtypeStruct((nl, batch, s.d_conv - 1, d_in), dt),
+        "conv_b": jax.ShapeDtypeStruct((nl, batch, s.d_conv - 1, gn), dt),
+        "conv_c": jax.ShapeDtypeStruct((nl, batch, s.d_conv - 1, gn), dt),
+    }
+
+
+def ssm_state_spec(cfg: ArchConfig) -> dict:
+    return {"h": P(None, BATCH, "model", None, None),
+            "conv_x": P(None, BATCH, None, "model"),
+            "conv_b": P(None, BATCH, None, None),
+            "conv_c": P(None, BATCH, None, None)}
+
+
+def ssm_decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens, pos):
+    del pos  # recurrent state is position-free
+    x = L.embed(cfg, params["embed"], tokens)
+    x = constrain(x, P(BATCH, None, None))
+
+    def body(x, xs):
+        lp, st = xs
+        h = L.apply_norm(cfg, lp["ln"], x)
+        out, st = mamba2_block_decode(cfg, lp["mix"], h, st)
+        return x + out, st
+
+    x, new_state = L.scan_layers(
+        cfg, body, x, (params["layers"],
+                       {k: cache[k] for k in ("h", "conv_x", "conv_b", "conv_c")}))
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    return L.logits_out(cfg, params["embed"], x), new_state

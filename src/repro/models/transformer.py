@@ -1,0 +1,159 @@
+"""Dense decoder-only transformer (qwen2 / stablelm / gemma2 / gemma3, and the
+text backbone of paligemma).
+
+Layers are executed with `lax.scan` over stacked weights: the HLO stays small
+(one layer body regardless of depth), compiles fast for the 512-device
+dry-run, and gives XLA a natural remat boundary.  Per-layer heterogeneity
+(gemma's local/global attention pattern) is handled with a traced per-layer
+window size carried in the scan xs.
+
+The paligemma ("vlm") variant prepends `n_frontend_tokens` precomputed SigLIP
+patch embeddings (the modality frontend is a stub per the assignment): the
+projection from frontend_dim to d_model is a real learned parameter, the
+vision tower itself is not simulated.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import constrain
+from . import layers as L
+from .config import ArchConfig
+
+BATCH = ("pod", "data")
+
+
+def dense_defs(cfg: ArchConfig, fsdp: bool = False) -> dict:
+    layer = {
+        "ln1": L.norm_defs(cfg),
+        "attn": L.attn_defs(cfg),
+        "ln2": L.norm_defs(cfg),
+        "mlp": L.ffn_defs(cfg, cfg.d_ff, fsdp),
+    }
+    if cfg.post_norm:  # gemma2: extra norms after attn/ffn outputs
+        layer["post_attn"] = L.norm_defs(cfg)
+        layer["post_mlp"] = L.norm_defs(cfg)
+    defs = {
+        "embed": L.embed_defs(cfg, fsdp),
+        "layers": L.stack_defs(layer, cfg.n_layers),
+        "ln_f": L.norm_defs(cfg),
+    }
+    if cfg.family == "vlm":
+        defs["vision_proj"] = L.ParamDef(
+            (cfg.frontend_dim, cfg.d_model), P(None, "model"))
+    return defs
+
+
+def _layer_fn(cfg: ArchConfig):
+    def fn(x, lp, positions, window):
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        h = L.attention_traced_window(cfg, lp["attn"], h, positions, window)
+        if "post_attn" in lp:
+            h = L.apply_norm(cfg, lp["post_attn"], h)
+        x = x + h
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        h = L.ffn(cfg, lp["mlp"], h)
+        if "post_mlp" in lp:
+            h = L.apply_norm(cfg, lp["post_mlp"], h)
+        x = x + h
+        return constrain(x, L.residual_spec(cfg))
+    return fn
+
+
+def _windows(cfg: ArchConfig) -> jax.Array:
+    return jax.vmap(lambda i: L.layer_window(cfg, i))(jnp.arange(cfg.n_layers))
+
+
+def dense_backbone(cfg: ArchConfig, params: dict, x, positions):
+    """Embeddings-in, hidden-states-out (shared by train and prefill)."""
+    fn = _layer_fn(cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=L.remat_policy(cfg))
+
+    def body(x, xs):
+        lp, window = xs
+        return fn(x, lp, positions, window), None
+
+    x, _ = L.scan_layers(cfg, body, x, (params["layers"], _windows(cfg)))
+    return L.apply_norm(cfg, params["ln_f"], x)
+
+
+def dense_logits(cfg: ArchConfig, params: dict, tokens, extra_embeds=None,
+                 last_only: bool = False):
+    """tokens i32[B,S] -> logits f32[B,S,V].  extra_embeds (vlm): [B,P,D_f]
+    frontend embeddings prepended to the token sequence.  last_only=True is
+    the inference-prefill shape: unembed only the final position (the KV
+    pass is the work; full-seq logits would be a 100s-of-GB artefact)."""
+    x = L.embed(cfg, params["embed"], tokens)
+    if extra_embeds is not None:
+        proj = jnp.einsum("bpf,fd->bpd",
+                          extra_embeds.astype(x.dtype),
+                          params["vision_proj"].astype(x.dtype))
+        if L._gemma_like(cfg):
+            proj = proj * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        x = jnp.concatenate([proj, x], axis=1)
+    x = constrain(x, P(BATCH, None, None))
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = dense_backbone(cfg, params, x, positions)
+    if last_only:
+        return L.logits_out(cfg, params["embed"], x[:, -1:])
+    logits = L.logits_out(cfg, params["embed"], x)
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1]:]
+    return logits
+
+
+def dense_loss(cfg: ArchConfig, params: dict, batch: dict):
+    logits = dense_logits(cfg, params, batch["tokens"],
+                          batch.get("patch_embeds"))
+    return L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+
+def dense_cache_shape(cfg: ArchConfig, batch: int, seq: int):
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    shape = (cfg.n_layers, batch, seq, kv, hd)
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {"k": jax.ShapeDtypeStruct(shape, dt),
+            "v": jax.ShapeDtypeStruct(shape, dt)}
+
+
+def dense_cache_spec(cfg: ArchConfig) -> dict:
+    # sequence axis over `model`: supports 32k..500k KV at batch>=1 and makes
+    # decode attention a sequence-parallel flash-decode (psum over S shards).
+    spec = P(None, BATCH, "model", None, None)
+    return {"k": spec, "v": spec}
+
+
+def dense_decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens, pos):
+    """tokens i32[B,1], pos scalar i32 -> (logits f32[B,1,V], new cache)."""
+    x = L.embed(cfg, params["embed"], tokens)
+    x = constrain(x, P(BATCH, None, None))
+    windows = _windows(cfg)
+    kv_spec = P(BATCH, "model", None, None)
+
+    def body(x, xs):
+        lp, ck, cv, window = xs
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        h, ck, cv = L.attention_decode(cfg, lp["attn"], h, ck, cv, pos,
+                                       window=window, cache_spec=kv_spec)
+        if "post_attn" in lp:
+            h = L.apply_norm(cfg, lp["post_attn"], h)
+        x = x + h
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        h = L.ffn(cfg, lp["mlp"], h)
+        if "post_mlp" in lp:
+            h = L.apply_norm(cfg, lp["post_mlp"], h)
+        return x + h, (ck, cv)
+
+    x, (ck, cv) = L.scan_layers(
+        cfg, body, x, (params["layers"], cache["k"], cache["v"], windows))
+    x = L.apply_norm(cfg, params["ln_f"], x)
+    return L.logits_out(cfg, params["embed"], x), {"k": ck, "v": cv}

@@ -1,0 +1,213 @@
+"""whisper-base: encoder-decoder transformer (audio backbone).
+
+Per the assignment, the conv/mel frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings [B, enc_seq, d_model] (what the two conv layers
+would emit).  The rest is the real architecture: sinusoidal positions, MHA
+with biases on v/q/out (we use uniform q/k/v biases), pre-LayerNorm blocks,
+plain GELU MLPs, learned decoder positions, cross-attention into the frozen
+encoder output, and an untied... tied output head (whisper ties input/output
+embeddings — we keep `tie_embeddings=True`).
+
+Decode caches: per-layer self-attn KV (grows with generated tokens) plus the
+cross-attn K/V computed once from the encoder output (cached at prefill, here
+recomputed from the stub frames — the dry-run measures the serving shape).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import constrain
+from . import layers as L
+from .config import ArchConfig
+
+BATCH = ("pod", "data")
+
+
+def _sinusoid(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(0, d, 2, jnp.float32) * (math.log(10000.0) / (d // 2 - 1)))
+    ang = pos * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attn_defs(cfg: ArchConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    spec = L.head_spec(h)
+    ospec = P("model", None, None) if h % 16 == 0 else P(None, None, None)
+    return {"wq": L.ParamDef((d, h, hd), spec),
+            "wk": L.ParamDef((d, h, hd), spec),
+            "wv": L.ParamDef((d, h, hd), spec),
+            "bq": L.ParamDef((h, hd), P(None, None), "zeros"),
+            "bv": L.ParamDef((h, hd), P(None, None), "zeros"),
+            "wo": L.ParamDef((h, hd, d), ospec),
+            "bo": L.ParamDef((d,), P(None), "zeros")}
+
+
+def _project(p, x, cdt, which: str):
+    w = p["w" + which].astype(cdt)
+    out = jnp.einsum("bsd,dhk->bshk", x, w)
+    if "b" + which in p:
+        out = out + p["b" + which].astype(cdt)
+    return out
+
+
+def _mha(cfg: ArchConfig, p: dict, xq, xkv, causal: bool):
+    """No RoPE — whisper uses absolute positions added at the embeddings."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q = _project(p, xq, cdt, "q")
+    k = _project(p, xkv, cdt, "k")
+    v = _project(p, xkv, cdt, "v")
+    scale = 1.0 / math.sqrt(cfg.hd)
+    if cfg.attn_block:
+        out = L.sdpa_blockwise(q, k, v, scale, block=cfg.attn_block,
+                               causal=causal,
+                               row_shard=not L._model_divisible(cfg.n_heads))
+    else:
+        sq, sk = xq.shape[1], xkv.shape[1]
+        mask = L.causal_mask(sq, sk) if causal else jnp.ones((sq, sk), bool)
+        out = L.sdpa(q, k, v, mask, scale)
+    return (jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+            + p["bo"].astype(cdt))
+
+
+def _mha_decode(cfg: ArchConfig, p: dict, x, ck, cv, pos):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    q = _project(p, x, cdt, "q")
+    k = _project(p, x, cdt, "k")
+    v = _project(p, x, cdt, "v")
+    ck = L.cache_update(ck, k, pos)
+    cv = L.cache_update(cv, v, pos)
+    ck = constrain(ck, P(BATCH, "model", None, None))
+    cv = constrain(cv, P(BATCH, "model", None, None))
+    mask = (jnp.arange(ck.shape[1]) <= pos)[None, :]
+    out = L.sdpa(q, ck, cv, mask, 1.0 / math.sqrt(cfg.hd))
+    return (jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+            + p["bo"].astype(cdt)), ck, cv
+
+
+def whisper_model_defs(cfg: ArchConfig) -> dict:
+    enc_layer = {"ln1": L.norm_defs(cfg, "layer"), "attn": _attn_defs(cfg),
+                 "ln2": L.norm_defs(cfg, "layer"),
+                 "mlp": L.ffn_defs(cfg, cfg.d_ff)}
+    dec_layer = {"ln1": L.norm_defs(cfg, "layer"), "self_attn": _attn_defs(cfg),
+                 "ln_x": L.norm_defs(cfg, "layer"), "cross_attn": _attn_defs(cfg),
+                 "ln2": L.norm_defs(cfg, "layer"),
+                 "mlp": L.ffn_defs(cfg, cfg.d_ff)}
+    return {
+        "embed": L.embed_defs(cfg),
+        "dec_pos": L.ParamDef((4096, cfg.d_model), P(None, None), "embed",
+                              scale=0.02),
+        "enc_layers": L.stack_defs(enc_layer, cfg.n_enc_layers),
+        "enc_ln": L.norm_defs(cfg, "layer"),
+        "dec_layers": L.stack_defs(dec_layer, cfg.n_layers),
+        "dec_ln": L.norm_defs(cfg, "layer"),
+    }
+
+
+def encode(cfg: ArchConfig, params: dict, frames):
+    """frames: [B, enc_seq, D] stub embeddings -> encoder states."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) + _sinusoid(frames.shape[1], cfg.d_model).astype(cdt)
+    x = constrain(x, P(BATCH, None, None))
+
+    def body(x, lp):
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        x = x + _mha(cfg, lp["attn"], h, h, causal=False)
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        return constrain(x + L.ffn(cfg, lp["mlp"], h), P(BATCH, None, None)), None
+
+    x, _ = L.scan_layers(cfg, body, x, params["enc_layers"])
+    return L.apply_norm(cfg, params["enc_ln"], x)
+
+
+def _dec_positions(params, start, seq, cdt):
+    return jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], start, seq, axis=0).astype(cdt)
+
+
+def decode_train(cfg: ArchConfig, params: dict, tokens, enc,
+                 last_only: bool = False):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    s = tokens.shape[1]
+    x = L.embed(cfg, params["embed"], tokens)
+    pos_table = params["dec_pos"]
+    reps = -(-s // pos_table.shape[0])
+    pos = jnp.tile(pos_table, (reps, 1))[:s]   # wrap past 4096 (assigned 32k shapes)
+    x = x + pos.astype(cdt)[None]
+    x = constrain(x, P(BATCH, None, None))
+
+    def body(x, lp):
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        x = x + _mha(cfg, lp["self_attn"], h, h, causal=True)
+        h = L.apply_norm(cfg, lp["ln_x"], x)
+        x = x + _mha(cfg, lp["cross_attn"], h, enc, causal=False)
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        return constrain(x + L.ffn(cfg, lp["mlp"], h), P(BATCH, None, None)), None
+
+    x, _ = L.scan_layers(cfg, body, x, params["dec_layers"])
+    x = L.apply_norm(cfg, params["dec_ln"], x)
+    if last_only:
+        x = x[:, -1:]
+    return L.logits_out(cfg, params["embed"], x)
+
+
+def whisper_loss(cfg: ArchConfig, params: dict, batch: dict):
+    enc = encode(cfg, params, batch["frames"])
+    logits = decode_train(cfg, params, batch["tokens"], enc)
+    return L.cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step): self-attn KV cache + precomputed cross KV
+# --------------------------------------------------------------------------
+
+def whisper_cache_shape(cfg: ArchConfig, batch: int, seq: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h, hd = cfg.n_heads, cfg.hd
+    nl = cfg.n_layers
+    return {
+        "k": jax.ShapeDtypeStruct((nl, batch, seq, h, hd), dt),
+        "v": jax.ShapeDtypeStruct((nl, batch, seq, h, hd), dt),
+        "cross_k": jax.ShapeDtypeStruct((nl, batch, cfg.enc_seq, h, hd), dt),
+        "cross_v": jax.ShapeDtypeStruct((nl, batch, cfg.enc_seq, h, hd), dt),
+    }
+
+
+def whisper_cache_spec(cfg: ArchConfig) -> dict:
+    spec = P(None, BATCH, "model", None, None)
+    return {"k": spec, "v": spec, "cross_k": spec, "cross_v": spec}
+
+
+def whisper_decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens, pos):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(cfg, params["embed"], tokens)
+    ptab = params["dec_pos"]
+    x = x + ptab[pos % ptab.shape[0]].astype(cdt)[None, None]
+    x = constrain(x, P(BATCH, None, None))
+    enc_mask = jnp.ones((1, cfg.enc_seq), bool)
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        h, ck, cv = _mha_decode(cfg, lp["self_attn"], h, ck, cv, pos)
+        x = x + h
+        h = L.apply_norm(cfg, lp["ln_x"], x)
+        q = _project(lp["cross_attn"], h, cdt, "q")
+        out = L.sdpa(q, xk, xv, enc_mask, 1.0 / math.sqrt(cfg.hd))
+        x = x + (jnp.einsum("bshk,hkd->bsd", out,
+                            lp["cross_attn"]["wo"].astype(cdt))
+                 + lp["cross_attn"]["bo"].astype(cdt))
+        h = L.apply_norm(cfg, lp["ln2"], x)
+        x = x + L.ffn(cfg, lp["mlp"], h)
+        return x, (ck, cv)
+
+    x, (ck, cv) = L.scan_layers(
+        cfg, body, x, (params["dec_layers"], cache["k"], cache["v"],
+                       cache["cross_k"], cache["cross_v"]))
+    x = L.apply_norm(cfg, params["dec_ln"], x)
+    new_cache = dict(cache, k=ck, v=cv)
+    return L.logits_out(cfg, params["embed"], x), new_cache

@@ -1,0 +1,105 @@
+"""Gradient compression: int8 block quantisation with error feedback.
+
+At multi-pod scale the gradient all-reduce crosses pods over DCN, which is
+1-2 orders of magnitude slower than ICI — compressing the cross-pod traffic
+4x (bf16/f32 -> int8) is a standard distributed-optimization trick.  We use
+per-block (128-lane) absmax scaling, and an error-feedback accumulator that
+carries the quantisation residual into the next step, which provably keeps
+SGD-style convergence.
+
+In the pjit programming model the all-reduce is emitted by XLA inside
+jax.grad, so the compression here is applied to the *pod-axis* portion
+explicitly: grads are first reduced within a pod (ICI, full precision by
+psum), then quantised, all-reduced across the `pod` axis via shard_map, and
+dequantised.  On a single-pod mesh the compress path degenerates to a pure
+quantise/dequantise round-trip (still exercising the numerics), which is how
+the CPU tests validate it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 128
+
+
+def _pad_to(x, mult):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % mult
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def quantize_int8(g):
+    """g: any-shape float -> (q int8 [N/B, B], scale f32 [N/B, 1], meta)."""
+    flat, pad = _pad_to(g.astype(jnp.float32), BLOCK)
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, (g.shape, pad)
+
+
+def dequantize_int8(q, scale, meta, dtype):
+    shape, pad = meta
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compress_roundtrip(g):
+    """Quantise+dequantise one leaf (models the DCN wire format)."""
+    q, s, meta = quantize_int8(g)
+    return dequantize_int8(q, s, meta, g.dtype)
+
+
+def apply_error_feedback(grads, ef_state):
+    """grads += residual; compressed := Q(grads); residual := grads-compressed.
+
+    Returns (compressed_grads, new_ef_state).  ef_state is a pytree of f32
+    residuals matching grads (zeros at init)."""
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        compressed = compress_roundtrip(corrected)
+        return compressed.astype(g.dtype), corrected - compressed.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def init_ef_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def cross_pod_allreduce_compressed(grads, mesh):
+    """Explicit compressed all-reduce over the `pod` mesh axis via shard_map.
+
+    Only used when the mesh has a `pod` axis; the int8 payload is what
+    crosses DCN.  Mean-reduces over pods.
+    """
+    if "pod" not in mesh.axis_names:
+        return grads
+    npod = mesh.shape["pod"]
+
+    def reduce_leaf(g):
+        q, s, meta = quantize_int8(g)
+        # decode locally, all-reduce the f32 (XLA sends the int8 on the wire
+        # only with a custom collective; we model numerics + account bytes)
+        deq = dequantize_int8(q, s, meta, jnp.float32)
+        summed = jax.lax.psum(deq, "pod")
+        return (summed / npod).astype(g.dtype)
+
+    spec = P()  # grads replicated across pods at this point
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=spec,
+                       out_specs=spec, check_vma=False)
+    def run(tree):
+        return jax.tree.map(reduce_leaf, tree)
+
+    return run(grads)

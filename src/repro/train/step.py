@@ -1,0 +1,107 @@
+"""Train-step construction: loss -> grads -> (optional compression) -> AdamW.
+
+`make_train_step(model, tcfg)` returns a pure (state, batch) -> (state,
+metrics) function.  The same function is: jit'ed directly for CPU smoke
+tests, lowered against the production mesh by the dry-run (with params/opt
+state sharded per the model's PartitionSpec tree), and driven by the
+carbon-aware trainer in train/carbon_aware.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.registry import Model
+from . import compression
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state, \
+    opt_state_specs
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    grad_compression: bool = False   # int8 + error feedback (cross-pod DCN)
+    microbatches: int = 1            # gradient accumulation: peak-activation
+                                     # memory / microbatches (perf lever)
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    ef: dict | None    # error-feedback residuals (None unless compressing)
+
+
+def init_train_state(model: Model, key, tcfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params, opt=init_opt_state(params),
+        ef=compression.init_ef_state(params) if tcfg.grad_compression else None)
+
+
+def abstract_train_state(model: Model, tcfg: TrainConfig) -> TrainState:
+    """ShapeDtypeStruct TrainState for dry-run lowering (no allocation)."""
+    params = model.abstract_params()
+    f32 = lambda sd: jax.ShapeDtypeStruct(sd.shape, jnp.float32)
+    zeros = jax.tree.map(f32, params)
+    return TrainState(
+        params=params,
+        opt=OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                     m=zeros, v=jax.tree.map(lambda x: x, zeros)),
+        ef=jax.tree.map(f32, params) if tcfg.grad_compression else None)
+
+
+def train_state_specs(model: Model, tcfg: TrainConfig) -> TrainState:
+    pspecs = model.param_specs()
+    return TrainState(
+        params=pspecs, opt=opt_state_specs(pspecs),
+        ef=jax.tree.map(lambda s: s, pspecs) if tcfg.grad_compression else None)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    mb = max(tcfg.microbatches, 1)
+
+    def train_step(state: TrainState, batch: dict):
+        if mb == 1:
+            loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        else:
+            # gradient accumulation: scan over microbatch slices.  Peak
+            # activation memory drops ~mb-fold (each microbatch's remat
+            # tower is released before the next); the f32 accumulator adds
+            # one params-sized buffer.
+            split = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(carry, mbatch):
+                acc, loss_sum = carry
+                loss, grads = jax.value_and_grad(model.loss)(state.params,
+                                                             mbatch)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (acc, loss_sum + loss), None
+
+            (acc, loss_sum), _ = jax.lax.scan(
+                body, (acc0, jnp.float32(0.0)), split)
+            grads = jax.tree.map(lambda a: a / mb, acc)
+            loss = loss_sum / mb
+        ef = state.ef
+        if tcfg.grad_compression:
+            grads, ef = compression.apply_error_feedback(grads, ef)
+        params, opt, metrics = adamw_update(tcfg.opt, state.params, grads,
+                                            state.opt)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params, opt, ef), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step

@@ -1,0 +1,389 @@
+"""Behavioural tests for the tensorized STEAM engine (paper semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BatteryConfig, FailureConfig, PENDING, RUNNING, DONE,
+                        SchedulerConfig, ShiftingConfig, SimConfig, simulate,
+                        summarize, make_host_table, make_task_table, with_scale,
+                        carbon_reduction_pct)
+from repro.core.analytical import analytical_shifting_savings
+
+
+def flat_trace(n, value=100.0):
+    return jnp.full((n,), value, jnp.float32)
+
+
+def square_trace(n, high=400.0, low=50.0, period=96, duty=0.5):
+    t = np.arange(n)
+    return jnp.asarray(np.where((t % period) < duty * period, high, low),
+                       jnp.float32)
+
+
+def tiny_workload(n_tasks=16, arrival_spread=4.0, dur=1.0, cores=2, seed=0):
+    rng = np.random.default_rng(seed)
+    arrival = np.sort(rng.uniform(0.0, arrival_spread, n_tasks))
+    return make_task_table(arrival, np.full(n_tasks, dur),
+                           np.full(n_tasks, cores))
+
+
+def run(tasks, hosts, trace, cfg):
+    final, series = jax.jit(lambda tr: simulate(tasks, hosts, tr, cfg))(trace)
+    return summarize(final, cfg), final, series
+
+
+class TestBasicExecution:
+    def test_all_tasks_complete(self):
+        tasks = tiny_workload()
+        hosts = make_host_table(4, 8)
+        cfg = SimConfig(n_steps=200)
+        res, final, _ = run(tasks, hosts, flat_trace(200), cfg)
+        assert float(res.done_frac) == 1.0
+        assert float(res.sla_violation_frac) == 0.0
+        assert np.all(np.asarray(final.tasks.status) == DONE)
+
+    def test_finish_times_consistent(self):
+        tasks = tiny_workload(n_tasks=4, arrival_spread=0.0, dur=2.0, cores=1)
+        hosts = make_host_table(4, 4)
+        cfg = SimConfig(n_steps=100)
+        res, final, _ = run(tasks, hosts, flat_trace(100), cfg)
+        finish = np.asarray(final.tasks.finish)
+        # all four run immediately: finish ~ first step + duration
+        np.testing.assert_allclose(finish, 2.0 + cfg.dt_h * 0, atol=cfg.dt_h)
+
+    def test_fifo_order_single_slot(self):
+        # one host, one core; 1-core tasks must finish in arrival order
+        arrival = np.array([0.0, 0.3, 0.6, 0.9])
+        tasks = make_task_table(arrival, np.full(4, 1.0), np.ones(4))
+        hosts = make_host_table(1, 1)
+        cfg = SimConfig(n_steps=100)
+        _, final, _ = run(tasks, hosts, flat_trace(100), cfg)
+        finish = np.asarray(final.tasks.finish)
+        assert np.all(np.diff(finish) > 0)
+
+    def test_capacity_never_exceeded(self):
+        tasks = tiny_workload(n_tasks=64, arrival_spread=2.0, cores=4, seed=1)
+        hosts = make_host_table(3, 8)
+        cfg = SimConfig(n_steps=400, collect_series=True)
+        _, final, series = run(tasks, hosts, flat_trace(400), cfg)
+        assert float(jnp.max(series["max_overcommit"])) <= 1e-5
+
+    def test_energy_and_carbon_nonnegative_and_consistent(self):
+        tasks = tiny_workload()
+        hosts = make_host_table(4, 8)
+        cfg = SimConfig(n_steps=200)
+        res, _, _ = run(tasks, hosts, flat_trace(200, 250.0), cfg)
+        assert float(res.grid_energy_kwh) > 0
+        # flat trace: op carbon = energy * ci / 1000 exactly
+        np.testing.assert_allclose(float(res.op_carbon_kg),
+                                   float(res.grid_energy_kwh) * 250.0 / 1000.0,
+                                   rtol=1e-5)
+        assert float(res.peak_power_kw) * cfg.n_steps * cfg.dt_h >= float(
+            res.grid_energy_kwh)
+
+    def test_determinism(self):
+        tasks = tiny_workload(seed=3)
+        hosts = make_host_table(2, 8)
+        cfg = SimConfig(n_steps=300,
+                        failures=FailureConfig(enabled=True, mtbf_h=20.0))
+        r1, _, _ = run(tasks, hosts, flat_trace(300), cfg)
+        r2, _, _ = run(tasks, hosts, flat_trace(300), cfg)
+        assert float(r1.total_carbon_kg) == float(r2.total_carbon_kg)
+        assert float(r1.n_interrupts) == float(r2.n_interrupts)
+
+    def test_dt_convergence(self):
+        tasks = tiny_workload(n_tasks=32, arrival_spread=10.0, seed=5)
+        hosts = make_host_table(4, 8)
+        res = {}
+        for dt in (0.5, 0.25):
+            n = int(100 / dt)
+            cfg = SimConfig(n_steps=n, dt_h=dt)
+            res[dt], _, _ = run(tasks, hosts,
+                                square_trace(n, period=int(24 / dt)), cfg)
+        a, b = (float(res[dt].total_carbon_kg) for dt in (0.5, 0.25))
+        assert abs(a - b) / b < 0.03
+
+
+class TestScheduler:
+    def test_first_fit_packs_first_host(self):
+        # 2 hosts x 4 cores; two 2-core tasks at t=0 -> both on host 0
+        tasks = make_task_table(np.zeros(2), np.full(2, 5.0), np.full(2, 2.0))
+        hosts = make_host_table(2, 4)
+        cfg = SimConfig(n_steps=4)
+        _, final, _ = run(tasks, hosts, flat_trace(4), cfg)
+        assert np.all(np.asarray(final.tasks.host) == 0)
+
+    def test_big_task_skipped_small_task_placed(self):
+        # host with 4 cores; 8-core task cannot ever run, 2-core task can
+        tasks = make_task_table(np.zeros(2), np.ones(2),
+                                np.array([8.0, 2.0]))
+        hosts = make_host_table(1, 4)
+        cfg = SimConfig(n_steps=50)
+        _, final, _ = run(tasks, hosts, flat_trace(50), cfg)
+        status = np.asarray(final.tasks.status)
+        # arrival sort keeps order; task 0 is the 8-core one
+        cores = np.asarray(final.tasks.cores)
+        big, small = int(np.argmax(cores)), int(np.argmin(cores))
+        assert status[big] == PENDING and status[small] == DONE
+
+    def test_aggregate_mode_admits_fragmented(self):
+        # two hosts 3/4-occupied cannot first-fit a 2-core task, but the
+        # capacity-only model admits it (the paper's §III critique)
+        arrival = np.array([0.0, 0.0, 0.5])
+        dur = np.array([10.0, 10.0, 1.0])
+        cores = np.array([3.0, 3.0, 2.0])     # fillers fragment both hosts
+        tasks = make_task_table(arrival, dur, cores)
+        hosts = make_host_table(2, 4)
+        for mode, expect_done in [("first_fit", False), ("aggregate", True)]:
+            cfg = SimConfig(n_steps=32,
+                            scheduler=SchedulerConfig(mode=mode))
+            _, final, _ = run(tasks, hosts, flat_trace(32), cfg)
+            idx = int(np.argmin(np.asarray(final.tasks.cores)))
+            assert (np.asarray(final.tasks.status)[idx] == DONE) == expect_done, mode
+
+    def test_slots_per_step_bounds_placements(self):
+        tasks = tiny_workload(n_tasks=32, arrival_spread=0.0, dur=10.0, cores=1)
+        hosts = make_host_table(8, 8)
+        cfg = SimConfig(n_steps=2, collect_series=True,
+                        scheduler=SchedulerConfig(slots_per_step=4))
+        _, final, series = run(tasks, hosts, flat_trace(2), cfg)
+        assert int(series["n_running"][0]) == 4
+        assert int(series["n_running"][1]) == 8
+
+
+class TestShifting:
+    def test_tasks_wait_for_green_period(self):
+        # red for 12h then green; tasks at t=0 should start at ~12h
+        n = 400
+        t = np.arange(n) * 0.25
+        trace = jnp.asarray(np.where(t < 12.0, 500.0, 50.0), jnp.float32)
+        tasks = make_task_table(np.zeros(4), np.ones(4), np.ones(4))
+        hosts = make_host_table(4, 4)
+        cfg = SimConfig(n_steps=n, shifting=ShiftingConfig(enabled=True))
+        res, final, _ = run(tasks, hosts, trace, cfg)
+        fs = np.asarray(final.tasks.first_start)
+        assert np.all(fs >= 11.5) and np.all(fs <= 13.0)
+
+    def test_max_delay_fallback(self):
+        # permanently red: tasks must start anyway after 24h
+        tasks = make_task_table(np.zeros(4), np.ones(4), np.ones(4))
+        hosts = make_host_table(4, 4)
+        n = 200
+        trace = jnp.concatenate([jnp.full((n // 2,), 500.0),
+                                 jnp.full((n // 2,), 499.0)]).astype(jnp.float32)
+        cfg = SimConfig(n_steps=n, shifting=ShiftingConfig(enabled=True))
+        res, final, _ = run(tasks, hosts, trace, cfg)
+        fs = np.asarray(final.tasks.first_start)
+        assert np.all(fs >= 23.5) and np.all(fs <= 25.0)
+
+    def test_shifting_reduces_op_carbon_diurnal(self):
+        n = 24 * 4 * 14
+        trace = square_trace(n, high=600.0, low=30.0, period=96)
+        rng = np.random.default_rng(7)
+        arrival = np.sort(rng.uniform(0, 24 * 10, 64))
+        tasks = make_task_table(arrival, np.full(64, 2.0), np.full(64, 2.0))
+        hosts = make_host_table(8, 8)
+        base, _, _ = run(tasks, hosts, trace, SimConfig(n_steps=n))
+        shift, _, _ = run(tasks, hosts, trace,
+                          SimConfig(n_steps=n,
+                                    shifting=ShiftingConfig(enabled=True)))
+        assert float(shift.op_carbon_kg) < float(base.op_carbon_kg)
+        assert float(shift.mean_start_delay_h) > float(base.mean_start_delay_h)
+
+    def test_analytical_exceeds_simulated_savings(self):
+        # the paper's §III point: capacity-blind oracle >= full simulation
+        n = 24 * 4 * 14
+        trace = square_trace(n, high=600.0, low=30.0, period=96)
+        rng = np.random.default_rng(11)
+        arrival = np.sort(rng.uniform(0, 24 * 10, 96))
+        dur = np.full(96, 2.0)
+        tasks = make_task_table(arrival, dur, np.full(96, 4.0))
+        hosts = make_host_table(2, 8)   # tight capacity -> stacking
+        base, _, _ = run(tasks, hosts, trace, SimConfig(n_steps=n))
+        shift, _, _ = run(tasks, hosts, trace,
+                          SimConfig(n_steps=n,
+                                    shifting=ShiftingConfig(enabled=True)))
+        sim_savings = 100.0 * (1 - float(shift.op_carbon_kg)
+                               / float(base.op_carbon_kg))
+        ana_savings, _ = analytical_shifting_savings(arrival, dur,
+                                                     np.asarray(trace), 0.25)
+        assert float(ana_savings) > sim_savings
+
+
+class TestBattery:
+    def test_charge_bounded_and_discharges(self):
+        n = 24 * 4 * 7
+        trace = square_trace(n, high=500.0, low=50.0, period=96)
+        tasks = tiny_workload(n_tasks=32, arrival_spread=100.0, dur=4.0, seed=2)
+        hosts = make_host_table(4, 8)
+        cfg = SimConfig(n_steps=n, collect_series=True,
+                        battery=BatteryConfig(enabled=True, capacity_kwh=5.0))
+        res, final, series = run(tasks, hosts, trace, cfg)
+        charge = np.asarray(series["battery_charge"])
+        assert np.all(charge >= -1e-5) and np.all(charge <= 5.0 + 1e-5)
+        assert float(res.batt_discharged_kwh) > 0
+
+    def test_battery_raises_peak_power(self):
+        n = 24 * 4 * 7
+        trace = square_trace(n, high=500.0, low=50.0, period=96)
+        tasks = tiny_workload(n_tasks=32, arrival_spread=100.0, dur=4.0, seed=2)
+        hosts = make_host_table(4, 8)
+        base, _, _ = run(tasks, hosts, trace, SimConfig(n_steps=n))
+        batt, _, _ = run(tasks, hosts, trace, SimConfig(
+            n_steps=n, battery=BatteryConfig(enabled=True, capacity_kwh=20.0)))
+        assert float(batt.peak_power_kw) > 2.0 * float(base.peak_power_kw)
+
+    def test_battery_helps_high_variance_region(self):
+        n = 24 * 4 * 14
+        trace = square_trace(n, high=800.0, low=20.0, period=96)
+        tasks = tiny_workload(n_tasks=64, arrival_spread=200.0, dur=6.0,
+                              cores=4, seed=4)
+        hosts = make_host_table(4, 8)
+        base, _, _ = run(tasks, hosts, trace, SimConfig(n_steps=n))
+        batt, _, _ = run(tasks, hosts, trace, SimConfig(
+            n_steps=n, battery=BatteryConfig(enabled=True, capacity_kwh=10.0)))
+        assert float(batt.op_carbon_kg) < float(base.op_carbon_kg)
+
+    def test_battery_hurts_flat_region(self):
+        # no variation -> battery only adds embodied carbon (paper F3)
+        n = 24 * 4 * 7
+        tasks = tiny_workload(n_tasks=16, arrival_spread=50.0)
+        hosts = make_host_table(2, 8)
+        base, _, _ = run(tasks, hosts, flat_trace(n, 300.0), SimConfig(n_steps=n))
+        batt, _, _ = run(tasks, hosts, flat_trace(n, 300.0), SimConfig(
+            n_steps=n, battery=BatteryConfig(enabled=True, capacity_kwh=50.0)))
+        assert float(batt.total_carbon_kg) > float(base.total_carbon_kg)
+
+
+class TestFailures:
+    def test_failures_interrupt_and_lose_work(self):
+        tasks = tiny_workload(n_tasks=32, arrival_spread=2.0, dur=20.0, cores=4,
+                              seed=6)
+        hosts = make_host_table(4, 8)
+        n = 24 * 4 * 7
+        cfg = SimConfig(n_steps=n, failures=FailureConfig(
+            enabled=True, mtbf_h=30.0, repair_h=2.0))
+        res, final, _ = run(tasks, hosts, flat_trace(n), cfg)
+        assert float(res.n_interrupts) > 0
+        assert float(res.lost_work_h) > 0
+
+    def test_checkpointing_reduces_lost_work(self):
+        tasks = tiny_workload(n_tasks=32, arrival_spread=2.0, dur=20.0, cores=4,
+                              seed=6)
+        hosts = make_host_table(4, 8)
+        n = 24 * 4 * 7
+        base = FailureConfig(enabled=True, mtbf_h=30.0, repair_h=2.0)
+        with_ck, _, _ = run(tasks, hosts, flat_trace(n),
+                            SimConfig(n_steps=n, failures=base))
+        no_ck, _, _ = run(tasks, hosts, flat_trace(n), SimConfig(
+            n_steps=n, failures=FailureConfig(enabled=True, mtbf_h=30.0,
+                                              repair_h=2.0,
+                                              checkpointing=False)))
+        assert float(with_ck.lost_work_h) < float(no_ck.lost_work_h)
+
+    def test_failures_hurt_sla_when_tight(self):
+        tasks = tiny_workload(n_tasks=48, arrival_spread=24.0, dur=8.0, cores=8,
+                              seed=8)
+        hosts = make_host_table(3, 8)
+        n = 24 * 4 * 10
+        ok, _, _ = run(tasks, hosts, flat_trace(n), SimConfig(n_steps=n))
+        bad, _, _ = run(tasks, hosts, flat_trace(n), SimConfig(
+            n_steps=n, failures=FailureConfig(enabled=True, mtbf_h=10.0,
+                                              repair_h=8.0)))
+        assert float(bad.sla_violation_frac) >= float(ok.sla_violation_frac)
+
+
+class TestHorizontalScaling:
+    def test_fewer_hosts_less_carbon_until_sla_breaks(self):
+        rng = np.random.default_rng(9)
+        arrival = np.sort(rng.uniform(0, 24 * 5, 128))
+        tasks = make_task_table(arrival, np.full(128, 3.0), np.full(128, 4.0))
+        hosts = make_host_table(8, 8)
+        n = 24 * 4 * 7
+        cfg = SimConfig(n_steps=n)
+        full, _, _ = run(tasks, hosts, flat_trace(n), cfg)
+        half, _, _ = run(tasks, with_scale(hosts, 4), flat_trace(n), cfg)
+        one, _, _ = run(tasks, with_scale(hosts, 1), flat_trace(n), cfg)
+        assert float(half.total_carbon_kg) < float(full.total_carbon_kg)
+        assert float(one.sla_violation_frac) > float(half.sla_violation_frac)
+
+
+def test_sustainability_extras():
+    """§XI extensions: water/cost are consistent linear images of energy."""
+    import numpy as np
+    from repro.core.metrics import sustainability_extras
+    from repro.core import SimConfig, simulate, summarize, make_task_table, \
+        make_host_table
+    tasks = make_task_table([0.0, 1.0], [4.0, 2.0], [4.0, 2.0])
+    hosts = make_host_table(2, 8.0)
+    cfg = SimConfig(dt_h=0.25, n_steps=96)
+    ci = np.full(96, 300.0, np.float32)
+    res = summarize(simulate(tasks, hosts, ci, cfg)[0], cfg)
+    ex = sustainability_extras(res)
+    assert float(ex.water_l) > 0
+    assert abs(float(ex.energy_cost) - 0.12 * float(res.grid_energy_kwh)) < 1e-4
+    # doubling tariff doubles cost, water unchanged
+    ex2 = sustainability_extras(res, price_per_kwh=0.24)
+    assert abs(float(ex2.energy_cost) - 2 * float(ex.energy_cost)) < 1e-4
+    assert float(ex2.water_l) == float(ex.water_l)
+
+
+def test_spatial_assignment_properties():
+    """Spatial shifting: every valid task is placed; caps are respected;
+    carbon-aware placement prefers greener regions."""
+    import numpy as np
+    from repro.core import make_task_table
+    from repro.core.spatial import spatial_assign, split_by_region
+    rng = np.random.default_rng(0)
+    n = 64
+    tasks = make_task_table(np.sort(rng.uniform(0, 24, n)),
+                            rng.uniform(0.5, 4.0, n),
+                            rng.integers(1, 4, n).astype(float))
+    s = 2 * 96
+    t = np.arange(s) * 0.25
+    traces = np.stack([np.full(s, 100.0),            # green region
+                       np.full(s, 500.0),            # dirty region
+                       400 + 300 * np.sin(2 * np.pi * t / 24)])  # variable
+    region = spatial_assign(tasks, traces, 0.25)
+    valid = np.isfinite(np.asarray(tasks.arrival))
+    assert np.all(np.asarray(region)[valid] >= 0)
+    counts = np.bincount(np.asarray(region)[valid], minlength=3)
+    assert counts[0] > counts[1]      # green region preferred over dirty
+    # capacity cap binds
+    work = np.asarray(tasks.cores) * np.asarray(tasks.duration)
+    cap = np.full(3, float(np.sum(work[valid])) / 3)
+    region_c = spatial_assign(tasks, traces, 0.25, capacity_core_h=cap)
+    loads = np.zeros(3)
+    for i in np.where(valid)[0]:
+        loads[region_c[i]] += work[i]
+    assert np.all(loads <= cap * 1.5 + max(work))  # fallback slack only
+    split = split_by_region(tasks, region_c, 3)
+    assert split.arrival.shape[0] == 3
+
+
+def test_straggler_hosts_slow_tasks_and_hurt_sla():
+    """Straggler modeling: slow hosts inflate completion times; a scaled-up
+    fleet absorbs the effect (the HS x straggler interaction)."""
+    import numpy as np
+    from repro.core import SimConfig, simulate, summarize, make_task_table, \
+        make_host_table
+    n = 24
+    rng = np.random.default_rng(3)
+    tasks = make_task_table(np.sort(rng.uniform(0, 12, n)),
+                            np.full(n, 4.0), np.full(n, 4.0))
+    ci = np.full(24 * 8, 300.0, np.float32)
+    cfg = SimConfig(dt_h=0.25, n_steps=24 * 8, sla_grace_h=2.0)
+
+    fast = make_host_table(4, 8.0)
+    slow = make_host_table(4, 8.0, straggler_frac=0.99, straggler_speed=0.4)
+    res_f = summarize(simulate(tasks, fast, ci, cfg)[0], cfg)
+    res_s = summarize(simulate(tasks, slow, ci, cfg)[0], cfg)
+    # stragglers strictly inflate mean completion delay
+    assert float(res_s.mean_delay_h) > float(res_f.mean_delay_h) + 1.0
+    assert float(res_s.sla_violation_frac) >= float(res_f.sla_violation_frac)
+    # over-provisioning mitigates: more (slow) hosts reduce queueing delay
+    slow_big = make_host_table(12, 8.0, straggler_frac=0.99,
+                               straggler_speed=0.4)
+    res_b = summarize(simulate(tasks, slow_big, ci, cfg)[0], cfg)
+    assert float(res_b.mean_delay_h) <= float(res_s.mean_delay_h) + 1e-6

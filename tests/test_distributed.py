@@ -1,0 +1,125 @@
+"""Distribution utilities: spec filtering, divisibility guards, byte
+estimates, and the HLO whole-program analyzer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import _filter_spec, use_mesh, constrain
+from repro.distributed.sharding import (_divisible_spec, bytes_per_device,
+                                        shardings_for, shardings_for_shaped)
+from repro.launch import hlo_analysis
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_filter_spec_drops_missing_axes():
+    assert _filter_spec(P("pod", "data", None), {"data", "model"}) == \
+        P(None, "data", None)
+    assert _filter_spec(P(("pod", "data"), "model"), {"data", "model"}) == \
+        P(("data",), "model")
+    assert _filter_spec(P(("pod",), None), {"data"}) == P(None, None)
+
+
+def test_divisible_spec_replicates_bad_dims():
+    mesh = _mesh11()
+    # 1x1 mesh: everything divides
+    assert _divisible_spec(P("data", "model"), (3, 5), mesh) == P("data", "model")
+
+
+def test_shardings_for_shaped_tree():
+    mesh = _mesh11()
+    tree = {"a": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    specs = {"a": P("data", "model")}
+    sh = shardings_for_shaped(mesh, tree, specs)
+    assert sh["a"].spec == P("data", "model")
+
+
+def test_bytes_per_device():
+    mesh = _mesh11()
+    tree = {"w": jax.ShapeDtypeStruct((16, 8), jnp.float32)}
+    specs = {"w": P("data", "model")}
+    assert bytes_per_device(tree, mesh, specs) == 16 * 8 * 4
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert constrain(x, P("data", None)) is x
+
+
+def test_constrain_with_single_device_mesh():
+    with use_mesh(_mesh11()):
+        x = jnp.ones((4, 4))
+        y = constrain(x, P("data", "model"))
+        assert y.shape == x.shape
+
+
+# ------------------------------------------------------------- HLO analyzer
+
+_SYNTHETIC_HLO = """
+HloModule test, num_partitions=4
+
+%body.1 (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %d = f32[64,64]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[64,64]{1,0} all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64,64]{1,0}) tuple(%i2, %ar)
+}
+
+%cond.2 (p: (s32[], f32[64,64])) -> pred[] {
+  %p = (s32[], f32[64,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %c = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[64,64]{1,0}) tuple(%z, %a)
+  %w = (s32[], f32[64,64]{1,0}) while(%t0), condition=%cond.2, body=%body.1
+  ROOT %r = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_analyzer_trip_scaling():
+    res = hlo_analysis.analyze(_SYNTHETIC_HLO)
+    # 7 iterations x (2*64^3 dot flops)
+    assert res["flops"] == pytest.approx(7 * 2 * 64**3)
+    # 7 iterations x all-reduce of 64*64*4 bytes
+    assert res["collective_bytes"] == pytest.approx(7 * 64 * 64 * 4)
+    assert res["collectives"] == {"all-reduce": 7 * 64 * 64 * 4}
+
+
+def test_hlo_analyzer_on_real_scan():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        return jax.lax.scan(body, x, w)[0]
+
+    xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
+    comp = jax.jit(f).lower(xs, ws).compile()
+    res = hlo_analysis.analyze(comp.as_text())
+    assert res["flops"] == pytest.approx(6 * 2 * 128**3, rel=0.01)
+
+
+def test_split_instr_handles_tuple_types_with_comments():
+    line = ("  %while.165 = (s32[], f32[2,64,64]{2,1,0}, "
+            "/*index=5*/f32[2,1,1,64]{3,2,1,0}) while(%t), "
+            "condition=%cond.1, body=%body.2")
+    got = hlo_analysis._split_instr(line)
+    assert got is not None
+    name, type_str, opcode, rest = got
+    assert opcode == "while"
+    assert "condition=%cond.1" in rest

@@ -1,0 +1,88 @@
+"""Small-mesh dry-run integration: the exact launch/dryrun.py path (lower +
+compile + analyze) runs against an 8-device host-platform mesh in a
+subprocess, so the main test process keeps its single CPU device.
+
+One dense, one MoE, and one SSM cell cover the three sharding regimes
+(batch+TP, expert-parallel, head-sharded scan state).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from repro.distributed import ctx
+from repro.launch.dryrun import build_cell_fn
+from repro.launch import hlo_analysis
+
+arch, kind = sys.argv[1], sys.argv[2]
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+shape_name = {"train": "train_4k", "decode": "decode_32k"}[kind]
+# shrink the arch so an 8-device CPU compile is fast
+overrides = dict(n_layers=2, d_model=64, d_ff=128, vocab=512,
+                 head_dim=16, n_heads=4, n_kv_heads=2)
+from repro.configs import get_config
+cfg = get_config(arch)
+if cfg.family == "ssm":
+    import dataclasses
+    overrides = dict(n_layers=2, d_model=64, vocab=512,
+                     ssm=dataclasses.replace(cfg.ssm, d_state=16, head_dim=16))
+if cfg.family == "moe":
+    import dataclasses
+    overrides = dict(n_layers=2, d_model=64, d_ff=64, vocab=512, head_dim=16,
+                     n_heads=4, n_kv_heads=2,
+                     moe=dataclasses.replace(cfg.moe, n_experts=8, top_k=2,
+                                             d_ff_expert=32, router_group=64))
+    if cfg.mla is not None:
+        from repro.models.config import MLAConfig
+        overrides["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=32,
+                                     rope_head_dim=8, nope_head_dim=16,
+                                     v_head_dim=16)
+        overrides["head_dim"] = 24
+        overrides["n_heads"] = 4
+        overrides["n_kv_heads"] = 4
+
+import repro.models.config as mc
+# shrink the global shapes too
+mc.SHAPES["train_4k"] = mc.ShapeCell("train_4k", 128, 8, "train")
+mc.SHAPES["decode_32k"] = mc.ShapeCell("decode_32k", 128, 8, "decode")
+
+with ctx.use_mesh(mesh):
+    fn, args, in_shard, out_shard, cfg2, sh = build_cell_fn(
+        arch, shape_name, mesh, overrides=overrides)
+    compiled = jax.jit(fn, in_shardings=in_shard,
+                       out_shardings=out_shard).lower(*args).compile()
+mem = compiled.memory_analysis()
+res = hlo_analysis.analyze(compiled.as_text())
+print(json.dumps({"ok": True, "flops": res["flops"],
+                  "coll": res["collective_bytes"],
+                  "peak": mem.temp_size_in_bytes}))
+"""
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("qwen2-1.5b", "train"),
+    ("qwen3-moe-235b-a22b", "train"),
+    ("deepseek-v2-236b", "decode"),
+    ("mamba2-2.7b", "decode"),
+])
+def test_dryrun_cell_small_mesh(arch, kind):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, arch, kind],
+        capture_output=True, text=True, timeout=420, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
+    assert rec["flops"] > 0
+    if kind == "train":
+        assert rec["coll"] > 0       # gradient all-reduce must exist

@@ -1,0 +1,103 @@
+"""Property-based tests (hypothesis) on the model-layer invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.train.compression import quantize_int8, dequantize_int8
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**16), st.integers(1, 64), st.sampled_from([16, 32, 64]),
+       st.floats(1e3, 1e6))
+def test_rope_preserves_norm(seed, seq, dim, theta):
+    """Rotary embedding is a rotation: per-vector L2 norm is invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, seq, 2, dim))
+    cos, sin = L.rope_angles(jnp.arange(seq)[None], dim, theta)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**16), st.integers(2, 6), st.integers(2, 33))
+def test_cross_entropy_matches_manual(seed, b, v):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (b, 3, v)) * 3
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (b, 3), 0, v)
+    got = float(L.cross_entropy(logits, labels))
+    lp = jax.nn.log_softmax(np.asarray(logits, np.float64), axis=-1)
+    want = -np.mean(np.take_along_axis(
+        np.asarray(lp), np.asarray(labels)[..., None], axis=-1))
+    assert abs(got - want) < 1e-4
+    assert got >= -1e-6
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2**16), st.sampled_from([8, 24, 48]),
+       st.sampled_from([4, 16, 48]), st.booleans())
+def test_blockwise_equals_naive_sdpa(seed, seq, block, causal):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    b, h, kv, d = 2, 4, 2, 8
+    q = jax.random.normal(ks[0], (b, seq, h, d))
+    k = jax.random.normal(ks[1], (b, seq, kv, d))
+    v = jax.random.normal(ks[2], (b, seq, kv, d))
+    mask = (L.causal_mask(seq, seq) if causal
+            else jnp.ones((seq, seq), bool))
+    ref = L.sdpa(q, k, v, mask, 0.3)
+    got = L.sdpa_blockwise(q, k, v, 0.3, block=block, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**16), st.integers(1, 300), st.floats(0.01, 100.0))
+def test_int8_quantization_error_bound(seed, n, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    q, s, meta = quantize_int8(g)
+    back = dequantize_int8(q, s, meta, jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(g))
+    per_elem_scale = np.repeat(np.asarray(s), 128)[: n]
+    assert np.all(err <= per_elem_scale * 0.5 + 1e-7)
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2**16), st.integers(1, 15), st.integers(1, 16))
+def test_cache_update_inserts_exactly_one_row(seed, seq, pos_raw):
+    pos = pos_raw % seq
+    key = jax.random.PRNGKey(seed)
+    cache = jax.random.normal(key, (2, seq, 3, 4))
+    new = jax.random.normal(jax.random.fold_in(key, 1), (2, 1, 3, 4))
+    out = L.cache_update(cache, new, jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(out[:, pos]), np.asarray(new[:, 0]),
+                               rtol=1e-6)
+    keep = np.arange(seq) != pos
+    np.testing.assert_allclose(np.asarray(out[:, keep]),
+                               np.asarray(cache[:, keep]), rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2**16), st.sampled_from([1, 2, 4]))
+def test_ssd_state_handoff(seed, chunks):
+    """Prefill final_state == decode-stepping the same tokens (the
+    prefill->decode handoff contract for SSM serving)."""
+    from repro.models.ssm import ssd_scan, ssd_step
+    B, Q, H, Pd, G, N = 1, 8, 2, 4, 1, 8
+    S = Q * chunks
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, H, Pd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    _, final = ssd_scan(x, dt, a, bm, cm, chunk=Q)
+    h = jnp.zeros((B, H, N, Pd))
+    for t in range(S):
+        h, _ = ssd_step(h, x[:, t], dt[:, t], a, bm[:, t], cm[:, t])
+    np.testing.assert_allclose(np.asarray(final), np.asarray(h),
+                               rtol=2e-4, atol=2e-4)
