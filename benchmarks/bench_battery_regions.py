@@ -1,14 +1,15 @@
 """Paper Fig 6 (F3): battery effectiveness across carbon regions.
 
-One vmapped program evaluates all regions; reports the reduction
-distribution, the fraction of regions with >=5% reduction, and the fraction
-where batteries INCREASE emissions (embodied > operational savings).
+One `sweep_grid` program per setting evaluates all regions (declared region
+axis, chunked to bound memory at the full 158-region scale); reports the
+reduction distribution, the fraction of regions with >=5% reduction, and the
+fraction where batteries INCREASE emissions (embodied > operational savings).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import carbon_reduction_pct, sweep_regions
+from repro.core import carbon_reduction_pct, sweep_grid, trace_axis
 from .common import battery_cfg, pct, regions, save_rows, setup
 
 N_REGIONS = 158
@@ -20,10 +21,12 @@ def run(quick: bool = True):
     for wl in ("surf", "marconi", "borg"):
         tasks, hosts, meta, cfg = setup(wl, quick)
         traces = regions(n_regions, cfg.n_steps)
-        base = sweep_regions(tasks, hosts, traces, cfg)
-        treated = sweep_regions(
-            tasks, hosts, traces,
-            cfg.replace(battery=battery_cfg(meta)))
+        axes = [trace_axis(traces)]
+        chunk = None if quick else 64
+        base = sweep_grid(tasks, hosts, cfg, axes, chunk_size=chunk)
+        treated = sweep_grid(tasks, hosts,
+                             cfg.replace(battery=battery_cfg(meta)), axes,
+                             chunk_size=chunk)
         red = np.asarray(carbon_reduction_pct(base, treated))
         rows.append({
             "bench": "battery_regions", "workload": wl,

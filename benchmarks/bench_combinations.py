@@ -1,7 +1,9 @@
 """Paper Fig 11 (F5/F6): individual and combined techniques across regions.
 
-Evaluates all 2^3 combinations of {HS, B, TS} per workload over a region set
-in vmapped programs.  Validates: TS alone saves only a few percent (<< the
+Evaluates all 2^3 combinations of {HS, B, TS} per workload over a region set,
+each combination as ONE `sweep_grid` program with a declared region axis; the
+HS member rides the grid as a fixed `n_active_hosts` dyn value rather than a
+rebuilt host table.  Validates: TS alone saves only a few percent (<< the
 ~40% oracle claims — F5); some combinations compose near-additively while
 others interfere (F6).
 """
@@ -12,7 +14,8 @@ import itertools
 import numpy as np
 
 from repro.core import (ShiftingConfig, carbon_reduction_pct, find_min_scale,
-                        simulate, summarize, sweep_regions, with_scale)
+                        simulate, summarize, sweep_grid, techniques,
+                        trace_axis, with_scale)
 from .common import battery_cfg, pct, regions, save_rows, setup
 
 COMBOS = [c for r in range(1, 4) for c in itertools.combinations("HBT", r)]
@@ -33,19 +36,22 @@ def run(quick: bool = True):
         n_hs, _ = find_min_scale(sla, 1, meta["n_hosts"], 0.01)
         n_hs = min(n_hs, meta["n_hosts"])
 
-        base = sweep_regions(tasks, hosts, traces, cfg)
+        region_axes = [trace_axis(traces)]
+        base = sweep_grid(tasks, hosts, cfg, region_axes)
         for combo in COMBOS:
             c = cfg
-            h = with_scale(hosts, n_hs) if "H" in combo else hosts
+            hs = "H" in combo
             if "B" in combo:
                 c = c.replace(battery=battery_cfg(meta))
             if "T" in combo:
                 c = c.replace(shifting=ShiftingConfig(enabled=True))
-            res = sweep_regions(tasks, h, traces, c)
+            res = sweep_grid(tasks, hosts, c, region_axes,
+                             dyn={"n_active_hosts": n_hs} if hs else None)
             red = np.asarray(carbon_reduction_pct(base, res))
             rows.append({
                 "bench": "combinations", "workload": wl,
-                "combo": "+".join(combo), "hs_hosts": n_hs,
+                "combo": techniques(c, horizontal_scaling=hs),
+                "hs_hosts": n_hs,
                 "metric": "mean_reduction_pct", "value": pct(red.mean()),
                 "median": pct(np.median(red)), "p90": pct(np.quantile(red, .9)),
                 "mean_delay_h": pct(np.mean(np.asarray(res.mean_delay_h))),
@@ -59,15 +65,15 @@ def check(rows) -> list[str]:
     out = []
     for wl in ("surf", "marconi", "borg"):
         by = {r["combo"]: r["value"] for r in rows if r["workload"] == wl}
-        ts = by.get("T", 0.0)
+        ts = by.get("TS", 0.0)
         out.append(f"F5 {wl}: TS alone saves {ts}% (paper: 0.7-2.9%, far "
                    f"below 40% oracle) ({'OK' if -1.0 <= ts <= 12.0 else 'WEAK'})")
-        bt_sum = by.get("B", 0) + by.get("T", 0)
-        bt = by.get("B+T", 0)
+        bt_sum = by.get("B", 0) + by.get("TS", 0)
+        bt = by.get("B+TS", 0)
         out.append(f"F6 {wl}: B+TS {bt}% vs sum-of-parts {pct(bt_sum)}% "
                    f"({'near-additive OK' if bt <= bt_sum + 1.0 else 'WEAK'})")
-        if "H" in by and "H+T" in by:
-            interf = by["H+T"] < by["H"] + max(by.get("T", 0), 0)
-            out.append(f"F6 {wl}: HS+TS {by['H+T']}% vs HS {by['H']}% "
+        if "HS" in by and "HS+TS" in by:
+            interf = by["HS+TS"] < by["HS"] + max(by.get("TS", 0), 0)
+            out.append(f"F6 {wl}: HS+TS {by['HS+TS']}% vs HS {by['HS']}% "
                        f"(interference {'observed' if interf else 'absent'})")
     return out

@@ -1,15 +1,15 @@
 """Paper Fig 12 (F6): the optimal battery size shrinks when techniques are
 combined.
 
-Grid: battery capacities x regions, with and without temporal shifting; the
-optimal (argmax total-carbon-reduction) capacity per region is compared
-between the two settings.
+Grid: a declared [regions x battery-capacity] `sweep_grid`, with and without
+temporal shifting; the optimal (argmax total-carbon-reduction) capacity per
+region is compared between the two settings.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import ShiftingConfig, sweep_regions_x_battery
+from repro.core import ShiftingConfig, dyn_axis, sweep_grid, trace_axis
 from .common import battery_cfg, pct, regions, save_rows, setup
 
 
@@ -19,6 +19,8 @@ def run(quick: bool = True):
     traces = regions(n_regions, cfg.n_steps)
     kwh0 = 1.1 * meta["n_hosts"]
     caps = np.linspace(0.3, 3.0, 7) * kwh0
+    axes = [trace_axis(traces),
+            dyn_axis(batt_capacity_kwh=np.asarray(caps, np.float32))]
 
     rows = []
     opt = {}
@@ -27,7 +29,7 @@ def run(quick: bool = True):
         "B+TS": cfg.replace(battery=battery_cfg(meta),
                             shifting=ShiftingConfig(enabled=True)),
     }.items():
-        res = sweep_regions_x_battery(tasks, hosts, traces, caps, c)
+        res = sweep_grid(tasks, hosts, c, axes)
         total = np.asarray(res.total_carbon_kg)      # [R, C]
         best_idx = np.argmin(total, axis=1)
         best_caps = caps[best_idx]

@@ -1,6 +1,9 @@
 """Paper-style region sweep (Fig 6/11 in miniature): evaluate each technique
-combination across carbon regions in single vmapped programs and print the
-distribution — the 'what-if' exploration workflow STEAM exists for.
+combination across carbon regions with declared scenario-grid axes — the
+'what-if' exploration workflow STEAM exists for.  Each combination is ONE
+compiled `sweep_grid` program; the closing 3-axis grid (regions x battery
+capacity x shifting quantile) shows why axes beat hand-written sweeps: adding
+an exploration dimension is one line.
 
 Run:  PYTHONPATH=src python examples/region_sweep.py [--regions 24]
 """
@@ -11,8 +14,9 @@ import numpy as np
 
 from repro.carbontraces.synthetic import make_region_traces, trace_stats
 from repro.core import (BatteryConfig, ShiftingConfig, SimConfig,
-                        carbon_reduction_pct, find_min_scale, simulate,
-                        summarize, sweep_regions, with_scale)
+                        carbon_reduction_pct, dyn_axis, find_min_scale,
+                        simulate, summarize, sweep_grid, techniques,
+                        trace_axis, with_scale)
 from repro.workloads.synthetic import make_workload
 
 ap = argparse.ArgumentParser()
@@ -38,19 +42,39 @@ n_hs, _ = find_min_scale(sla, 1, meta["n_hosts"], 0.01)
 n_hs = min(n_hs, meta["n_hosts"])
 print(f"HS: {meta['n_hosts']} -> {n_hs} hosts keeps SLA violations < 1%\n")
 
-base = sweep_regions(tasks, hosts, traces, cfg)
+region_axes = [trace_axis(traces)]
+base = sweep_grid(tasks, hosts, cfg, region_axes)
 print(f"{'combo':8s} {'mean%':>7s} {'med%':>7s} {'best%':>7s} {'neg':>4s}")
 for combo in [c for r in (1, 2, 3) for c in itertools.combinations("HBT", r)]:
     c = cfg
-    h = with_scale(hosts, n_hs) if "H" in combo else hosts
+    hs = "H" in combo
     if "B" in combo:
         c = c.replace(battery=BatteryConfig(
             enabled=True, capacity_kwh=1.1 * meta["n_hosts"]))
     if "T" in combo:
         c = c.replace(shifting=ShiftingConfig(enabled=True))
-    res = sweep_regions(tasks, h, traces, c)
+    res = sweep_grid(tasks, hosts, c, region_axes,
+                     dyn={"n_active_hosts": n_hs} if hs else None)
     red = np.asarray(carbon_reduction_pct(base, res))
-    print(f"{'+'.join(combo):8s} {red.mean():7.2f} {np.median(red):7.2f} "
-          f"{red.max():7.2f} {(red < 0).sum():4d}")
+    print(f"{techniques(c, horizontal_scaling=hs):8s} {red.mean():7.2f} "
+          f"{np.median(red):7.2f} {red.max():7.2f} {(red < 0).sum():4d}")
 print("\n(negative regions: embodied battery cost > operational savings — "
       "paper keytakeaway 2)")
+
+# The general grid: regions x battery capacity x shifting quantile, ONE
+# program.  Every scenario axis is a one-line declaration.
+caps = np.asarray([0.5, 1.1, 2.2], np.float32) * meta["n_hosts"]
+quants = np.asarray([0.25, 0.35, 0.5], np.float32)
+c = cfg.replace(battery=BatteryConfig(enabled=True),
+                shifting=ShiftingConfig(enabled=True))
+grid = sweep_grid(tasks, hosts, c, [
+    trace_axis(traces),
+    dyn_axis(batt_capacity_kwh=caps),
+    dyn_axis(shift_quantile_value=quants),
+])
+total = np.asarray(grid.total_carbon_kg)              # [R, C, Q]
+r_best, c_best, q_best = np.unravel_index(np.argmin(total), total.shape)
+print(f"\n{total.size}-scenario grid (regions x capacity x quantile) in one "
+      f"program: best cell = region {r_best}, "
+      f"{caps[c_best]:.0f} kWh, q={quants[q_best]:.2f} "
+      f"-> {total.min():.1f} kgCO2")

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.
+#
+#   scripts/test.sh            # full tier-1 suite (ROADMAP.md verify command)
+#   scripts/test.sh --fast     # core-engine subset (~1 min): sim + grid + kernels
+#   scripts/test.sh -k battery # extra args pass through to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+  shift
+  exec python -m pytest -x -q tests/test_core_sim.py tests/test_grid.py \
+    tests/test_kernels.py "$@"
+fi
+exec python -m pytest -x -q "$@"

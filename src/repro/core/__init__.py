@@ -4,11 +4,14 @@ from .config import (BatteryConfig, EmbodiedConfig, FailureConfig,
                      SimConfig, techniques)
 from .engine import (StepInputs, build_step_fn, build_step_inputs,
                      default_pipeline, simulate)
+from .grid import (Axis, ScenarioGrid, dyn_axis, seed_axis, sweep_grid,
+                   trace_axis)
 from .metrics import SimResult, carbon_reduction_pct, summarize
 from .scaling import find_min_scale, with_scale
 from .state import (DONE, INVALID, PENDING, RUNNING, BatteryState, HostTable,
-                    MetricsAcc, SimState, TaskTable, init_sim_state,
-                    make_host_table, make_task_table, pad_task_table)
+                    MetricsAcc, SimState, TaskTable, active_host_mask,
+                    init_sim_state, make_host_table, make_task_table,
+                    pad_task_table)
 from .sweep import (lower_sweep, sharded_sweep, sweep_battery_sizes,
                     sweep_regions, sweep_regions_x_battery)
 
@@ -16,10 +19,11 @@ __all__ = [
     "BatteryConfig", "EmbodiedConfig", "FailureConfig", "PowerModelConfig",
     "SchedulerConfig", "ShiftingConfig", "SimConfig", "techniques",
     "StepInputs", "build_step_fn", "build_step_inputs", "default_pipeline",
-    "simulate", "SimResult", "carbon_reduction_pct", "summarize",
+    "simulate", "Axis", "ScenarioGrid", "dyn_axis", "seed_axis", "sweep_grid",
+    "trace_axis", "SimResult", "carbon_reduction_pct", "summarize",
     "find_min_scale", "with_scale", "DONE", "INVALID", "PENDING", "RUNNING",
     "BatteryState", "HostTable", "MetricsAcc", "SimState", "TaskTable",
-    "init_sim_state", "make_host_table", "make_task_table", "pad_task_table",
-    "lower_sweep", "sharded_sweep", "sweep_battery_sizes", "sweep_regions",
-    "sweep_regions_x_battery",
+    "active_host_mask", "init_sim_state", "make_host_table", "make_task_table",
+    "pad_task_table", "lower_sweep", "sharded_sweep", "sweep_battery_sizes",
+    "sweep_regions", "sweep_regions_x_battery",
 ]

@@ -101,11 +101,17 @@ class SimConfig:
         return dataclasses.replace(self, **kw)
 
 
-def techniques(cfg: SimConfig) -> str:
-    """Short label of enabled techniques, e.g. 'HS+B+TS' (HS is expressed via
-    the host table's active mask, so it is not knowable from the config; the
-    label covers B/TS only unless callers append HS themselves)."""
+def techniques(cfg: SimConfig, horizontal_scaling: bool = False) -> str:
+    """Short label of enabled techniques, e.g. 'HS+B+TS'.
+
+    HS is expressed via the host table's active mask (or the `n_active_hosts`
+    dyn value), so it is not knowable from the config alone — callers that
+    down-scaled the host table pass `horizontal_scaling=True` to get the
+    canonical label instead of string-appending it themselves.
+    """
     parts = []
+    if horizontal_scaling:
+        parts.append("HS")
     if cfg.battery.enabled:
         parts.append("B")
     if cfg.shifting.enabled:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from . import battery as battery_mod
 from . import carbon as carbon_mod
 from . import failures as failures_mod
+from . import scaling as scaling_mod
 from . import scheduler as scheduler_mod
 from . import shifting as shifting_mod
 from .config import SimConfig
@@ -40,13 +41,17 @@ class StepInputs(NamedTuple):
     shift_threshold: jax.Array # f32[S]
 
 
-def build_step_inputs(ci_trace, cfg: SimConfig) -> StepInputs:
+def build_step_inputs(ci_trace, cfg: SimConfig,
+                      dyn: dict | None = None) -> StepInputs:
+    dyn = dyn or {}
     ci = jnp.asarray(ci_trace, jnp.float32)
     assert ci.shape[0] >= cfg.n_steps, (
         f"carbon trace too short: {ci.shape[0]} < {cfg.n_steps}")
     ci = ci[: cfg.n_steps]
     bt, rising = battery_mod.precompute_battery_signals(ci, cfg.dt_h, cfg.battery)
-    st = (shifting_mod.precompute_shift_threshold(ci, cfg.dt_h, cfg.shifting)
+    st = (shifting_mod.precompute_shift_threshold(
+              ci, cfg.dt_h, cfg.shifting,
+              quantile=dyn.get("shift_quantile_value"))
           if cfg.shifting.enabled else jnp.zeros_like(ci))
     return StepInputs(ci=ci, batt_threshold=bt, ci_rising=rising,
                       shift_threshold=st)
@@ -246,12 +251,17 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
              stages: Sequence[Stage] | None = None, dyn: dict | None = None):
     """Run one simulation.  Returns (final SimState, per-step series or None).
 
-    jit-able; vmap over scenario axes is done by core/sweep.py.  `dyn` holds
-    traced scenario parameters (e.g. batt_capacity_kwh) that static config
-    cannot sweep without recompiling.
+    jit-able; vmap over scenario axes is done by core/grid.py.  `dyn` holds
+    traced scenario parameters that static config cannot sweep without
+    recompiling: `batt_capacity_kwh` / `batt_rate_kw` (battery sizing),
+    `shift_quantile_value` (shifting threshold level), `n_active_hosts`
+    (horizontal-scaling mask) and `seed` (failure-model PRNG).
     """
-    inputs = build_step_inputs(ci_trace, cfg)
-    state0 = init_sim_state(tasks, hosts, cfg.seed)
+    dyn = dict(dyn) if dyn else {}
+    if "n_active_hosts" in dyn:
+        hosts = scaling_mod.with_scale(hosts, dyn["n_active_hosts"])
+    inputs = build_step_inputs(ci_trace, cfg, dyn=dyn)
+    state0 = init_sim_state(tasks, hosts, dyn.get("seed", cfg.seed))
     step = build_step_fn(cfg, stages, dyn)
     final, series = jax.lax.scan(step, state0, inputs)
     return final, series

@@ -1,0 +1,250 @@
+"""Generalized N-dimensional scenario grids: declare axes once, run them all.
+
+The paper's headline result comes from *systematic* exploration — ~5,500
+simulations per workload over regions x battery sizes x technique knobs.
+`core/sweep.py` used to hard-code three sweep shapes; every new axis meant a
+new hand-written vmap wrapper.  This module turns "add a scenario axis" into a
+one-line declaration: an N-dimensional grid is a list of `Axis` objects, the
+engine composes the nested `jax.vmap`s (axis order = result dimension order),
+jits the whole grid into ONE program, optionally chunks the leading axis to
+bound memory, and optionally shards the leading axis over a mesh via
+`NamedSharding` — the same SPMD layout as the old `sharded_sweep`.
+
+Axis kinds:
+  * `trace_axis(traces)` — carbon-region traces `f32[R, S]`; at most one per
+    grid (it becomes the `ci_trace` argument of `simulate`).
+  * `dyn_axis(**named_values)` — traced scenario scalars fed to the engine as
+    dyn ctx keys.  Several names in one call sweep *zipped* (one grid dim);
+    separate calls sweep as a cross product (separate dims).  Understood keys:
+      - `batt_capacity_kwh`, `batt_rate_kw`  (battery sizing, core/battery.py)
+      - `shift_quantile_value`               (shifting threshold, core/shifting.py)
+      - `n_active_hosts`                     (horizontal scaling, core/scaling.py)
+  * `seed_axis(seeds)` — PRNG seeds for the stochastic failure model.
+
+Usage — a regions x battery-capacity x shift-quantile grid in one program::
+
+    from repro.core.grid import dyn_axis, seed_axis, sweep_grid, trace_axis
+
+    res = sweep_grid(tasks, hosts, cfg, [
+        trace_axis(region_traces),                    # f32[R, S]
+        dyn_axis(batt_capacity_kwh=caps),             # f32[C]
+        dyn_axis(shift_quantile_value=quantiles),     # f32[Q]
+    ])
+    # res is a SimResult whose every field has shape [R, C, Q]
+
+    # bound memory / shard over a mesh without touching the axes:
+    res = sweep_grid(tasks, hosts, cfg, axes, chunk_size=16)
+    res = sweep_grid(tasks, hosts, cfg, axes, mesh=mesh)
+
+Swept config knobs must be *enabled* statically (`cfg.battery.enabled`,
+`cfg.shifting.enabled`) — the dyn value modulates an enabled technique; the
+enable flag itself switches the compiled pipeline.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .config import SimConfig
+from .engine import simulate
+from .metrics import SimResult, summarize
+from .state import HostTable, TaskTable
+
+TRACE_KEY = "ci_trace"
+SEED_KEY = "seed"
+
+
+class Axis(NamedTuple):
+    """One grid dimension: `names[j]` is swept with `values[j]` (zipped)."""
+
+    kind: str                      # 'trace' | 'dyn' | 'seed'
+    names: tuple[str, ...]         # dyn ctx keys (TRACE_KEY / SEED_KEY special)
+    values: tuple[jax.Array, ...]  # equal leading dims = the axis length
+
+    @property
+    def length(self) -> int:
+        return self.values[0].shape[0]
+
+
+def trace_axis(ci_traces) -> Axis:
+    """Carbon-region axis: ci_traces f32[R, S] -> one grid dim of length R."""
+    traces = jnp.asarray(ci_traces, jnp.float32)
+    assert traces.ndim == 2, f"trace_axis wants f32[R, S], got {traces.shape}"
+    return Axis("trace", (TRACE_KEY,), (traces,))
+
+
+def dyn_axis(**named_values) -> Axis:
+    """Traced-scalar axis.  Multiple names sweep zipped along one dimension:
+    `dyn_axis(batt_capacity_kwh=caps, batt_rate_kw=rates)` is one axis whose
+    i-th point sets both keys; use separate `dyn_axis` calls for a product."""
+    if not named_values:
+        raise ValueError("dyn_axis needs at least one name=values pair")
+    names = tuple(named_values)
+    values = tuple(jnp.asarray(v) for v in named_values.values())
+    lengths = {v.shape[0] for v in values}
+    if len(lengths) != 1:
+        raise ValueError(f"zipped dyn_axis values disagree on length: "
+                         f"{dict(zip(names, (v.shape for v in values)))}")
+    return Axis("dyn", names, values)
+
+
+def seed_axis(seeds) -> Axis:
+    """PRNG-seed axis (stochastic failures replicate across seeds)."""
+    return Axis("seed", (SEED_KEY,), (jnp.asarray(seeds, jnp.int32),))
+
+
+class ScenarioGrid:
+    """A validated list of axes; `shape` is the result's leading dimensions."""
+
+    def __init__(self, axes: Sequence[Axis], base_dyn: dict | None = None):
+        axes = list(axes)
+        if not axes:
+            raise ValueError("a ScenarioGrid needs at least one axis")
+        seen: set[str] = set()
+        for ax in axes:
+            for name in ax.names:
+                if name in seen:
+                    raise ValueError(f"axis name '{name}' declared twice")
+                seen.add(name)
+        if base_dyn and (dup := seen & set(base_dyn)):
+            raise ValueError(f"base dyn keys {sorted(dup)} shadow grid axes")
+        self.axes = axes
+        self.base_dyn = dict(base_dyn or {})
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(ax.length for ax in self.axes)
+
+    @property
+    def n_scenarios(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def has_trace_axis(self) -> bool:
+        return any(ax.kind == "trace" for ax in self.axes)
+
+    def payloads(self) -> tuple:
+        return tuple(ax.values for ax in self.axes)
+
+    def grid_fn(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
+                ci_trace=None):
+        """The composed (unjitted) grid function f(*payloads) -> SimResult.
+
+        Nested vmaps are composed innermost-last so the result's leading
+        dimensions follow the axis declaration order.
+        """
+        if self.has_trace_axis():
+            if ci_trace is not None:
+                raise ValueError("grid already has a trace_axis; "
+                                 "drop the ci_trace argument")
+        elif ci_trace is None:
+            raise ValueError("no trace_axis in the grid: pass ci_trace")
+        axes, base_dyn = self.axes, self.base_dyn
+
+        def base(*payloads):
+            ci = ci_trace
+            dyn = dict(base_dyn)
+            for ax, vals in zip(axes, payloads):
+                if ax.kind == "trace":
+                    ci = vals[0]
+                else:
+                    dyn.update(zip(ax.names, vals))
+            final, _ = simulate(tasks, hosts, ci, cfg, dyn=dyn)
+            return summarize(final, cfg)
+
+        fn = base
+        for i in reversed(range(len(axes))):
+            in_axes = [None] * len(axes)
+            in_axes[i] = 0
+            fn = jax.vmap(fn, in_axes=tuple(in_axes))
+        return fn
+
+    def run(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
+            ci_trace=None, *, chunk_size: int | None = None, mesh=None,
+            jit: bool = True) -> SimResult:
+        """Evaluate the whole grid.  Returns a SimResult with leading
+        dimensions `self.shape`.
+
+        chunk_size: split the LEADING axis into chunks of at most this many
+          points, running one compiled program per chunk (bounds peak memory;
+          equal-size chunks share one compilation, a ragged tail adds one).
+        mesh: shard the leading axis over the mesh's ('pod','data') axes with
+          NamedSharding — the production SPMD path.  Combined with
+          chunk_size, chunks are rounded up to a multiple of the mesh's
+          device count (sharding needs every chunk to divide evenly).
+        """
+        if chunk_size is not None and chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
+        payloads = self.payloads()
+        if mesh is not None:
+            return self._run_sharded(fn, payloads, mesh, chunk_size)
+        if jit:
+            fn = jax.jit(fn)
+        if chunk_size is None or self.axes[0].length <= chunk_size:
+            return fn(*payloads)
+        return _concat_chunks(
+            [fn(tuple(v[s:s + chunk_size] for v in payloads[0]), *payloads[1:])
+             for s in range(0, self.axes[0].length, chunk_size)])
+
+    def _run_sharded(self, fn, payloads, mesh, chunk_size):
+        spec = _mesh_spec(mesh)
+        if chunk_size is not None:
+            # NamedSharding requires each chunk's leading dim to divide evenly
+            # over the mesh devices; round the chunk up to a device multiple
+            # (the total leading length must divide too, as in any sharded
+            # sweep — then every chunk including the tail stays divisible).
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            ndev = 1
+            for a in (spec[0] or ()):
+                ndev *= sizes[a]
+            chunk_size = max(ndev, -(-chunk_size // ndev) * ndev)
+        lead = NamedSharding(mesh, spec)
+        repl = NamedSharding(mesh, P())
+        in_sh = tuple(
+            jax.tree.map(lambda _: lead if i == 0 else repl, p)
+            for i, p in enumerate(payloads))
+        out_spec = P(*(spec + tuple(None for _ in self.axes[1:])))
+        jfn = jax.jit(fn, in_shardings=in_sh,
+                      out_shardings=NamedSharding(mesh, out_spec))
+
+        def run_chunk(p0):
+            args = (jax.device_put(p0, lead),) + tuple(
+                jax.device_put(p, repl) for p in payloads[1:])
+            with mesh:
+                return jfn(*args)
+
+        if chunk_size is None or self.axes[0].length <= chunk_size:
+            return run_chunk(payloads[0])
+        return _concat_chunks(
+            [run_chunk(tuple(v[s:s + chunk_size] for v in payloads[0]))
+             for s in range(0, self.axes[0].length, chunk_size)])
+
+
+def _mesh_spec(mesh) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return P(tuple(axes))
+
+
+def _concat_chunks(parts: list[SimResult]) -> SimResult:
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+
+def sweep_grid(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
+               axes: Sequence[Axis], ci_trace=None, *,
+               dyn: dict | None = None, chunk_size: int | None = None,
+               mesh=None, jit: bool = True) -> SimResult:
+    """One-call entry point: `sweep_grid(tasks, hosts, cfg, [axis, ...])`.
+
+    `dyn` holds fixed (non-swept) traced scenario values applied to every grid
+    point, e.g. `dyn={"n_active_hosts": 12}` to run the whole grid on a
+    down-scaled datacenter.  See the module docstring for the axis zoo.
+    """
+    grid = ScenarioGrid(axes, base_dyn=dyn)
+    return grid.run(tasks, hosts, cfg, ci_trace, chunk_size=chunk_size,
+                    mesh=mesh, jit=jit)

@@ -12,12 +12,15 @@ from typing import Callable
 
 import jax.numpy as jnp
 
-from .state import HostTable
+from .state import HostTable, active_host_mask
 
 
-def with_scale(hosts: HostTable, n_active: int) -> HostTable:
-    idx = jnp.arange(hosts.cores.shape[0])
-    return hosts._replace(active=idx < n_active)
+def with_scale(hosts: HostTable, n_active) -> HostTable:
+    """Provision the first `n_active` hosts.  `n_active` may be a traced
+    scalar (dyn ctx key `n_active_hosts`), so scenario grids can sweep the
+    horizontal-scaling level inside one compiled program."""
+    return hosts._replace(
+        active=active_host_mask(hosts.cores.shape[0], n_active))
 
 
 def find_min_scale(eval_sla: Callable[[int], float], lo: int, hi: int,

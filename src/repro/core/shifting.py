@@ -16,14 +16,21 @@ import jax.numpy as jnp
 from .config import ShiftingConfig
 
 
-def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig):
-    """threshold[t] = `quantile` of ci over the forward window [t, t + window)."""
+def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig,
+                               quantile=None):
+    """threshold[t] = `quantile` of ci over the forward window [t, t + window).
+
+    `quantile` may be a traced scalar (dyn ctx key `shift_quantile_value`) so
+    scenario grids can sweep the threshold level inside one compiled program;
+    None falls back to the static `cfg.quantile`.
+    """
     ci = jnp.asarray(ci_trace, jnp.float32)
     s = ci.shape[0]
     w = max(int(round(cfg.forecast_window_h / dt_h)), 1)
     idx = jnp.minimum(jnp.arange(s)[:, None] + jnp.arange(w)[None, :], s - 1)
     windows = ci[idx]                                   # f32[S, W]
-    return jnp.quantile(windows, cfg.quantile, axis=1).astype(jnp.float32)
+    q = jnp.float32(cfg.quantile) if quantile is None else quantile
+    return jnp.quantile(windows, q, axis=1).astype(jnp.float32)
 
 
 def start_allowed(ci, threshold, now, arrival, cfg: ShiftingConfig):

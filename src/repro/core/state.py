@@ -24,6 +24,15 @@ INVALID = 3  # padding rows
 _INF = jnp.float32(jnp.inf)
 
 
+def active_host_mask(n_hosts: int, n_active) -> jax.Array:
+    """bool[n_hosts] marking the first `n_active` hosts as provisioned.
+
+    `n_active` may be a python int OR a traced scalar, which is what lets
+    horizontal scaling be a scenario-grid axis (core/grid.py) rather than a
+    recompile."""
+    return jnp.arange(n_hosts) < n_active
+
+
 class TaskTable(NamedTuple):
     """Padded struct-of-arrays task table, pre-sorted by arrival time.
 
@@ -52,9 +61,12 @@ class TaskTable(NamedTuple):
 
 
 class HostTable(NamedTuple):
-    """Host inventory.  `active` is the horizontal-scaling mask (static during a
-    run); `up` tracks failures.  Free capacity is recomputed from the task table
-    each step (robust against any interrupt path forgetting to release)."""
+    """Host inventory.  `active` is the horizontal-scaling mask (fixed during
+    a run, but it may be built from a *traced* host count — see
+    `active_host_mask` / dyn ctx key `n_active_hosts` — so scenario grids can
+    sweep the scaling level); `up` tracks failures.  Free capacity is
+    recomputed from the task table each step (robust against any interrupt
+    path forgetting to release)."""
 
     cores: jax.Array   # f32[H] total CPU cores per host
     n_gpus: jax.Array  # f32[H] GPUs per host
@@ -152,7 +164,6 @@ def make_host_table(n_hosts: int, cores_per_host: float, gpus_per_host: float = 
     SLA violations; a datacenter mitigates by over-provisioning (horizontal
     scaling interacts!) or draining, both expressible here."""
     n_active = n_hosts if n_active is None else n_active
-    idx = jnp.arange(n_hosts)
     speed = jnp.ones(n_hosts, jnp.float32)
     if straggler_frac > 0.0:
         k = jax.random.PRNGKey(seed)
@@ -161,7 +172,7 @@ def make_host_table(n_hosts: int, cores_per_host: float, gpus_per_host: float = 
     return HostTable(
         cores=jnp.full(n_hosts, cores_per_host, jnp.float32),
         n_gpus=jnp.full(n_hosts, gpus_per_host, jnp.float32),
-        active=(idx < n_active),
+        active=active_host_mask(n_hosts, n_active),
         up=jnp.ones(n_hosts, bool),
         repair_at=jnp.zeros(n_hosts, jnp.float32),
         speed=speed,

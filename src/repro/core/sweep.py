@@ -1,15 +1,14 @@
-"""Scenario sweeps: vmap over regions/parameters, pjit over the mesh.
+"""Legacy sweep shapes, kept API-compatible as thin wrappers over core/grid.py.
 
 The paper ran ~5,500 single-threaded simulations per workload on a CPU
-cluster.  Here a sweep is ONE tensor program: `vmap` turns the scenario axis
-(carbon region x battery size x seed) into a batch dimension and `jit` with
-NamedSharding shards it over the mesh's `data` axis.  This is the paper's
-"simulations are independent" observation expressed as SPMD — and the object
-whose roofline we analyse and hillclimb in EXPERIMENTS.md §Perf.
+cluster.  Here a sweep is ONE tensor program: the general N-dimensional
+engine in `core/grid.py` composes `vmap` over declared scenario axes and
+`jit`s the grid once; NamedSharding shards the leading axis over the mesh's
+data axes.  The three historical shapes below (regions, battery sizes,
+regions x battery) are each a one-line axis declaration now — new axes should
+use `sweep_grid` directly instead of adding wrappers here.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .config import SimConfig
 from .engine import simulate
+from .grid import dyn_axis, sweep_grid, trace_axis
 from .metrics import SimResult, summarize
 from .state import HostTable, TaskTable
 
@@ -32,10 +32,7 @@ def sweep_regions(tasks: TaskTable, hosts: HostTable, ci_traces, cfg: SimConfig,
 
     ci_traces: f32[R, S].  Returns a SimResult with leading axis R.
     """
-    fn = jax.vmap(lambda tr: _one(tasks, hosts, cfg, tr, None))
-    if jit:
-        fn = jax.jit(fn)
-    return fn(jnp.asarray(ci_traces, jnp.float32))
+    return sweep_grid(tasks, hosts, cfg, [trace_axis(ci_traces)], jit=jit)
 
 
 def sweep_battery_sizes(tasks: TaskTable, hosts: HostTable, ci_trace,
@@ -45,18 +42,11 @@ def sweep_battery_sizes(tasks: TaskTable, hosts: HostTable, ci_trace,
     region — one compiled program evaluates the whole curve (paper Fig 7/8)."""
     caps = jnp.asarray(capacities_kwh, jnp.float32)
     if rates_kw is None:
-        fn = jax.vmap(lambda c: _one(tasks, hosts, cfg, ci_trace,
-                                     {"batt_capacity_kwh": c}))
-        args = (caps,)
+        axis = dyn_axis(batt_capacity_kwh=caps)
     else:
-        rates = jnp.asarray(rates_kw, jnp.float32)
-        fn = jax.vmap(lambda c, r: _one(tasks, hosts, cfg, ci_trace,
-                                        {"batt_capacity_kwh": c,
-                                         "batt_rate_kw": r}))
-        args = (caps, rates)
-    if jit:
-        fn = jax.jit(fn)
-    return fn(*args)
+        axis = dyn_axis(batt_capacity_kwh=caps,
+                        batt_rate_kw=jnp.asarray(rates_kw, jnp.float32))
+    return sweep_grid(tasks, hosts, cfg, [axis], ci_trace=ci_trace, jit=jit)
 
 
 def sweep_regions_x_battery(tasks: TaskTable, hosts: HostTable, ci_traces,
@@ -64,14 +54,9 @@ def sweep_regions_x_battery(tasks: TaskTable, hosts: HostTable, ci_traces,
                             jit: bool = True) -> SimResult:
     """[R regions x C capacities] grid in one program (paper Fig 12)."""
     caps = jnp.asarray(capacities_kwh, jnp.float32)
-    traces = jnp.asarray(ci_traces, jnp.float32)
-    inner = jax.vmap(lambda tr, c: _one(tasks, hosts, cfg, tr,
-                                        {"batt_capacity_kwh": c}),
-                     in_axes=(None, 0))
-    fn = jax.vmap(inner, in_axes=(0, None))
-    if jit:
-        fn = jax.jit(fn)
-    return fn(traces, caps)
+    return sweep_grid(tasks, hosts, cfg,
+                      [trace_axis(ci_traces), dyn_axis(batt_capacity_kwh=caps)],
+                      jit=jit)
 
 
 # --------------------------------------------------------------------------
@@ -91,15 +76,7 @@ def sweep_step_fn(tasks: TaskTable, hosts: HostTable, cfg: SimConfig):
 def sharded_sweep(mesh, tasks: TaskTable, hosts: HostTable, ci_traces,
                   cfg: SimConfig) -> SimResult:
     """Shard the scenario axis of a region sweep over the mesh's data axes."""
-    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
-    spec = P(tuple(axes))
-    traces = jax.device_put(jnp.asarray(ci_traces, jnp.float32),
-                            NamedSharding(mesh, spec))
-    fn = jax.jit(sweep_step_fn(tasks, hosts, cfg),
-                 in_shardings=NamedSharding(mesh, spec),
-                 out_shardings=NamedSharding(mesh, spec))
-    with mesh:
-        return fn(traces)
+    return sweep_grid(tasks, hosts, cfg, [trace_axis(ci_traces)], mesh=mesh)
 
 
 def lower_sweep(mesh, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,

@@ -82,9 +82,15 @@ def test_forward_and_train_step(arch_id):
                 for a, b in zip(jax.tree.leaves(state.params),
                                 jax.tree.leaves(state1.params)))
     assert delta > 0
-    # second step on the same batch must reduce loss (sanity of gradients)
-    state2, m2 = step(state1, batch)
-    assert float(m2["loss"]) < float(m1["loss"]) + 1e-3, arch_id
+    # a few more steps on the same batch must reduce loss (sanity of
+    # gradients).  Compared after 3 steps, not 1: Adam's second-moment
+    # estimate is still warming up on step 2 and some hybrids (zamba2)
+    # transiently overshoot by ~1e-2 before descending.
+    m_last = m1
+    for _ in range(3):
+        state1, m_last = step(state1, batch)
+    assert float(m_last["loss"]) < float(m1["loss"]) - 1e-3, (
+        arch_id, float(m1["loss"]), float(m_last["loss"]))
 
 
 def test_decode_step(arch_id):

@@ -67,8 +67,16 @@ for shape, name in [((2, 2), "mesh_2x2"), ((1, 1), "mesh_1x1")]:
     mesh_b = jax.make_mesh(shape, ("data", "model"))
     st = ckpt.restore(ckdir, 3, state)
     st = place(st, mesh_b)
-    _, losses = run_steps(st, mesh_b, 2, 3)
+    st, losses = run_steps(st, mesh_b, 2, 3)
     results["continued"][name] = losses
+
+# progress probe, same-batch: loss on the FIRST training batch at the final
+# (restored-and-continued) params; comparing across different batches is
+# noisier than the training signal at 5 total steps.
+with ctx.use_mesh(mesh_b):
+    step = jax.jit(make_train_step(model, tcfg))
+    _, m = step(st, model.make_batch(jax.random.PRNGKey(100), cell))
+results["final_loss_batch0"] = float(m["loss"])
 
 print(json.dumps(results))
 """
@@ -87,5 +95,7 @@ def test_elastic_restore_across_mesh_sizes():
         for a, b in zip(ref, got):
             # identical math modulo reduction-order noise across device counts
             assert abs(a - b) < 5e-3, (name, ref, got)
-    # training is actually progressing
-    assert res["continued"]["mesh_1x1"][-1] < res["phase_a"][0]
+    # training is actually progressing: loss on batch 0 dropped from its
+    # untrained value after 5 elastic-restored steps (same-batch comparison
+    # — cross-batch loss differences are larger than 5 steps of progress)
+    assert res["final_loss_batch0"] < res["phase_a"][0]

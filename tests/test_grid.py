@@ -1,0 +1,209 @@
+"""Equivalence tests for the N-dimensional scenario-grid engine (core/grid.py).
+
+The contract: one compiled grid program == the nested Python loop of
+per-scenario `simulate()` calls, to <=1e-5 relative error, for every axis
+kind (trace / dyn / seed) and every execution mode (plain, chunked, sharded).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (BatteryConfig, FailureConfig, ShiftingConfig,
+                        SimConfig, dyn_axis, make_host_table, make_task_table,
+                        seed_axis, simulate, summarize, sweep_grid,
+                        trace_axis, with_scale)
+
+N_STEPS = 96  # 1 day at dt=0.25 — equivalence needs axis coverage, not horizon
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(0)
+    n = 12
+    tasks = make_task_table(np.sort(rng.uniform(0.0, 6.0, n)),
+                            rng.uniform(0.5, 4.0, n),
+                            rng.integers(1, 3, n).astype(float))
+    hosts = make_host_table(3, 4)
+    return tasks, hosts
+
+
+@pytest.fixture(scope="module")
+def traces():
+    t = np.arange(N_STEPS) * 0.25
+    return np.stack([300.0 + 200.0 * np.sin(2 * np.pi * t / 24.0 + p)
+                     for p in (0.0, 1.7)]).astype(np.float32)
+
+
+def _loop_ref(tasks, hosts, trace, cfg):
+    return summarize(simulate(tasks, hosts, trace, cfg)[0], cfg)
+
+
+def _assert_cell_close(res, idx, ref, rtol=1e-5):
+    for field, want in zip(res._fields, ref):
+        got = np.asarray(getattr(res, field))[idx]
+        np.testing.assert_allclose(got, np.asarray(want), rtol=rtol,
+                                   atol=1e-6, err_msg=f"{field} at {idx}")
+
+
+class TestGridMatchesLoop:
+    def test_regions_x_capacity_x_quantile(self, workload, traces):
+        """The acceptance grid: 3 axes, one program, <=1e-5 vs simulate()."""
+        tasks, hosts = workload
+        caps = np.array([2.0, 6.0], np.float32)
+        quants = np.array([0.25, 0.6], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS,
+                        battery=BatteryConfig(enabled=True),
+                        shifting=ShiftingConfig(enabled=True))
+        res = sweep_grid(tasks, hosts, cfg, [
+            trace_axis(traces),
+            dyn_axis(batt_capacity_kwh=caps),
+            dyn_axis(shift_quantile_value=quants),
+        ])
+        assert res.total_carbon_kg.shape == (2, 2, 2)
+        for r in range(2):
+            for c in range(2):
+                for q in range(2):
+                    cfg_l = cfg.replace(
+                        battery=BatteryConfig(enabled=True,
+                                              capacity_kwh=float(caps[c])),
+                        shifting=ShiftingConfig(enabled=True,
+                                                quantile=float(quants[q])))
+                    ref = _loop_ref(tasks, hosts, traces[r], cfg_l)
+                    _assert_cell_close(res, (r, c, q), ref)
+
+    def test_seed_and_scaling_axes(self, workload, traces):
+        """seed_axis drives the failure PRNG; n_active_hosts drives HS."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS,
+                        failures=FailureConfig(enabled=True, mtbf_h=30.0))
+        n_active = np.array([1, 2, 3])
+        seeds = [0, 7]
+        res = sweep_grid(tasks, hosts, cfg,
+                         [dyn_axis(n_active_hosts=n_active), seed_axis(seeds)],
+                         ci_trace=traces[0])
+        assert res.total_carbon_kg.shape == (3, 2)
+        for i, n in enumerate(n_active):
+            for j, s in enumerate(seeds):
+                cfg_l = cfg.replace(seed=int(s))
+                ref = _loop_ref(tasks, with_scale(hosts, int(n)), traces[0],
+                                cfg_l)
+                _assert_cell_close(res, (i, j), ref)
+
+    def test_zipped_dyn_axis(self, workload, traces):
+        """Two names in one dyn_axis sweep zipped (one dim, not a product)."""
+        tasks, hosts = workload
+        caps = np.array([3.0, 8.0], np.float32)
+        rates = np.array([6.0, 10.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        res = sweep_grid(tasks, hosts, cfg,
+                         [dyn_axis(batt_capacity_kwh=caps, batt_rate_kw=rates)],
+                         ci_trace=traces[0])
+        assert res.total_carbon_kg.shape == (2,)
+        for i in range(2):
+            final, _ = simulate(tasks, hosts, traces[0], cfg,
+                                dyn={"batt_capacity_kwh": caps[i],
+                                     "batt_rate_kw": rates[i]})
+            _assert_cell_close(res, (i,), summarize(final, cfg))
+
+
+class TestExecutionModes:
+    def test_chunked_matches_unchunked(self, workload, traces):
+        tasks, hosts = workload
+        caps = np.array([2.0, 4.0, 6.0], np.float32)  # ragged tail at chunk=2
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        axes = [dyn_axis(batt_capacity_kwh=caps), trace_axis(traces)]
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        chunked = sweep_grid(tasks, hosts, cfg, axes, chunk_size=2)
+        assert chunked.total_carbon_kg.shape == (3, 2)
+        for field in full._fields:
+            np.testing.assert_allclose(np.asarray(getattr(chunked, field)),
+                                       np.asarray(getattr(full, field)),
+                                       rtol=1e-6, err_msg=field)
+
+    def test_sharded_matches_unsharded(self, workload, traces):
+        tasks, hosts = workload
+        caps = np.array([2.0, 6.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        axes = [trace_axis(traces), dyn_axis(batt_capacity_kwh=caps)]
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+        sharded = sweep_grid(tasks, hosts, cfg, axes, mesh=mesh)
+        for field in full._fields:
+            np.testing.assert_allclose(np.asarray(getattr(sharded, field)),
+                                       np.asarray(getattr(full, field)),
+                                       rtol=1e-6, err_msg=field)
+
+    def test_sharded_chunked_multidevice(self):
+        """mesh + chunk_size with chunks NOT divisible by the device count:
+        chunks must round up to a device multiple instead of crashing.
+        Runs in a subprocess to force a 4-device host platform."""
+        import os
+        import subprocess
+        import sys
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core import (SimConfig, BatteryConfig, sweep_grid, trace_axis,
+                        dyn_axis, make_host_table, make_task_table)
+tasks = make_task_table([0.0, 1.0], [2.0, 2.0], [2.0, 2.0])
+hosts = make_host_table(2, 4)
+S = 48
+t = np.arange(S) * 0.25
+traces = np.stack([300 + 100 * np.sin(2 * np.pi * t / 24 + p)
+                   for p in np.linspace(0, 3, 8)]).astype(np.float32)
+cfg = SimConfig(n_steps=S, battery=BatteryConfig(enabled=True))
+mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+axes = [trace_axis(traces),
+        dyn_axis(batt_capacity_kwh=np.array([2.0, 5.0], np.float32))]
+full = sweep_grid(tasks, hosts, cfg, axes)
+for cs in (3, 4, 6):   # ragged vs device count, exact, tail-producing
+    got = sweep_grid(tasks, hosts, cfg, axes, mesh=mesh, chunk_size=cs)
+    assert np.allclose(np.asarray(got.total_carbon_kg),
+                       np.asarray(full.total_carbon_kg)), cs
+print("OK")
+"""
+        env = dict(os.environ, PYTHONPATH=os.path.join(
+            os.path.dirname(__file__), "..", "src"))
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=300,
+                             env=env)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert out.stdout.strip().endswith("OK")
+
+
+class TestValidation:
+    def test_duplicate_axis_name_rejected(self, traces):
+        with pytest.raises(ValueError, match="declared twice"):
+            sweep_grid(None, None, SimConfig(), [
+                dyn_axis(batt_capacity_kwh=np.ones(2)),
+                dyn_axis(batt_capacity_kwh=np.ones(3))])
+
+    def test_missing_trace_rejected(self, workload):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="pass ci_trace"):
+            sweep_grid(tasks, hosts, SimConfig(),
+                       [dyn_axis(batt_capacity_kwh=np.ones(2))])
+
+    def test_trace_axis_and_ci_trace_conflict(self, workload, traces):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="trace_axis"):
+            sweep_grid(tasks, hosts, SimConfig(), [trace_axis(traces)],
+                       ci_trace=traces[0])
+
+    def test_zip_length_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="disagree on length"):
+            dyn_axis(batt_capacity_kwh=np.ones(2), batt_rate_kw=np.ones(3))
+
+    def test_base_dyn_shadowing_rejected(self, workload, traces):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="shadow"):
+            sweep_grid(tasks, hosts, SimConfig(),
+                       [trace_axis(traces),
+                        dyn_axis(batt_capacity_kwh=np.ones(2))],
+                       dyn={"batt_capacity_kwh": 3.0})

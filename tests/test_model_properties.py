@@ -4,7 +4,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property-based tier")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models import layers as L
 from repro.train.compression import quantize_int8, dequantize_int8
