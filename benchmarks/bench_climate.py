@@ -1,0 +1,54 @@
+"""Beyond-paper (§XI direction): climate x carbon-region siting grid.
+
+The thermal subsystem makes PUE/WUE weather-driven, so siting is a joint
+(grid carbon) x (climate cooling-cost) question.  Grid: [climate x region]
+via `weather_axis` + `trace_axis` with cooling enabled — ONE compiled
+program; the diagonal is the physical siting choice, the off-diagonal the
+counterfactual "this grid in that climate".
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CoolingConfig, sweep_grid, trace_axis, weather_axis
+from repro.weathertraces.synthetic import make_weather_traces, weather_stats
+from .common import DT_H, pct, regions, save_rows, setup
+
+
+def run(quick: bool = True):
+    n = 8 if quick else 24
+    tasks, hosts, meta, cfg = setup("surf", quick)
+    cfg = cfg.replace(cooling=CoolingConfig(enabled=True))
+    ci = regions(n, cfg.n_steps)
+    wb = make_weather_traces(cfg.n_steps, DT_H, n, seed=0)
+    wb_mean, _ = weather_stats(wb)
+
+    res = sweep_grid(tasks, hosts, cfg,
+                     [weather_axis(wb), trace_axis(ci)])   # [W, R]
+    pue = np.asarray(res.pue)
+    wue = np.asarray(res.wue_l_per_kwh)
+    total = np.asarray(res.total_carbon_kg)
+
+    hot, cold = int(np.argmax(wb_mean)), int(np.argmin(wb_mean))
+    # same grid, hottest vs coolest climate: the pure cooling carbon penalty
+    penalty_pct = 100.0 * (total[hot] / np.maximum(total[cold], 1e-9) - 1.0)
+    rows = [{
+        "bench": "climate", "combo": "grid",
+        "metric": "pue_spread", "value": pct(pue.max() - pue.min()),
+        "pue_min": pct(pue.min()), "pue_max": pct(pue.max()),
+        "wue_max_l_per_kwh": pct(wue.max()),
+        "hot_vs_cold_carbon_pct_mean": pct(penalty_pct.mean()),
+        "wb_mean_c": [pct(x) for x in wb_mean],
+    }]
+    save_rows("climate", rows)
+    return rows
+
+
+def check(rows) -> list[str]:
+    r = rows[0]
+    ok = (r["pue_min"] >= 1.0 and r["value"] > 0
+          and r["hot_vs_cold_carbon_pct_mean"] > 0)
+    return [f"climate: PUE {r['pue_min']:.3f}-{r['pue_max']:.3f}, WUE up to "
+            f"{r['wue_max_l_per_kwh']:.2f} L/kWh; hottest climate costs "
+            f"{r['hot_vs_cold_carbon_pct_mean']:.1f}% more carbon than the "
+            f"coolest on the same grid ({'OK' if ok else 'FAIL'})"]

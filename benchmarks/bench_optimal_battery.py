@@ -1,9 +1,11 @@
 """Paper Fig 12 (F6): the optimal battery size shrinks when techniques are
 combined.
 
-Grid: a declared [regions x battery-capacity] `sweep_grid`, with and without
-temporal shifting; the optimal (argmax total-carbon-reduction) capacity per
-region is compared between the two settings.
+Grid: a declared [regions x battery-capacity] `sweep_grid` with an IN-PROGRAM
+`reduce=("argmin", 1)` — the argmin over capacities happens inside the
+compiled program, so the full [R, C] grid never reaches HBM; only the [R]
+optimal-capacity indices do.  With and without temporal shifting; the optimal
+capacity per region is compared between the two settings.
 """
 from __future__ import annotations
 
@@ -29,9 +31,8 @@ def run(quick: bool = True):
         "B+TS": cfg.replace(battery=battery_cfg(meta),
                             shifting=ShiftingConfig(enabled=True)),
     }.items():
-        res = sweep_grid(tasks, hosts, c, axes)
-        total = np.asarray(res.total_carbon_kg)      # [R, C]
-        best_idx = np.argmin(total, axis=1)
+        res = sweep_grid(tasks, hosts, c, axes, reduce=("argmin", 1))
+        best_idx = np.asarray(res.total_carbon_kg)   # [R] argmin over C
         best_caps = caps[best_idx]
         opt[label] = best_caps
         rows.append({

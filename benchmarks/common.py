@@ -27,10 +27,20 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 DT_H = 0.25
 
+# CI smoke mode (benchmarks.run --smoke): shrink every bench to a tiny grid —
+# 2-day horizon, smaller topology and task cap — so each module exercises the
+# full sweep API in seconds.  Smoke runs validate the plumbing, not the
+# paper claims; run.py skips the claim checks under --smoke.
+SMOKE = False
+
 
 def setup(workload: str, quick: bool, days: float | None = None,
           tasks_cap: int | None = None, scale: float = 0.05, seed: int = 0):
     """(tasks, hosts, meta, cfg, horizon_steps)"""
+    if SMOKE:
+        days = 2.0
+        scale = min(scale, 0.02)
+        tasks_cap = 256
     days = days or (7.0 if quick else 21.0)
     if tasks_cap is None:
         # borg is many tiny tasks on few huge hosts: it needs a larger cap or

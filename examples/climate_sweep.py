@@ -1,0 +1,75 @@
+"""Climate x carbon-region grid: where should the next datacenter go?
+
+The thermal subsystem (core/thermal.py) makes cooling overhead — and with it
+PUE and water use — a function of the local wet-bulb temperature, so siting
+becomes a JOINT question: the grid's carbon intensity AND the climate's
+cooling cost.  This example declares a climate x CI-region x cooling-setpoint
+grid and runs it as ONE compiled `sweep_grid` program; the correlated trace
+generators (weathertraces/ + carbontraces/, same seed) reproduce the
+real-world coupling where green grids tend to sit in cool climates.
+
+Run:  PYTHONPATH=src python examples/climate_sweep.py [--regions 12]
+"""
+import argparse
+
+import numpy as np
+
+from repro.carbontraces.synthetic import make_region_traces, trace_stats
+from repro.core import (CoolingConfig, SimConfig, dyn_axis, sweep_grid,
+                        trace_axis, weather_axis)
+from repro.weathertraces.synthetic import make_weather_traces, weather_stats
+from repro.workloads.synthetic import make_workload
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--regions", type=int, default=12)
+ap.add_argument("--workload", default="surf")
+args = ap.parse_args()
+
+DAYS, DT = 14, 0.25
+n_steps = int(DAYS * 24 / DT)
+tasks, hosts, spec, meta = make_workload(args.workload, scale=0.05,
+                                         n_tasks_cap=2048, horizon_days=DAYS)
+cfg = SimConfig(dt_h=DT, n_steps=n_steps, embodied=meta["embodied"],
+                cooling=CoolingConfig(enabled=True))
+
+# correlated trace families: region r's carbon AND climate, same seed
+ci = make_region_traces(n_steps, DT, args.regions, seed=0)
+wb = make_weather_traces(n_steps, DT, args.regions, seed=0)
+ci_mean, _ = trace_stats(ci, DT)
+wb_mean, wb_p95 = weather_stats(wb)
+print(f"{args.regions} sites: carbon {ci_mean.min():.0f}-{ci_mean.max():.0f} "
+      f"gCO2/kWh, mean wet-bulb {wb_mean.min():.1f}-{wb_mean.max():.1f} C")
+
+# the full cross product: every climate x every grid x two setpoints, ONE
+# program.  The diagonal (climate i, region i) is the physical siting option;
+# off-diagonal cells answer "what if this grid had that climate?"
+setpoints = np.asarray([22.0, 27.0], np.float32)
+res = sweep_grid(tasks, hosts, cfg, [
+    weather_axis(wb),
+    trace_axis(ci),
+    dyn_axis(cooling_setpoint=setpoints),
+])
+total = np.asarray(res.total_carbon_kg)   # [W, R, Q]
+pue = np.asarray(res.pue)
+wue = np.asarray(res.wue_l_per_kwh)
+
+print(f"\n{total.size}-scenario grid; dynamic PUE spans "
+      f"{pue.min():.3f}-{pue.max():.3f}, WUE {wue.min():.2f}-{wue.max():.2f} "
+      f"L/kWh(IT)")
+
+print(f"\n{'site':>4s} {'gCO2/kWh':>9s} {'wb C':>6s} {'PUE':>6s} "
+      f"{'WUE':>6s} {'kgCO2':>9s}")
+for r in np.argsort(ci_mean)[:8]:
+    print(f"{r:4d} {ci_mean[r]:9.0f} {wb_mean[r]:6.1f} {pue[r, r, 1]:6.3f} "
+          f"{wue[r, r, 1]:6.2f} {total[r, r, 1]:9.1f}")
+
+diag = np.arange(args.regions)
+best = int(np.argmin(total[diag, diag, 1]))
+print(f"\nbest physical site (diagonal, setpoint {setpoints[1]:.0f}C): "
+      f"region {best} — {ci_mean[best]:.0f} gCO2/kWh in a "
+      f"{wb_mean[best]:.1f} C climate")
+
+# raising the setpoint buys free-cooling hours everywhere:
+d_pue = pue[diag, diag, 0] - pue[diag, diag, 1]
+print(f"setpoint {setpoints[0]:.0f} -> {setpoints[1]:.0f} C cuts PUE by "
+      f"{d_pue.mean():.3f} on average (max {d_pue.max():.3f})")

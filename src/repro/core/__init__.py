@@ -1,12 +1,14 @@
 """steamx core: the OpenDC-STEAM technique, tensorized for TPU."""
-from .config import (BatteryConfig, EmbodiedConfig, FailureConfig,
-                     PowerModelConfig, SchedulerConfig, ShiftingConfig,
-                     SimConfig, techniques)
+from .config import (BatteryConfig, CoolingConfig, EmbodiedConfig,
+                     FailureConfig, PowerModelConfig, SchedulerConfig,
+                     ShiftingConfig, SimConfig, techniques)
 from .engine import (StepInputs, build_step_fn, build_step_inputs,
                      default_pipeline, simulate)
 from .grid import (Axis, ScenarioGrid, dyn_axis, seed_axis, sweep_grid,
-                   trace_axis)
+                   trace_axis, weather_axis)
 from .metrics import SimResult, carbon_reduction_pct, summarize
+from .thermal import (chiller_cop, cooling_step, dynamic_pue,
+                      economizer_fraction)
 from .scaling import find_min_scale, with_scale
 from .state import (DONE, INVALID, PENDING, RUNNING, BatteryState, HostTable,
                     MetricsAcc, SimState, TaskTable, active_host_mask,
@@ -16,11 +18,13 @@ from .sweep import (lower_sweep, sharded_sweep, sweep_battery_sizes,
                     sweep_regions, sweep_regions_x_battery)
 
 __all__ = [
-    "BatteryConfig", "EmbodiedConfig", "FailureConfig", "PowerModelConfig",
-    "SchedulerConfig", "ShiftingConfig", "SimConfig", "techniques",
-    "StepInputs", "build_step_fn", "build_step_inputs", "default_pipeline",
-    "simulate", "Axis", "ScenarioGrid", "dyn_axis", "seed_axis", "sweep_grid",
-    "trace_axis", "SimResult", "carbon_reduction_pct", "summarize",
+    "BatteryConfig", "CoolingConfig", "EmbodiedConfig", "FailureConfig",
+    "PowerModelConfig", "SchedulerConfig", "ShiftingConfig", "SimConfig",
+    "techniques", "StepInputs", "build_step_fn", "build_step_inputs",
+    "default_pipeline", "simulate", "Axis", "ScenarioGrid", "dyn_axis",
+    "seed_axis", "sweep_grid", "trace_axis", "weather_axis", "SimResult",
+    "carbon_reduction_pct", "summarize", "chiller_cop", "cooling_step",
+    "dynamic_pue", "economizer_fraction",
     "find_min_scale", "with_scale", "DONE", "INVALID", "PENDING", "RUNNING",
     "BatteryState", "HostTable", "MetricsAcc", "SimState", "TaskTable",
     "active_host_mask", "init_sim_state", "make_host_table", "make_task_table",

@@ -72,6 +72,27 @@ class EmbodiedConfig:
 
 
 @dataclass(frozen=True)
+class CoolingConfig:
+    """Weather-driven thermal/cooling model (core/thermal.py).
+
+    Disabled by default: the engine then hands IT power straight to the grid
+    (PUE == 1), reproducing the pre-cooling pipeline exactly.  Enabled, a
+    `stage_cooling` between power and battery converts IT power to *facility*
+    power from the wet-bulb temperature trace (weathertraces/), so battery
+    peak-shaving and carbon accounting see the cooling overhead.
+    """
+    enabled: bool = False
+    setpoint_c: float = 24.0         # chilled-supply setpoint (cold side)
+    economizer_range_c: float = 6.0  # wet-bulb this far below setpoint => free
+    tower_approach_c: float = 4.0    # condenser water = wet-bulb + approach
+    condenser_lift_c: float = 8.0    # extra lift through the condenser loop
+    carnot_efficiency: float = 0.45  # fraction of the Carnot COP achieved
+    max_cop: float = 8.0
+    fan_pump_overhead: float = 0.05  # CRAH fans + pumps, fraction of IT power
+    evap_l_per_kwh_heat: float = 1.5 # tower evaporation incl. blowdown
+
+
+@dataclass(frozen=True)
 class SchedulerConfig:
     # 'first_fit'  : exact bounded first-fit placement (K slots/step)
     # 'aggregate'  : capacity-only admission (analytical-model-like placement)
@@ -91,6 +112,7 @@ class SimConfig:
     battery: BatteryConfig = BatteryConfig()
     shifting: ShiftingConfig = ShiftingConfig()
     failures: FailureConfig = FailureConfig()
+    cooling: CoolingConfig = CoolingConfig()
     embodied: EmbodiedConfig = EmbodiedConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
     sla_grace_h: float = 24.0       # task meets SLA if done within 24h of expected

@@ -10,7 +10,12 @@ runtime dispatch.
 
 Default pipeline (order matters and mirrors OpenDC's event cascade):
   failures -> checkpoint -> task_stopper -> shifting_gate -> scheduler
-  -> progress -> utilization -> power -> battery -> carbon -> metrics
+  -> progress -> utilization -> power -> cooling -> battery -> carbon
+  -> metrics
+
+`stage_cooling` (cfg.cooling.enabled) sits between power and battery so that
+battery peak-shaving and carbon accounting operate on *facility* power
+(IT + weather-driven cooling overhead), not just IT power.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ from . import failures as failures_mod
 from . import scaling as scaling_mod
 from . import scheduler as scheduler_mod
 from . import shifting as shifting_mod
+from . import thermal as thermal_mod
 from .config import SimConfig
 from .power import host_power_kw
 from .state import (DONE, PENDING, RUNNING, HostTable, MetricsAcc, SimState,
@@ -39,6 +45,7 @@ class StepInputs(NamedTuple):
     batt_threshold: jax.Array  # f32[S]
     ci_rising: jax.Array       # bool[S]
     shift_threshold: jax.Array # f32[S]
+    wet_bulb_c: jax.Array      # f32[S] wet-bulb temperature (cooling weather)
 
 
 def build_step_inputs(ci_trace, cfg: SimConfig,
@@ -53,8 +60,16 @@ def build_step_inputs(ci_trace, cfg: SimConfig,
               ci, cfg.dt_h, cfg.shifting,
               quantile=dyn.get("shift_quantile_value"))
           if cfg.shifting.enabled else jnp.zeros_like(ci))
+    wb = dyn.get("wet_bulb_trace")
+    if wb is None:
+        wb = jnp.full_like(ci, cfg.cooling.setpoint_c)  # weatherless: worst case
+    else:
+        wb = jnp.asarray(wb, jnp.float32)
+        assert wb.shape[0] >= cfg.n_steps, (
+            f"weather trace too short: {wb.shape[0]} < {cfg.n_steps}")
+        wb = wb[: cfg.n_steps]
     return StepInputs(ci=ci, batt_threshold=bt, ci_rising=rising,
-                      shift_threshold=st)
+                      shift_threshold=st, wet_bulb_c=wb)
 
 
 # --------------------------------------------------------------------------
@@ -146,6 +161,17 @@ def stage_power(cfg: SimConfig) -> Stage:
             ctx["max_overcommit"] = jnp.maximum(jnp.max(-free_c), jnp.max(-free_g))
         if cfg.use_pallas:
             from repro.kernels import ops as pc_ops
+            if cfg.cooling.enabled:
+                # one VMEM pass: per-host power + IT sum + cooling + water
+                sp = ctx.get("cooling_setpoint", cfg.cooling.setpoint_c)
+                p, it_kw, cool_kw, water = pc_ops.facility_power(
+                    cpu_u, gpu_u, state.hosts.n_gpus, on, ctx["wet_bulb_c"],
+                    sp, cfg.cpu_power, cfg.gpu_power, cfg.cooling)
+                ctx = dict(ctx, host_power_kw=p, dc_power_kw=it_kw,
+                           host_cpu_util=cpu_u, host_gpu_util=gpu_u,
+                           fused_cooling_kw=cool_kw,
+                           fused_water_l_per_h=water)
+                return state, ctx
             p = pc_ops.host_power(cpu_u, gpu_u, state.hosts.n_gpus, on,
                                   cfg.cpu_power, cfg.gpu_power)
         else:
@@ -154,6 +180,32 @@ def stage_power(cfg: SimConfig) -> Stage:
         ctx = dict(ctx, host_power_kw=p, dc_power_kw=jnp.sum(p),
                    host_cpu_util=cpu_u, host_gpu_util=gpu_u)
         return state, ctx
+    return fn
+
+
+def stage_cooling(cfg: SimConfig) -> Stage:
+    """IT power -> facility power: weather-driven cooling overhead + water.
+
+    Sits between `stage_power` and `stage_battery` so downstream stages
+    (battery peak-shaving, carbon accounting, peak-power tracking) see the
+    facility draw.  `cooling_setpoint` may be a traced dyn value (grid axis).
+    """
+    def fn(state: SimState, ctx: dict):
+        it_kw = ctx["dc_power_kw"]
+        if "fused_cooling_kw" in ctx:   # Pallas path: computed in stage_power
+            cooling_kw = ctx["fused_cooling_kw"]
+            water_l_per_h = ctx["fused_water_l_per_h"]
+        else:
+            cooling_kw, water_l_per_h = thermal_mod.cooling_step(
+                it_kw, ctx["wet_bulb_c"], cfg.cooling,
+                setpoint_c=ctx.get("cooling_setpoint"))
+        m = state.metrics
+        metrics = m._replace(
+            cooling_energy=m.cooling_energy + cooling_kw * cfg.dt_h,
+            water_l=m.water_l + water_l_per_h * cfg.dt_h)
+        ctx = dict(ctx, it_power_kw=it_kw, cooling_power_kw=cooling_kw,
+                   dc_power_kw=it_kw + cooling_kw)
+        return state._replace(metrics=metrics), ctx
     return fn
 
 
@@ -187,11 +239,13 @@ def stage_carbon(cfg: SimConfig) -> Stage:
         op, emb = carbon_mod.carbon_delta(grid_kw, ctx["ci"], cfg.dt_h,
                                           n_active, cfg.embodied, batt_rate)
         m = state.metrics
+        it_kw = ctx.get("it_power_kw", ctx["dc_power_kw"])
         metrics = m._replace(
             op_carbon=m.op_carbon + op,
             emb_carbon=m.emb_carbon + emb,
             grid_energy=m.grid_energy + grid_kw * cfg.dt_h,
             dc_energy=m.dc_energy + ctx["dc_power_kw"] * cfg.dt_h,
+            it_energy=m.it_energy + it_kw * cfg.dt_h,
             peak_power=jnp.maximum(m.peak_power, grid_kw))
         return state._replace(metrics=metrics), ctx
     return fn
@@ -211,6 +265,8 @@ def default_pipeline(cfg: SimConfig) -> list[Stage]:
     if cfg.shifting.enabled and cfg.shifting.stop_running:
         stages.append(stage_task_stopper(cfg))
     stages += [stage_scheduler(cfg), stage_progress(cfg), stage_power(cfg)]
+    if cfg.cooling.enabled:
+        stages.append(stage_cooling(cfg))
     if cfg.battery.enabled:
         stages.append(stage_battery(cfg))
     stages.append(stage_carbon(cfg))
@@ -229,7 +285,8 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
     def step(state: SimState, inputs: StepInputs):
         ctx = {"ci": inputs.ci, "batt_threshold": inputs.batt_threshold,
                "ci_rising": inputs.ci_rising,
-               "shift_threshold": inputs.shift_threshold, **dyn}
+               "shift_threshold": inputs.shift_threshold,
+               "wet_bulb_c": inputs.wet_bulb_c, **dyn}
         for stage in stages:
             state, ctx = stage(state, ctx)
         state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
@@ -240,6 +297,9 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
                                        .astype(jnp.int32)),
                   "battery_charge": state.battery.charge,
                   "max_overcommit": ctx.get("max_overcommit", jnp.float32(0.0))}
+            if cfg.cooling.enabled:
+                ys["cooling_power_kw"] = ctx["cooling_power_kw"]
+                ys["wet_bulb_c"] = ctx["wet_bulb_c"]
         else:
             ys = None
         return state, ys
@@ -248,19 +308,25 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
 
 
 def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
-             stages: Sequence[Stage] | None = None, dyn: dict | None = None):
+             stages: Sequence[Stage] | None = None, dyn: dict | None = None,
+             weather_trace=None):
     """Run one simulation.  Returns (final SimState, per-step series or None).
 
     jit-able; vmap over scenario axes is done by core/grid.py.  `dyn` holds
     traced scenario parameters that static config cannot sweep without
     recompiling: `batt_capacity_kwh` / `batt_rate_kw` (battery sizing),
     `shift_quantile_value` (shifting threshold level), `n_active_hosts`
-    (horizontal-scaling mask) and `seed` (failure-model PRNG).
+    (horizontal-scaling mask), `cooling_setpoint` (thermal setpoint),
+    `wet_bulb_trace` (f32[S] weather series, also settable via the
+    `weather_trace` argument) and `seed` (failure-model PRNG).
     """
     dyn = dict(dyn) if dyn else {}
+    if weather_trace is not None:
+        dyn["wet_bulb_trace"] = weather_trace
     if "n_active_hosts" in dyn:
         hosts = scaling_mod.with_scale(hosts, dyn["n_active_hosts"])
     inputs = build_step_inputs(ci_trace, cfg, dyn=dyn)
+    dyn.pop("wet_bulb_trace", None)  # consumed by the inputs, not a ctx key
     state0 = init_sim_state(tasks, hosts, dyn.get("seed", cfg.seed))
     step = build_step_fn(cfg, stages, dyn)
     final, series = jax.lax.scan(step, state0, inputs)

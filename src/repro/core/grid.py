@@ -13,35 +13,53 @@ bound memory, and optionally shards the leading axis over a mesh via
 Axis kinds:
   * `trace_axis(traces)` — carbon-region traces `f32[R, S]`; at most one per
     grid (it becomes the `ci_trace` argument of `simulate`).
+  * `weather_axis(traces)` — wet-bulb temperature traces `f32[W, S]`
+    (weathertraces/synthetic.py) driving the thermal subsystem
+    (core/thermal.py); requires `cfg.cooling.enabled`.  Composes a climate
+    dimension orthogonal to the carbon-region dimension.
   * `dyn_axis(**named_values)` — traced scenario scalars fed to the engine as
     dyn ctx keys.  Several names in one call sweep *zipped* (one grid dim);
     separate calls sweep as a cross product (separate dims).  Understood keys:
       - `batt_capacity_kwh`, `batt_rate_kw`  (battery sizing, core/battery.py)
       - `shift_quantile_value`               (shifting threshold, core/shifting.py)
       - `n_active_hosts`                     (horizontal scaling, core/scaling.py)
+      - `cooling_setpoint`                   (thermal setpoint, core/thermal.py)
   * `seed_axis(seeds)` — PRNG seeds for the stochastic failure model.
 
-Usage — a regions x battery-capacity x shift-quantile grid in one program::
+Usage — a climate x regions x battery-capacity grid in one program::
 
-    from repro.core.grid import dyn_axis, seed_axis, sweep_grid, trace_axis
+    from repro.core.grid import (dyn_axis, seed_axis, sweep_grid, trace_axis,
+                                 weather_axis)
 
     res = sweep_grid(tasks, hosts, cfg, [
+        weather_axis(wb_traces),                      # f32[W, S]
         trace_axis(region_traces),                    # f32[R, S]
         dyn_axis(batt_capacity_kwh=caps),             # f32[C]
-        dyn_axis(shift_quantile_value=quantiles),     # f32[Q]
     ])
-    # res is a SimResult whose every field has shape [R, C, Q]
+    # res is a SimResult whose every field has shape [W, R, C]
 
     # bound memory / shard over a mesh without touching the axes:
     res = sweep_grid(tasks, hosts, cfg, axes, chunk_size=16)
     res = sweep_grid(tasks, hosts, cfg, axes, mesh=mesh)
 
+    # reduce INSIDE the compiled program (optimal-X studies never
+    # materialize the full grid): per-field min/argmin over axis 1
+    best = sweep_grid(tasks, hosts, cfg, axes, reduce=("min", 1))
+    best_idx = sweep_grid(tasks, hosts, cfg, axes, reduce=("argmin", 1))
+
+When `chunk_size` is omitted, it is derived automatically from a
+device-memory budget (`memory_budget_bytes`, default from
+`$STEAM_SWEEP_MEMORY_BUDGET_MB` or 4 GiB): grids whose estimated working set
+fits the budget run unchunked — exactly the old behaviour — while larger
+grids chunk instead of OOMing.
+
 Swept config knobs must be *enabled* statically (`cfg.battery.enabled`,
-`cfg.shifting.enabled`) — the dyn value modulates an enabled technique; the
-enable flag itself switches the compiled pipeline.
+`cfg.shifting.enabled`, `cfg.cooling.enabled`) — the dyn value modulates an
+enabled technique; the enable flag itself switches the compiled pipeline.
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Sequence
 
 import jax
@@ -49,18 +67,22 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .config import SimConfig
-from .engine import simulate
+from .engine import StepInputs, simulate
 from .metrics import SimResult, summarize
 from .state import HostTable, TaskTable
 
 TRACE_KEY = "ci_trace"
 SEED_KEY = "seed"
+WEATHER_KEY = "wet_bulb_trace"
+
+_REDUCERS = {"min": jnp.min, "max": jnp.max,
+             "argmin": jnp.argmin, "argmax": jnp.argmax}
 
 
 class Axis(NamedTuple):
     """One grid dimension: `names[j]` is swept with `values[j]` (zipped)."""
 
-    kind: str                      # 'trace' | 'dyn' | 'seed'
+    kind: str                      # 'trace' | 'weather' | 'dyn' | 'seed'
     names: tuple[str, ...]         # dyn ctx keys (TRACE_KEY / SEED_KEY special)
     values: tuple[jax.Array, ...]  # equal leading dims = the axis length
 
@@ -91,9 +113,44 @@ def dyn_axis(**named_values) -> Axis:
     return Axis("dyn", names, values)
 
 
+def weather_axis(wb_traces) -> Axis:
+    """Climate axis: wet-bulb traces f32[W, S] -> one grid dim of length W.
+    Drives the thermal subsystem; requires `cfg.cooling.enabled`."""
+    traces = jnp.asarray(wb_traces, jnp.float32)
+    assert traces.ndim == 2, f"weather_axis wants f32[W, S], got {traces.shape}"
+    return Axis("weather", (WEATHER_KEY,), (traces,))
+
+
 def seed_axis(seeds) -> Axis:
     """PRNG-seed axis (stochastic failures replicate across seeds)."""
     return Axis("seed", (SEED_KEY,), (jnp.asarray(seeds, jnp.int32),))
+
+
+def _normalize_reduce(reduce, ndim: int):
+    """Validate a (op, axis) reduction spec; returns (op, positive_axis)."""
+    if reduce is None:
+        return None
+    op, axis = reduce
+    if op not in _REDUCERS:
+        raise ValueError(f"unknown reduce op '{op}'; "
+                         f"pick one of {sorted(_REDUCERS)}")
+    axis = int(axis)
+    if not -ndim <= axis < ndim:
+        raise ValueError(f"reduce axis {axis} out of range for a "
+                         f"{ndim}-dimensional grid")
+    return op, axis % ndim
+
+
+def _apply_reduce(fn, red):
+    """Wrap the grid fn so each SimResult field is reduced over `axis`
+    INSIDE the compiled program (the full grid never reaches HBM)."""
+    op, axis = red
+    reducer = _REDUCERS[op]
+
+    def reduced(*payloads):
+        return jax.tree.map(lambda x: reducer(x, axis=axis), fn(*payloads))
+
+    return reduced
 
 
 class ScenarioGrid:
@@ -164,35 +221,104 @@ class ScenarioGrid:
             fn = jax.vmap(fn, in_axes=tuple(in_axes))
         return fn
 
+    def _check_cfg(self, cfg: SimConfig):
+        if (not cfg.cooling.enabled
+                and any(ax.kind == "weather" for ax in self.axes)):
+            raise ValueError("grid has a weather_axis but cfg.cooling.enabled "
+                             "is False: the wet-bulb trace would be ignored")
+
     def run(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
             ci_trace=None, *, chunk_size: int | None = None, mesh=None,
-            jit: bool = True) -> SimResult:
+            jit: bool = True, reduce: tuple[str, int] | None = None,
+            memory_budget_bytes: float | None = None) -> SimResult:
         """Evaluate the whole grid.  Returns a SimResult with leading
-        dimensions `self.shape`.
+        dimensions `self.shape` (minus the reduced axis, if any).
 
         chunk_size: split the LEADING axis into chunks of at most this many
           points, running one compiled program per chunk (bounds peak memory;
           equal-size chunks share one compilation, a ragged tail adds one).
+          When omitted, a chunk size is derived from `memory_budget_bytes`
+          ($STEAM_SWEEP_MEMORY_BUDGET_MB, default 4 GiB): grids whose
+          estimated working set fits run unchunked.
         mesh: shard the leading axis over the mesh's ('pod','data') axes with
           NamedSharding — the production SPMD path.  Combined with
           chunk_size, chunks are rounded up to a multiple of the mesh's
           device count (sharding needs every chunk to divide evenly).
+        reduce: (op, axis) with op in {'min','max','argmin','argmax'} —
+          reduce every SimResult field over that grid axis INSIDE the
+          compiled program, so optimal-battery-style studies never
+          materialize the full grid.  The reduced axis must not be the
+          leading one when the run is chunked.
         """
         if chunk_size is not None and chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        self._check_cfg(cfg)
+        red = _normalize_reduce(reduce, len(self.axes))
         fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
+        if red is not None:
+            fn = _apply_reduce(fn, red)
         payloads = self.payloads()
+        if chunk_size is None:
+            chunk_size = self._auto_chunk_size(tasks, hosts, cfg,
+                                               memory_budget_bytes)
+        if (red is not None and red[1] == 0
+                and self.axes[0].length > chunk_size):
+            raise ValueError(
+                "cannot reduce over the leading axis of a chunked grid: "
+                "move the reduced axis off axis 0, raise the memory budget, "
+                "or pass an explicit chunk_size >= its length")
         if mesh is not None:
-            return self._run_sharded(fn, payloads, mesh, chunk_size)
+            return self._run_sharded(fn, payloads, mesh, chunk_size, red)
         if jit:
             fn = jax.jit(fn)
-        if chunk_size is None or self.axes[0].length <= chunk_size:
+        if self.axes[0].length <= chunk_size:
             return fn(*payloads)
         return _concat_chunks(
             [fn(tuple(v[s:s + chunk_size] for v in payloads[0]), *payloads[1:])
              for s in range(0, self.axes[0].length, chunk_size)])
 
-    def _run_sharded(self, fn, payloads, mesh, chunk_size):
+    def _auto_chunk_size(self, tasks, hosts, cfg: SimConfig,
+                         budget_bytes: float | None) -> int:
+        """Chunk size from a device-memory budget (ROADMAP auto-chunking).
+
+        Bytes per grid cell = the vmapped scan carry (task + host tables,
+        double-buffered by the scan) + the per-cell StepInputs series + the
+        cell's slice of the output pytree (SimResult: one scalar per field).
+        The leading axis is chunked so `chunk * cells_per_leading_point *
+        bytes_per_cell` fits the budget; a grid under budget returns its full
+        leading length (i.e. runs unchunked, the legacy behaviour).
+        """
+        if budget_bytes is None:
+            budget_bytes = float(os.environ.get(
+                "STEAM_SWEEP_MEMORY_BUDGET_MB", 4096)) * 2**20
+        lead = self.axes[0].length
+        carry_bytes = sum(jnp.asarray(x).size * jnp.asarray(x).dtype.itemsize
+                          for x in (*jax.tree.leaves(tasks),
+                                    *jax.tree.leaves(hosts)))
+        inputs_bytes = len(StepInputs._fields) * cfg.n_steps * 4  # f32[S] each
+        out_bytes = len(SimResult._fields) * 4
+        per_cell = 2 * carry_bytes + inputs_bytes + out_bytes
+        per_lead = per_cell * (self.n_scenarios / max(lead, 1))
+        return max(1, min(lead, int(budget_bytes // max(per_lead, 1.0))))
+
+    def _shardings(self, mesh, red=None):
+        """(in_shardings, out_sharding, lead, repl) for this grid on `mesh`."""
+        spec = _mesh_spec(mesh)
+        lead = NamedSharding(mesh, spec)
+        repl = NamedSharding(mesh, P())
+        in_sh = tuple(
+            jax.tree.map(lambda _: lead if i == 0 else repl, p)
+            for i, p in enumerate(self.payloads()))
+        n = len(self.axes)
+        if red is None:
+            out_spec = P(*(spec + tuple(None for _ in self.axes[1:])))
+        elif red[1] == 0:  # the sharded axis is reduced away -> replicated
+            out_spec = P(*(None,) * (n - 1))
+        else:
+            out_spec = P(*(spec + tuple(None for _ in range(n - 2))))
+        return in_sh, NamedSharding(mesh, out_spec), lead, repl
+
+    def _run_sharded(self, fn, payloads, mesh, chunk_size, red=None):
         spec = _mesh_spec(mesh)
         if chunk_size is not None:
             # NamedSharding requires each chunk's leading dim to divide evenly
@@ -204,14 +330,8 @@ class ScenarioGrid:
             for a in (spec[0] or ()):
                 ndev *= sizes[a]
             chunk_size = max(ndev, -(-chunk_size // ndev) * ndev)
-        lead = NamedSharding(mesh, spec)
-        repl = NamedSharding(mesh, P())
-        in_sh = tuple(
-            jax.tree.map(lambda _: lead if i == 0 else repl, p)
-            for i, p in enumerate(payloads))
-        out_spec = P(*(spec + tuple(None for _ in self.axes[1:])))
-        jfn = jax.jit(fn, in_shardings=in_sh,
-                      out_shardings=NamedSharding(mesh, out_spec))
+        in_sh, out_sh, lead, repl = self._shardings(mesh, red)
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
 
         def run_chunk(p0):
             args = (jax.device_put(p0, lead),) + tuple(
@@ -224,6 +344,32 @@ class ScenarioGrid:
         return _concat_chunks(
             [run_chunk(tuple(v[s:s + chunk_size] for v in payloads[0]))
              for s in range(0, self.axes[0].length, chunk_size)])
+
+    def lower(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
+              ci_trace=None, *, mesh=None,
+              reduce: tuple[str, int] | None = None):
+        """Lower (without running) the whole-grid program.
+
+        Generalizes the old region-only `lower_sweep`: ANY declared grid —
+        climate x region x battery, reductions included — lowers to one
+        program whose compiled HLO feeds the roofline analyzer
+        (launch/hlo_analysis.analyze) and dry-run memory analysis.  Payload
+        values are passed abstractly (ShapeDtypeStructs), so lowering a
+        paper-scale grid allocates nothing.
+        """
+        self._check_cfg(cfg)
+        red = _normalize_reduce(reduce, len(self.axes))
+        fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
+        if red is not None:
+            fn = _apply_reduce(fn, red)
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.payloads())
+        if mesh is None:
+            return jax.jit(fn).lower(*abstract)
+        in_sh, out_sh, _, _ = self._shardings(mesh, red)
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        with mesh:
+            return jfn.lower(*abstract)
 
 
 def _mesh_spec(mesh) -> P:
@@ -238,13 +384,17 @@ def _concat_chunks(parts: list[SimResult]) -> SimResult:
 def sweep_grid(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
                axes: Sequence[Axis], ci_trace=None, *,
                dyn: dict | None = None, chunk_size: int | None = None,
-               mesh=None, jit: bool = True) -> SimResult:
+               mesh=None, jit: bool = True,
+               reduce: tuple[str, int] | None = None,
+               memory_budget_bytes: float | None = None) -> SimResult:
     """One-call entry point: `sweep_grid(tasks, hosts, cfg, [axis, ...])`.
 
     `dyn` holds fixed (non-swept) traced scenario values applied to every grid
     point, e.g. `dyn={"n_active_hosts": 12}` to run the whole grid on a
-    down-scaled datacenter.  See the module docstring for the axis zoo.
+    down-scaled datacenter.  `reduce=(op, axis)` folds an axis inside the
+    compiled program.  See the module docstring for the axis zoo.
     """
     grid = ScenarioGrid(axes, base_dyn=dyn)
     return grid.run(tasks, hosts, cfg, ci_trace, chunk_size=chunk_size,
-                    mesh=mesh, jit=jit)
+                    mesh=mesh, jit=jit, reduce=reduce,
+                    memory_budget_bytes=memory_budget_bytes)

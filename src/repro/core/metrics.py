@@ -22,7 +22,12 @@ class SimResult(NamedTuple):
     op_carbon_kg: jax.Array
     emb_carbon_kg: jax.Array
     grid_energy_kwh: jax.Array
-    dc_energy_kwh: jax.Array
+    dc_energy_kwh: jax.Array       # facility energy (IT + cooling)
+    it_energy_kwh: jax.Array       # IT-equipment energy
+    cooling_energy_kwh: jax.Array  # 0 unless cfg.cooling.enabled
+    water_l: jax.Array             # cooling-tower evaporation (on-site)
+    pue: jax.Array                 # dc_energy / it_energy (1.0 w/o cooling)
+    wue_l_per_kwh: jax.Array       # water_l / it_energy (0.0 w/o cooling)
     peak_power_kw: jax.Array
     sla_violation_frac: jax.Array
     mean_delay_h: jax.Array        # mean(finish - arrival - duration) over done
@@ -59,12 +64,18 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
     n_started = jnp.maximum(jnp.sum(started.astype(jnp.float32)), 1.0)
     sdelay = jnp.where(started, tasks.first_start - tasks.arrival, 0.0)
 
+    it_safe = jnp.maximum(m.it_energy, 1e-9)
     return SimResult(
         total_carbon_kg=m.op_carbon + m.emb_carbon,
         op_carbon_kg=m.op_carbon,
         emb_carbon_kg=m.emb_carbon,
         grid_energy_kwh=m.grid_energy,
         dc_energy_kwh=m.dc_energy,
+        it_energy_kwh=m.it_energy,
+        cooling_energy_kwh=m.cooling_energy,
+        water_l=m.water_l,
+        pue=m.dc_energy / it_safe,
+        wue_l_per_kwh=m.water_l / it_safe,
         peak_power_kw=m.peak_power,
         sla_violation_frac=n_viol / n_decided,
         mean_delay_h=jnp.sum(delay) / n_done,
@@ -97,11 +108,24 @@ class SustainabilityExtras(NamedTuple):
 
 def sustainability_extras(res: SimResult, *, wue_l_per_kwh: float = 1.8,
                           water_intensity_l_per_kwh: float = 1.6,
-                          price_per_kwh: float = 0.12) -> SustainabilityExtras:
-    """WUE (on-site, evaporative cooling ~1.8 L/kWh), upstream water
-    intensity of generation (~1.6 L/kWh grid average), flat tariff.
+                          price_per_kwh: float = 0.12,
+                          simulated_water: bool | None = None,
+                          ) -> SustainabilityExtras:
+    """On-site water: the *simulated* cooling-tower evaporation when the
+    thermal subsystem ran, else the legacy flat-WUE estimate (~1.8 L/kWh).
+    Pass `simulated_water` explicitly when you know whether cooling was
+    simulated (`cfg.cooling.enabled`); by default it is inferred per cell
+    from `cooling_energy_kwh > 0`, which only misfires in the degenerate
+    zero-fan-overhead fully-economized case.  Upstream water intensity of
+    generation (~1.6 L/kWh grid average) and a flat tariff as before.
     Regionalized values can be passed per sweep exactly like carbon traces."""
-    water = (res.dc_energy_kwh * wue_l_per_kwh
-             + res.grid_energy_kwh * water_intensity_l_per_kwh)
+    if simulated_water is None:
+        onsite = jnp.where(res.cooling_energy_kwh > 0.0, res.water_l,
+                           res.dc_energy_kwh * wue_l_per_kwh)
+    elif simulated_water:
+        onsite = res.water_l
+    else:
+        onsite = res.dc_energy_kwh * wue_l_per_kwh
+    water = onsite + res.grid_energy_kwh * water_intensity_l_per_kwh
     return SustainabilityExtras(water_l=water,
                                 energy_cost=res.grid_energy_kwh * price_per_kwh)

@@ -85,7 +85,10 @@ class MetricsAcc(NamedTuple):
     op_carbon: jax.Array       # f32[] kg CO2 from grid energy
     emb_carbon: jax.Array      # f32[] kg CO2 embodied (hosts + battery share)
     grid_energy: jax.Array     # f32[] kWh drawn from the grid
-    dc_energy: jax.Array       # f32[] kWh consumed by the datacenter itself
+    dc_energy: jax.Array       # f32[] kWh facility total (IT + cooling)
+    it_energy: jax.Array       # f32[] kWh consumed by the IT equipment
+    cooling_energy: jax.Array  # f32[] kWh consumed by cooling (0 if disabled)
+    water_l: jax.Array         # f32[] litres evaporated by the cooling tower
     peak_power: jax.Array      # f32[] kW max grid draw
     batt_discharged: jax.Array # f32[] kWh served from the battery
     n_interrupts: jax.Array    # f32[] task interruptions (failures + stops)
@@ -186,6 +189,7 @@ def init_battery() -> BatteryState:
 def init_metrics() -> MetricsAcc:
     z = jnp.float32(0.0)
     return MetricsAcc(op_carbon=z, emb_carbon=z, grid_energy=z, dc_energy=z,
+                      it_energy=z, cooling_energy=z, water_l=z,
                       peak_power=z, batt_discharged=z, n_interrupts=z,
                       n_shift_delays=z)
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .config import SimConfig
 from .engine import simulate
@@ -81,12 +80,13 @@ def sharded_sweep(mesh, tasks: TaskTable, hosts: HostTable, ci_traces,
 
 def lower_sweep(mesh, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
                 n_regions: int, n_steps: int):
-    """Lower (without running) the sweep for dry-run/roofline analysis."""
-    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
-    spec = P(tuple(axes))
-    traces_spec = jax.ShapeDtypeStruct((n_regions, n_steps), jnp.float32)
-    fn = jax.jit(sweep_step_fn(tasks, hosts, cfg),
-                 in_shardings=NamedSharding(mesh, spec),
-                 out_shardings=NamedSharding(mesh, P()))
-    with mesh:
-        return fn.lower(traces_spec)
+    """Lower (without running) the region sweep for dry-run/roofline analysis.
+
+    Thin wrapper over `ScenarioGrid.lower`, which lowers ARBITRARY grids
+    (any axis combination, chunking-free, reductions included) — use that
+    directly for anything beyond the historical region-sweep shape.
+    """
+    from .grid import ScenarioGrid, trace_axis
+    grid = ScenarioGrid([trace_axis(jnp.zeros((n_regions, n_steps),
+                                              jnp.float32))])
+    return grid.lower(tasks, hosts, cfg, mesh=mesh)

@@ -1,0 +1,86 @@
+"""Weather-driven cooling: chiller + free-cooling economizer + cooling tower.
+
+The engine's `stage_power` yields *IT* power; this module converts it into
+*facility* power and on-site water use, per step, from the wet-bulb
+temperature (weathertraces/) and the cooling setpoint:
+
+  * A fixed fan/pump overhead (CRAH fans, chilled-water pumps) scales with IT
+    load regardless of weather.
+  * A water-side economizer carries the whole heat load for free when the
+    wet-bulb temperature is at least `economizer_range_c` below the setpoint;
+    in between, the chiller duty ramps linearly to 1 (partial free cooling).
+  * The chiller is a Carnot-fraction machine: the cooling tower supplies
+    condenser water at wet-bulb + approach, so the compressor lift — and with
+    it COP — is a function of weather.  COP is monotone non-increasing in
+    wet-bulb temperature and clipped to a realistic [1, max] band.
+  * Chiller-path heat (load + compressor work) is rejected through the wet
+    tower by evaporation; economized heat uses dry coils and consumes no
+    water.  Litres evaporated per kWh of heat rejected folds latent heat and
+    blowdown into one calibrated constant.
+
+Everything is elementwise jnp on traced scalars, so the whole model fuses
+into the simulation step and `cooling_setpoint` can be a scenario-grid axis.
+`dynamic_pue` = facility/IT power; integrated over a run this yields the
+PUE/WUE metrics in `core/metrics.py`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import CoolingConfig
+
+_T_ZERO_K = 273.15
+_MIN_LIFT_C = 1.0  # floor on the compressor lift: no free chilling
+
+
+def economizer_fraction(wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
+    """Fraction of the heat load the chiller must carry (0 = all free).
+
+    0 for wet-bulb <= setpoint - economizer_range_c (the cutoff), ramping
+    linearly to 1 at the setpoint: the classic water-side economizer duty
+    curve.  `setpoint_c` may be a traced scalar (grid axis); defaults to the
+    config's static setpoint.
+    """
+    sp = jnp.float32(cfg.setpoint_c) if setpoint_c is None else setpoint_c
+    wb = jnp.asarray(wet_bulb_c, jnp.float32)
+    rng = jnp.maximum(jnp.float32(cfg.economizer_range_c), 1e-6)
+    return jnp.clip((wb - (sp - rng)) / rng, 0.0, 1.0)
+
+
+def chiller_cop(wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
+    """Weather-dependent chiller COP (monotone non-increasing in wet-bulb).
+
+    The tower delivers condenser water at wet-bulb + approach; adding the
+    condenser-loop lift gives the hot-side temperature.  COP is a fixed
+    fraction of the Carnot limit over that lift, clipped to [1, max_cop].
+    """
+    sp = jnp.float32(cfg.setpoint_c) if setpoint_c is None else setpoint_c
+    wb = jnp.asarray(wet_bulb_c, jnp.float32)
+    t_cond = wb + cfg.tower_approach_c + cfg.condenser_lift_c
+    lift = jnp.maximum(t_cond - sp, _MIN_LIFT_C)
+    cop = cfg.carnot_efficiency * (sp + _T_ZERO_K) / lift
+    return jnp.clip(cop, 1.0, cfg.max_cop)
+
+
+def cooling_step(it_power_kw, wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
+    """One cooling decision.  Returns (cooling_kw, water_l_per_h).
+
+    cooling_kw   — fan/pump overhead + compressor power.
+    water_l_per_h — cooling-tower evaporation (chiller-path heat only;
+                    economized heat rejects through dry coils).
+    All arguments may be traced scalars/arrays; fuses into the sim step.
+    """
+    frac = economizer_fraction(wet_bulb_c, cfg, setpoint_c)
+    cop = chiller_cop(wet_bulb_c, cfg, setpoint_c)
+    fan_kw = cfg.fan_pump_overhead * it_power_kw
+    chiller_kw = frac * it_power_kw / cop
+    water_l_per_h = (frac * it_power_kw + chiller_kw) * cfg.evap_l_per_kwh_heat
+    return fan_kw + chiller_kw, water_l_per_h
+
+
+def dynamic_pue(it_power_kw, wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
+    """Instantaneous PUE = facility/IT power (>= 1; load-independent here
+    because both cooling terms scale linearly with IT power)."""
+    cooling_kw, _ = cooling_step(it_power_kw, wet_bulb_c, cfg, setpoint_c)
+    it = jnp.maximum(jnp.asarray(it_power_kw, jnp.float32), 1e-9)
+    return (it + cooling_kw) / it

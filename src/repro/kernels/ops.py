@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from . import first_fit as _first_fit
 from . import power_carbon as _power_carbon
 from . import ssd_chunk as _ssd_chunk
-from repro.core.config import PowerModelConfig
+from repro.core.config import CoolingConfig, PowerModelConfig
 
 _INTERPRET = True  # CPU container: Pallas interpret mode
 
@@ -26,6 +26,29 @@ def host_power(cpu_util, gpu_util, n_gpus, on, cpu_cfg: PowerModelConfig,
         gpu_idle=gpu_cfg.idle_w, gpu_max=gpu_cfg.max_w, gpu_curve=gpu_cfg.model,
         interpret=_INTERPRET)
     return p
+
+
+def facility_power(cpu_util, gpu_util, n_gpus, on, wet_bulb_c, setpoint_c,
+                   cpu_cfg: PowerModelConfig, gpu_cfg: PowerModelConfig,
+                   cooling_cfg: CoolingConfig):
+    """(power_kw[H], it_power_kw, cooling_kw, water_l_per_h) in one VMEM pass.
+
+    The facility-power sibling of `host_power`: the host-axis reduction and
+    the weather-driven cooling tail (core/thermal.py) fuse into one kernel,
+    so the engine's power+cooling stages leave only four values in HBM.
+    """
+    return _power_carbon.fused_facility_power(
+        cpu_util, gpu_util, n_gpus, on, wet_bulb_c, setpoint_c,
+        cpu_idle=cpu_cfg.idle_w, cpu_max=cpu_cfg.max_w, cpu_curve=cpu_cfg.model,
+        gpu_idle=gpu_cfg.idle_w, gpu_max=gpu_cfg.max_w, gpu_curve=gpu_cfg.model,
+        econ_range=cooling_cfg.economizer_range_c,
+        tower_approach=cooling_cfg.tower_approach_c,
+        condenser_lift=cooling_cfg.condenser_lift_c,
+        carnot_eff=cooling_cfg.carnot_efficiency,
+        max_cop=cooling_cfg.max_cop,
+        fan_overhead=cooling_cfg.fan_pump_overhead,
+        evap_l_per_kwh=cooling_cfg.evap_l_per_kwh_heat,
+        interpret=_INTERPRET)
 
 
 def fused_power_carbon(cpu_util, gpu_util, n_gpus, on, ci, dt_h,

@@ -31,18 +31,40 @@ _CURVES = {
 }
 
 
+def _power_block(cpu_ref, gpu_ref, ngpu_ref, on_ref, *,
+                 cpu_idle, cpu_max, cpu_curve, gpu_idle, gpu_max, gpu_curve):
+    """The shared per-tile power-curve evaluation (kW block) of both kernels."""
+    cpu_u = jnp.clip(cpu_ref[...], 0.0, 1.0)
+    gpu_u = jnp.clip(gpu_ref[...], 0.0, 1.0)
+    p_cpu = cpu_idle + (cpu_max - cpu_idle) * _CURVES[cpu_curve](cpu_u)
+    p_gpu = ((gpu_idle + (gpu_max - gpu_idle) * _CURVES[gpu_curve](gpu_u))
+             * ngpu_ref[...])
+    return (p_cpu + p_gpu) * on_ref[...] / 1000.0
+
+
+def _pad_hosts(x, h: int, hp: int, fill: float = 0.0):
+    """Pad a host vector f32[h] to the tile grid and fold to [hp/LANE, LANE]."""
+    x = jnp.asarray(x, jnp.float32)
+    return jnp.pad(x, (0, hp - h), constant_values=fill).reshape(
+        hp // _LANE, _LANE)
+
+
+def _host_specs(n_scalars: int):
+    """(in_specs, power out_spec) shared by both fused kernels: four tiled
+    host vectors plus one (1, n_scalars) scalar block."""
+    tile = lambda: pl.BlockSpec((_SUBLANE, _LANE), lambda i: (i, 0))
+    return ([tile(), tile(), tile(), tile(),
+             pl.BlockSpec((1, n_scalars), lambda i: (0, 0))], tile())
+
+
 def _kernel(cpu_ref, gpu_ref, ngpu_ref, on_ref, scal_ref,
             power_ref, dc_ref, carbon_ref, *,
             cpu_idle, cpu_max, cpu_curve, gpu_idle, gpu_max, gpu_curve):
     i = pl.program_id(0)
-    cpu_u = jnp.clip(cpu_ref[...], 0.0, 1.0)
-    gpu_u = jnp.clip(gpu_ref[...], 0.0, 1.0)
-    on = on_ref[...]
-    ngpu = ngpu_ref[...]
-
-    p_cpu = cpu_idle + (cpu_max - cpu_idle) * _CURVES[cpu_curve](cpu_u)
-    p_gpu = (gpu_idle + (gpu_max - gpu_idle) * _CURVES[gpu_curve](gpu_u)) * ngpu
-    p_kw = (p_cpu + p_gpu) * on / 1000.0
+    p_kw = _power_block(cpu_ref, gpu_ref, ngpu_ref, on_ref,
+                        cpu_idle=cpu_idle, cpu_max=cpu_max,
+                        cpu_curve=cpu_curve, gpu_idle=gpu_idle,
+                        gpu_max=gpu_max, gpu_curve=gpu_curve)
     power_ref[...] = p_kw
 
     ci = scal_ref[0, 0]
@@ -56,6 +78,99 @@ def _kernel(cpu_ref, gpu_ref, ngpu_ref, on_ref, scal_ref,
 
     dc_ref[0, 0] += partial
     carbon_ref[0, 0] += partial * dt * ci / 1000.0
+
+
+def _facility_kernel(cpu_ref, gpu_ref, ngpu_ref, on_ref, scal_ref,
+                     power_ref, it_ref, cool_ref, water_ref, *,
+                     cpu_idle, cpu_max, cpu_curve, gpu_idle, gpu_max,
+                     gpu_curve, econ_range, tower_approach, condenser_lift,
+                     carnot_eff, max_cop, fan_overhead, evap_l_per_kwh):
+    """Per-host power + IT-sum + weather-driven cooling in one VMEM pass.
+
+    Hosts tile over the sequential grid exactly as in `_kernel`; the cooling
+    tail (scalar math on the accumulated IT total, the wet-bulb temperature
+    and the setpoint) runs once on the LAST grid step, when the host-axis
+    reduction is complete — mirroring core/thermal.py term for term.
+    """
+    i = pl.program_id(0)
+    p_kw = _power_block(cpu_ref, gpu_ref, ngpu_ref, on_ref,
+                        cpu_idle=cpu_idle, cpu_max=cpu_max,
+                        cpu_curve=cpu_curve, gpu_idle=gpu_idle,
+                        gpu_max=gpu_max, gpu_curve=gpu_curve)
+    power_ref[...] = p_kw
+
+    @pl.when(i == 0)
+    def _init():
+        it_ref[0, 0] = 0.0
+        cool_ref[0, 0] = 0.0
+        water_ref[0, 0] = 0.0
+
+    it_ref[0, 0] += jnp.sum(p_kw)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _cooling_tail():
+        it = it_ref[0, 0]
+        wb = scal_ref[0, 0]
+        sp = scal_ref[0, 1]
+        rng = jnp.maximum(jnp.float32(econ_range), 1e-6)
+        frac = jnp.clip((wb - (sp - rng)) / rng, 0.0, 1.0)
+        lift = jnp.maximum(wb + tower_approach + condenser_lift - sp,
+                           jnp.float32(1.0))
+        cop = jnp.clip(carnot_eff * (sp + 273.15) / lift, 1.0, max_cop)
+        chiller_kw = frac * it / cop
+        cool_ref[0, 0] = fan_overhead * it + chiller_kw
+        water_ref[0, 0] = (frac * it + chiller_kw) * evap_l_per_kwh
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cpu_idle", "cpu_max", "cpu_curve", "gpu_idle", "gpu_max",
+                     "gpu_curve", "econ_range", "tower_approach",
+                     "condenser_lift", "carnot_eff", "max_cop", "fan_overhead",
+                     "evap_l_per_kwh", "interpret"))
+def fused_facility_power(cpu_util, gpu_util, n_gpus, on, wet_bulb_c,
+                         setpoint_c, *,
+                         cpu_idle: float, cpu_max: float, cpu_curve: str,
+                         gpu_idle: float, gpu_max: float, gpu_curve: str,
+                         econ_range: float, tower_approach: float,
+                         condenser_lift: float, carnot_eff: float,
+                         max_cop: float, fan_overhead: float,
+                         evap_l_per_kwh: float, interpret: bool = True):
+    """Returns (power_kw[H], it_power_kw, cooling_kw, water_l_per_h).
+
+    Like `fused_power_carbon` but the scalar tail is the thermal model of
+    core/thermal.py instead of the carbon multiply: cooling power and tower
+    evaporation leave the core alongside the per-host power and the IT sum.
+    `wet_bulb_c` / `setpoint_c` are traced scalars (sweepable per step/grid).
+    """
+    h = cpu_util.shape[0]
+    hp = max(-(-h // _BLOCK_H) * _BLOCK_H, _BLOCK_H)
+    scal = jnp.stack([jnp.asarray(wet_bulb_c, jnp.float32),
+                      jnp.asarray(setpoint_c, jnp.float32)]).reshape(1, 2)
+    kern = functools.partial(
+        _facility_kernel, cpu_idle=cpu_idle, cpu_max=cpu_max,
+        cpu_curve=cpu_curve, gpu_idle=gpu_idle, gpu_max=gpu_max,
+        gpu_curve=gpu_curve, econ_range=econ_range,
+        tower_approach=tower_approach, condenser_lift=condenser_lift,
+        carnot_eff=carnot_eff, max_cop=max_cop, fan_overhead=fan_overhead,
+        evap_l_per_kwh=evap_l_per_kwh)
+    in_specs, power_spec = _host_specs(2)
+    scalar_spec = lambda: pl.BlockSpec((1, 1), lambda i: (0, 0))
+    power, it, cool, water = pl.pallas_call(
+        kern,
+        grid=(hp // _BLOCK_H,),
+        in_specs=in_specs,
+        out_specs=[power_spec, scalar_spec(), scalar_spec(), scalar_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((hp // _LANE, _LANE), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(_pad_hosts(cpu_util, h, hp), _pad_hosts(gpu_util, h, hp),
+      _pad_hosts(n_gpus, h, hp), _pad_hosts(on, h, hp), scal)
+    return power.reshape(-1)[:h], it[0, 0], cool[0, 0], water[0, 0]
 
 
 @functools.partial(
@@ -73,38 +188,24 @@ def fused_power_carbon(cpu_util, gpu_util, n_gpus, on, ci, dt_h, *,
     """
     h = cpu_util.shape[0]
     hp = max(-(-h // _BLOCK_H) * _BLOCK_H, _BLOCK_H)
-
-    def pad(x, fill=0.0):
-        x = jnp.asarray(x, jnp.float32)
-        return jnp.pad(x, (0, hp - h), constant_values=fill).reshape(
-            hp // _LANE, _LANE)
-
     scal = jnp.stack([jnp.asarray(ci, jnp.float32),
                       jnp.asarray(dt_h, jnp.float32)]).reshape(1, 2)
-    grid = (hp // _BLOCK_H,)
     kern = functools.partial(
         _kernel, cpu_idle=cpu_idle, cpu_max=cpu_max, cpu_curve=cpu_curve,
         gpu_idle=gpu_idle, gpu_max=gpu_max, gpu_curve=gpu_curve)
+    in_specs, power_spec = _host_specs(2)
+    scalar_spec = lambda: pl.BlockSpec((1, 1), lambda i: (0, 0))
     power, dc, carbon = pl.pallas_call(
         kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((_SUBLANE, _LANE), lambda i: (i, 0)),
-            pl.BlockSpec((_SUBLANE, _LANE), lambda i: (i, 0)),
-            pl.BlockSpec((_SUBLANE, _LANE), lambda i: (i, 0)),
-            pl.BlockSpec((_SUBLANE, _LANE), lambda i: (i, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((_SUBLANE, _LANE), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
-        ],
+        grid=(hp // _BLOCK_H,),
+        in_specs=in_specs,
+        out_specs=[power_spec, scalar_spec(), scalar_spec()],
         out_shape=[
             jax.ShapeDtypeStruct((hp // _LANE, _LANE), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(pad(cpu_util), pad(gpu_util), pad(n_gpus), pad(on), scal)
+    )(_pad_hosts(cpu_util, h, hp), _pad_hosts(gpu_util, h, hp),
+      _pad_hosts(n_gpus, h, hp), _pad_hosts(on, h, hp), scal)
     return power.reshape(-1)[:h], dc[0, 0], carbon[0, 0]

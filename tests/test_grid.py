@@ -12,10 +12,11 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
-from repro.core import (BatteryConfig, FailureConfig, ShiftingConfig,
-                        SimConfig, dyn_axis, make_host_table, make_task_table,
-                        seed_axis, simulate, summarize, sweep_grid,
-                        trace_axis, with_scale)
+from repro.core import (BatteryConfig, CoolingConfig, FailureConfig,
+                        ScenarioGrid, ShiftingConfig, SimConfig, dyn_axis,
+                        make_host_table, make_task_table, seed_axis, simulate,
+                        summarize, sweep_grid, trace_axis, weather_axis,
+                        with_scale)
 
 N_STEPS = 96  # 1 day at dt=0.25 — equivalence needs axis coverage, not horizon
 
@@ -93,6 +94,32 @@ class TestGridMatchesLoop:
                                 cfg_l)
                 _assert_cell_close(res, (i, j), ref)
 
+    def test_weather_axis_matches_loop(self, workload, traces):
+        """Climate x CI-region x setpoint grid == per-scenario simulate()
+        with the same weather trace and setpoint (acceptance criterion)."""
+        from repro.weathertraces.synthetic import make_weather_traces
+        tasks, hosts = workload
+        wb = make_weather_traces(N_STEPS, 0.25, 3, seed=2)
+        setpoints = np.array([20.0, 26.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS,
+                        cooling=CoolingConfig(enabled=True),
+                        battery=BatteryConfig(enabled=True))
+        res = sweep_grid(tasks, hosts, cfg, [
+            weather_axis(wb),
+            trace_axis(traces),
+            dyn_axis(cooling_setpoint=setpoints),
+        ])
+        assert res.pue.shape == (3, 2, 2)
+        assert (np.asarray(res.pue) >= 1.0).all()
+        for w in range(3):
+            for r in range(2):
+                for s in range(2):
+                    final, _ = simulate(
+                        tasks, hosts, traces[r], cfg,
+                        dyn={"cooling_setpoint": setpoints[s]},
+                        weather_trace=wb[w])
+                    _assert_cell_close(res, (w, r, s), summarize(final, cfg))
+
     def test_zipped_dyn_axis(self, workload, traces):
         """Two names in one dyn_axis sweep zipped (one dim, not a product)."""
         tasks, hosts = workload
@@ -137,6 +164,30 @@ class TestExecutionModes:
                                        np.asarray(getattr(full, field)),
                                        rtol=1e-6, err_msg=field)
 
+    def test_weather_grid_chunked_and_sharded(self, workload, traces):
+        """The acceptance grid with cooling on: climate x region x battery in
+        ONE program; chunked and sharded execution agree with it."""
+        from repro.weathertraces.synthetic import make_weather_traces
+        tasks, hosts = workload
+        wb = make_weather_traces(N_STEPS, 0.25, 3, seed=5)
+        caps = np.array([2.0, 6.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS,
+                        cooling=CoolingConfig(enabled=True),
+                        battery=BatteryConfig(enabled=True))
+        axes = [weather_axis(wb), trace_axis(traces),
+                dyn_axis(batt_capacity_kwh=caps)]
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        assert full.pue.shape == (3, 2, 2)
+        chunked = sweep_grid(tasks, hosts, cfg, axes, chunk_size=2)
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+        sharded = sweep_grid(tasks, hosts, cfg, axes, mesh=mesh)
+        for field in full._fields:
+            want = np.asarray(getattr(full, field))
+            np.testing.assert_allclose(np.asarray(getattr(chunked, field)),
+                                       want, rtol=1e-6, err_msg=field)
+            np.testing.assert_allclose(np.asarray(getattr(sharded, field)),
+                                       want, rtol=1e-6, err_msg=field)
+
     def test_sharded_chunked_multidevice(self):
         """mesh + chunk_size with chunks NOT divisible by the device count:
         chunks must round up to a device multiple instead of crashing.
@@ -177,6 +228,123 @@ print("OK")
         assert out.stdout.strip().endswith("OK")
 
 
+class TestReductions:
+    def test_min_and_argmin_match_materialized_grid(self, workload, traces):
+        tasks, hosts = workload
+        caps = np.array([1.0, 4.0, 8.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        axes = [trace_axis(traces), dyn_axis(batt_capacity_kwh=caps)]
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        mn = sweep_grid(tasks, hosts, cfg, axes, reduce=("min", 1))
+        am = sweep_grid(tasks, hosts, cfg, axes, reduce=("argmin", -1))
+        assert mn.total_carbon_kg.shape == (2,)
+        for field in full._fields:
+            got = np.asarray(getattr(full, field))
+            np.testing.assert_allclose(np.asarray(getattr(mn, field)),
+                                       got.min(axis=1), rtol=1e-6,
+                                       err_msg=field)
+            np.testing.assert_array_equal(np.asarray(getattr(am, field)),
+                                          got.argmin(axis=1), field)
+
+    def test_reduce_leading_axis_unchunked(self, workload, traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        axes = [trace_axis(traces)]
+        red = sweep_grid(tasks, hosts, cfg, axes, reduce=("max", 0))
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        np.testing.assert_allclose(np.asarray(red.total_carbon_kg),
+                                   np.asarray(full.total_carbon_kg).max(),
+                                   rtol=1e-6)
+
+    def test_reduce_chunked_trailing_axis(self, workload, traces):
+        tasks, hosts = workload
+        caps = np.array([1.0, 4.0, 8.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        axes = [dyn_axis(batt_capacity_kwh=caps), trace_axis(traces)]
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        red = sweep_grid(tasks, hosts, cfg, axes, chunk_size=2,
+                         reduce=("min", 1))
+        np.testing.assert_allclose(np.asarray(red.total_carbon_kg),
+                                   np.asarray(full.total_carbon_kg).min(axis=1),
+                                   rtol=1e-6)
+
+    def test_reduce_leading_axis_chunked_rejected(self, workload, traces):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="leading axis"):
+            sweep_grid(*workload, SimConfig(n_steps=N_STEPS),
+                       [trace_axis(traces)], chunk_size=1,
+                       reduce=("min", 0))
+
+    def test_bad_reduce_specs_rejected(self, workload, traces):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="unknown reduce op"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=N_STEPS),
+                       [trace_axis(traces)], reduce=("median", 0))
+        with pytest.raises(ValueError, match="out of range"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=N_STEPS),
+                       [trace_axis(traces)], reduce=("min", 2))
+
+
+class TestAutoChunking:
+    def test_under_budget_runs_unchunked_and_matches(self, workload, traces):
+        """Default (no chunk_size): small grids fit the budget and match the
+        explicit-chunk result."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        axes = [trace_axis(traces)]
+        grid = ScenarioGrid(axes)
+        auto = grid._auto_chunk_size(tasks, hosts, cfg, None)
+        assert auto == 2  # whole leading axis: unchunked
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        assert full.total_carbon_kg.shape == (2,)
+
+    def test_tiny_budget_forces_chunking_same_result(self, workload, traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        axes = [trace_axis(traces)]
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        # a 1-byte budget clamps to chunk_size 1: 2 programs, same numbers
+        chunked = sweep_grid(tasks, hosts, cfg, axes, memory_budget_bytes=1.0)
+        for field in full._fields:
+            np.testing.assert_allclose(np.asarray(getattr(chunked, field)),
+                                       np.asarray(getattr(full, field)),
+                                       rtol=1e-6, err_msg=field)
+
+
+class TestLowerGrid:
+    def test_lower_arbitrary_grid_and_analyze(self, workload, traces):
+        """ANY declared grid lowers to one program (no allocation, no run)
+        whose compiled HLO feeds the roofline analyzer."""
+        from repro.launch import hlo_analysis
+        tasks, hosts = workload
+        caps = np.array([1.0, 4.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        grid = ScenarioGrid([trace_axis(traces),
+                             dyn_axis(batt_capacity_kwh=caps)])
+        lowered = grid.lower(tasks, hosts, cfg)
+        stats = hlo_analysis.analyze(lowered.compile().as_text())
+        assert stats["bytes"] > 0
+
+    def test_lower_sharded_with_reduction(self, workload, traces):
+        tasks, hosts = workload
+        caps = np.array([1.0, 4.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+        grid = ScenarioGrid([trace_axis(traces),
+                             dyn_axis(batt_capacity_kwh=caps)])
+        lowered = grid.lower(tasks, hosts, cfg, mesh=mesh,
+                             reduce=("argmin", 1))
+        assert "argmin" in lowered.as_text() or lowered.compile() is not None
+
+    def test_legacy_lower_sweep_delegates(self, workload):
+        from repro.core import lower_sweep
+        tasks, hosts = workload
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+        lowered = lower_sweep(mesh, tasks, hosts, SimConfig(n_steps=N_STEPS),
+                              n_regions=4, n_steps=N_STEPS)
+        assert lowered.compile() is not None
+
+
 class TestValidation:
     def test_duplicate_axis_name_rejected(self, traces):
         with pytest.raises(ValueError, match="declared twice"):
@@ -207,3 +375,9 @@ class TestValidation:
                        [trace_axis(traces),
                         dyn_axis(batt_capacity_kwh=np.ones(2))],
                        dyn={"batt_capacity_kwh": 3.0})
+
+    def test_weather_axis_without_cooling_rejected(self, workload, traces):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="cooling.enabled"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=N_STEPS),
+                       [weather_axis(traces)], ci_trace=traces[0])

@@ -33,6 +33,33 @@ def test_power_carbon_kernel(h, curves):
     np.testing.assert_allclose(carbon, carbon_r, rtol=1e-4)
 
 
+@pytest.mark.parametrize("h", [7, 128, 1000, 2048])
+@pytest.mark.parametrize("wb,sp", [(30.0, 24.0), (10.0, 24.0), (21.0, 24.0),
+                                   (25.0, 18.0)])
+def test_facility_power_kernel(h, wb, sp):
+    """Fused power+cooling kernel == host_power_kw + core/thermal.py."""
+    from repro.core.config import CoolingConfig
+    from repro.core.power import host_power_kw
+    from repro.core.thermal import cooling_step
+    rng = np.random.default_rng(h + int(wb))
+    cpu_u = rng.uniform(0, 1, h).astype(np.float32)
+    gpu_u = rng.uniform(0, 1, h).astype(np.float32)
+    ngpu = rng.integers(0, 4, h).astype(np.float32)
+    on = (rng.uniform(size=h) < 0.8).astype(np.float32)
+    cpu_cfg = PowerModelConfig(80.0, 250.0, "sqrt")
+    gpu_cfg = PowerModelConfig(40.0, 300.0, "linear")
+    ccfg = CoolingConfig(enabled=True)
+    p, it, cool, water = ops.facility_power(cpu_u, gpu_u, ngpu, on, wb, sp,
+                                            cpu_cfg, gpu_cfg, ccfg)
+    p_ref = host_power_kw(cpu_u, gpu_u, ngpu, on, cpu_cfg, gpu_cfg)
+    it_ref = jnp.sum(p_ref)
+    cool_ref, water_ref = cooling_step(it_ref, wb, ccfg, setpoint_c=sp)
+    np.testing.assert_allclose(p, p_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(it, it_ref, rtol=1e-4)
+    np.testing.assert_allclose(cool, cool_ref, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(water, water_ref, rtol=1e-4, atol=1e-6)
+
+
 @pytest.mark.parametrize("k,h", [(4, 3), (16, 64), (64, 300)])
 def test_first_fit_kernel(k, h):
     rng = np.random.default_rng(k * h)

@@ -1,0 +1,177 @@
+"""Thermal/cooling subsystem (core/thermal.py + stage_cooling).
+
+Physics sanity (COP monotone in wet-bulb, economizer cutoff, PUE >= 1),
+the cooling.enabled=False equivalence invariant (the pre-cooling pipeline is
+reproduced exactly), and metric-level PUE/WUE consistency.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CoolingConfig, SimConfig, chiller_cop, cooling_step,
+                        default_pipeline, dynamic_pue, economizer_fraction,
+                        make_host_table, make_task_table, simulate, summarize)
+from repro.core.metrics import sustainability_extras
+from repro.weathertraces.synthetic import (make_weather_traces,
+                                           sample_climate_params)
+
+CFG = CoolingConfig(enabled=True)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(3)
+    n = 16
+    tasks = make_task_table(np.sort(rng.uniform(0.0, 8.0, n)),
+                            rng.uniform(0.5, 4.0, n),
+                            rng.integers(1, 3, n).astype(float))
+    hosts = make_host_table(4, 4)
+    return tasks, hosts
+
+
+class TestThermalModel:
+    def test_cop_monotone_non_increasing_in_wet_bulb(self):
+        wb = jnp.linspace(-10.0, 40.0, 101)
+        cop = np.asarray(chiller_cop(wb, CFG))
+        assert (np.diff(cop) <= 1e-6).all()
+        # strictly decreasing once the max-COP clip releases (hot end)
+        hot = cop[-10:]
+        assert (np.diff(hot) < 0).all()
+        assert cop.min() >= 1.0 and cop.max() <= CFG.max_cop
+
+    def test_economizer_cutoff(self):
+        cutoff = CFG.setpoint_c - CFG.economizer_range_c
+        frac = economizer_fraction(jnp.array([cutoff - 5.0, cutoff,
+                                              CFG.setpoint_c,
+                                              CFG.setpoint_c + 10.0]), CFG)
+        np.testing.assert_allclose(np.asarray(frac), [0.0, 0.0, 1.0, 1.0])
+        # below the cutoff the chiller is off: fan/pump overhead only
+        cool, water = cooling_step(100.0, cutoff - 1.0, CFG)
+        assert float(cool) == pytest.approx(100.0 * CFG.fan_pump_overhead)
+        assert float(water) == 0.0
+
+    def test_pue_at_least_one_and_increasing_with_heat(self):
+        wb = jnp.linspace(-10.0, 40.0, 51)
+        pue = np.asarray(dynamic_pue(100.0, wb, CFG))
+        assert (pue >= 1.0).all()
+        assert (np.diff(pue) >= -1e-6).all()
+        assert pue[-1] > pue[0]
+
+    def test_setpoint_raises_efficiency(self):
+        """A higher setpoint means more free-cooling hours and less lift:
+        cooling power is non-increasing in the setpoint (the sweepable dyn)."""
+        cool_lo, _ = cooling_step(100.0, 22.0, CFG, setpoint_c=20.0)
+        cool_hi, _ = cooling_step(100.0, 22.0, CFG, setpoint_c=28.0)
+        assert float(cool_hi) < float(cool_lo)
+
+    def test_water_only_on_chiller_path(self):
+        _, w_cold = cooling_step(100.0, 10.0, CFG)   # fully economized
+        _, w_hot = cooling_step(100.0, 30.0, CFG)    # fully on the tower
+        assert float(w_cold) == 0.0 and float(w_hot) > 0.0
+
+
+class TestEngineIntegration:
+    def test_disabled_pipeline_identical_to_seed(self, workload):
+        """cooling.enabled=False reproduces the pre-cooling engine exactly:
+        no stage_cooling in the pipeline, PUE == 1, facility == IT energy,
+        and every legacy metric bitwise-stable against a config that merely
+        carries a (disabled) CoolingConfig."""
+        tasks, hosts = workload
+        S = 96
+        ci = 300.0 + 150.0 * np.sin(np.arange(S) * 0.25 / 24 * 2 * np.pi)
+        cfg = SimConfig(n_steps=S)
+        n_stages = len(default_pipeline(cfg))
+        cfg_c = cfg.replace(cooling=CoolingConfig(enabled=False,
+                                                  setpoint_c=18.0))
+        assert len(default_pipeline(cfg_c)) == n_stages
+        a = summarize(simulate(tasks, hosts, ci, cfg)[0], cfg)
+        b = summarize(simulate(tasks, hosts, ci, cfg_c)[0], cfg_c)
+        for field in a._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                          np.asarray(getattr(b, field)), field)
+        assert float(a.pue) == 1.0
+        assert float(a.water_l) == 0.0
+        assert float(a.cooling_energy_kwh) == 0.0
+        assert float(a.dc_energy_kwh) == pytest.approx(
+            float(a.it_energy_kwh), rel=1e-6)
+
+    def test_enabled_facility_power_reaches_carbon(self, workload):
+        """With cooling on, grid energy/carbon grow by exactly the cooling
+        energy (no battery): battery and carbon see FACILITY power."""
+        tasks, hosts = workload
+        S = 96
+        ci = np.full(S, 400.0, np.float32)
+        wb = np.full(S, 30.0, np.float32)   # hot: full chiller duty
+        cfg = SimConfig(n_steps=S)
+        cfg_c = cfg.replace(cooling=CoolingConfig(enabled=True))
+        base = summarize(simulate(tasks, hosts, ci, cfg)[0], cfg)
+        hot = summarize(simulate(tasks, hosts, ci, cfg_c,
+                                 weather_trace=wb)[0], cfg_c)
+        assert float(hot.cooling_energy_kwh) > 0
+        np.testing.assert_allclose(
+            float(hot.grid_energy_kwh),
+            float(base.grid_energy_kwh) + float(hot.cooling_energy_kwh),
+            rtol=1e-5)
+        assert float(hot.op_carbon_kg) > float(base.op_carbon_kg)
+        assert float(hot.pue) > 1.0
+        assert float(hot.wue_l_per_kwh) > 0.0
+        assert float(hot.peak_power_kw) > float(base.peak_power_kw)
+
+    def test_cold_climate_cheaper_than_hot(self, workload):
+        tasks, hosts = workload
+        S = 96
+        ci = np.full(S, 300.0, np.float32)
+        cfg = SimConfig(n_steps=S, cooling=CoolingConfig(enabled=True))
+        cold = summarize(simulate(tasks, hosts, ci, cfg,
+                                  weather_trace=np.full(S, 5.0))[0], cfg)
+        hot = summarize(simulate(tasks, hosts, ci, cfg,
+                                 weather_trace=np.full(S, 32.0))[0], cfg)
+        assert float(cold.pue) < float(hot.pue)
+        assert float(cold.water_l) < float(hot.water_l)
+        assert float(cold.total_carbon_kg) < float(hot.total_carbon_kg)
+
+    def test_sustainability_extras_uses_simulated_water(self, workload):
+        tasks, hosts = workload
+        S = 96
+        ci = np.full(S, 300.0, np.float32)
+        cfg = SimConfig(n_steps=S, cooling=CoolingConfig(enabled=True))
+        res = summarize(simulate(tasks, hosts, ci, cfg,
+                                 weather_trace=np.full(S, 30.0))[0], cfg)
+        ex = sustainability_extras(res, water_intensity_l_per_kwh=0.0)
+        np.testing.assert_allclose(float(ex.water_l), float(res.water_l),
+                                   rtol=1e-6)
+        # legacy fallback when the thermal subsystem did not run
+        cfg0 = SimConfig(n_steps=S)
+        res0 = summarize(simulate(tasks, hosts, ci, cfg0)[0], cfg0)
+        ex0 = sustainability_extras(res0, water_intensity_l_per_kwh=0.0,
+                                    wue_l_per_kwh=1.8)
+        np.testing.assert_allclose(float(ex0.water_l),
+                                   1.8 * float(res0.dc_energy_kwh), rtol=1e-6)
+
+
+class TestWeatherTraces:
+    def test_shapes_and_determinism(self):
+        a = make_weather_traces(192, 0.25, 6, seed=4)
+        b = make_weather_traces(192, 0.25, 6, seed=4)
+        assert a.shape == (6, 192) and a.dtype == np.float32
+        np.testing.assert_array_equal(a, b)
+        assert not np.allclose(a, make_weather_traces(192, 0.25, 6, seed=5))
+
+    def test_climate_correlates_with_carbon_regions(self):
+        """Greener grids (low mean CI) skew cooler: the joint distribution
+        couples the two trace families drawn from the same seed."""
+        from repro.carbontraces.synthetic import sample_region_params
+        n = 158
+        carbon = sample_region_params(n, seed=0)
+        climate = sample_climate_params(n, seed=0)
+        r = np.corrcoef(np.log(carbon.mean), climate.mean_c)[0, 1]
+        assert r > 0.3, f"carbon-climate correlation too weak: {r:.2f}"
+        assert climate.mean_c.min() >= 2.0 and climate.mean_c.max() <= 26.0
+
+    def test_diurnal_cycle_present(self):
+        tr = make_weather_traces(96 * 4, 0.25, 3, seed=1)
+        # a day has structure: within-day std clearly above zero
+        days = tr.reshape(3, 4, 96)
+        assert days.std(axis=2).mean() > 0.3
