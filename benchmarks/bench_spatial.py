@@ -1,34 +1,37 @@
 """Beyond-paper: spatial shifting (the paper's §IX/§XI extension direction),
-composed into STEAM without engine changes.
+run through the fleet engine — R regional datacenters as ONE vmapped
+program (core/fleet.py) instead of a per-region Python loop.
 
 Setup: the Surf workload split across R=4 regional datacenters (each 1/R of
-the topology).  Baselines: (a) all-local — tasks land on their home region
-round-robin; (b) carbon-aware spatial placement (core/spatial.py), same
-capacity.  Metric: total operational carbon summed over regions; also
-reports the capacity-constraint effect the paper's §III argues for (an
-uncapped 'oracle' placement overloads the greenest region).
+the topology).  Policies: (a) home — round-robin, carbon-blind; (b) spatial
+— carbon-aware greedy with aggregate capacity caps (core/spatial.py); (c)
+greedy_uncapped — the analytical-style placement §III critiques; (d) spill —
+the online time-resolved router (tasks spill to the next-cheapest region
+when their first choice saturates mid-run).  All four reuse one compiled
+fleet program (same shapes -> one XLA executable).  A final row composes the
+fleet with the grid engine: spatial x battery-capacity in one program
+(`region_axis` + `dyn_axis`).
+
+Metrics: fleet total operational carbon, worst-region SLA — the capacity
+effect the paper's §III argues for shows up as greedy_uncapped overloading
+the greenest region.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import SimConfig, simulate, summarize
-from repro.core.spatial import spatial_assign, split_by_region
+from repro.core import (BatteryConfig, FleetSpec, SimConfig, dyn_axis,
+                        region_axis, simulate_fleet, sweep_grid)
 from .common import pct, regions, save_rows, setup
 
 R = 4
 
-
-def _run_split(tasks_split, hosts, traces, cfg):
-    """Simulate R regional datacenters (python loop; R is small)."""
-    import jax
-    total_op, sla = 0.0, []
-    for rr in range(R):
-        t_r = jax.tree.map(lambda x: x[rr], tasks_split)
-        res = summarize(simulate(t_r, hosts, traces[rr], cfg)[0], cfg)
-        total_op += float(res.op_carbon_kg)
-        sla.append(float(res.sla_violation_frac))
-    return total_op, max(sla)
+POLICY_FLEETS = {
+    "home": dict(policy="round_robin"),
+    "spatial": dict(policy="greedy", capacity_frac=1.5),
+    "greedy_uncapped": dict(policy="greedy", capacity_frac=None),
+    "spill": dict(policy="spill"),
+}
 
 
 def run(quick: bool = True):
@@ -39,38 +42,45 @@ def run(quick: bool = True):
     hosts = make_host_table(n_h, 16.0)
     traces = regions(R, cfg.n_steps, seed=21)
 
-    arrival = np.asarray(tasks.arrival)
-    valid = np.isfinite(arrival)
-    # (a) home placement: round-robin (carbon-blind)
-    home = np.where(valid, np.arange(arrival.shape[0]) % R, -1).astype(np.int32)
-    # (b) carbon-aware spatial, capacity-capped at a fair share x1.5
-    total_work = float(np.sum((np.asarray(tasks.cores)
-                               * np.asarray(tasks.duration))[valid]))
-    cap = np.full(R, 1.5 * total_work / R)
-    aware = spatial_assign(tasks, traces, cfg.dt_h, capacity_core_h=cap)
-    # (c) uncapped greedy (the analytical-style placement §III critiques)
-    greedy = spatial_assign(tasks, traces, cfg.dt_h, capacity_core_h=None)
-
     rows = []
     results = {}
-    for name, assign in (("home", home), ("spatial", aware),
-                         ("greedy_uncapped", greedy)):
-        split = split_by_region(tasks, assign, R)
-        op, worst_sla = _run_split(split, hosts, traces, cfg)
+    for name, spec_kw in POLICY_FLEETS.items():
+        fleet = FleetSpec(ci_traces=traces, **spec_kw)
+        res = simulate_fleet(tasks, hosts, cfg, fleet)
+        op = float(res.total.op_carbon_kg)
+        worst_sla = float(np.max(np.asarray(
+            res.per_region.sla_violation_frac)))
+        counts = np.asarray(res.per_region.n_tasks)
         results[name] = (op, worst_sla)
         rows.append({"bench": "spatial", "policy": name,
                      "metric": "op_carbon_kg", "value": pct(op),
                      "worst_region_sla_pct": pct(100 * worst_sla),
-                     "region_counts": [int(np.sum(np.asarray(assign) == rr))
-                                       for rr in range(R)]})
+                     "fleet_pue": pct(res.total.pue),
+                     "region_counts": [int(c) for c in counts]})
+
     base_op = results["home"][0]
     rows.append({"bench": "spatial", "policy": "summary",
                  "metric": "spatial_reduction_pct",
                  "value": pct(100 * (1 - results["spatial"][0] / base_op)),
                  "greedy_reduction_pct":
                      pct(100 * (1 - results["greedy_uncapped"][0] / base_op)),
+                 "spill_reduction_pct":
+                     pct(100 * (1 - results["spill"][0] / base_op)),
                  "greedy_worst_sla_pct": pct(100 * results["greedy_uncapped"][1]),
-                 "spatial_worst_sla_pct": pct(100 * results["spatial"][1])})
+                 "spatial_worst_sla_pct": pct(100 * results["spatial"][1]),
+                 "spill_worst_sla_pct": pct(100 * results["spill"][1])})
+
+    # composability row: spatial x battery-capacity grid, ONE program
+    fleet = FleetSpec(ci_traces=traces, capacity_frac=1.5)
+    caps = np.asarray([0.5, 2.0, 8.0], np.float32) * n_h
+    cfg_b = cfg.replace(battery=BatteryConfig(enabled=True))
+    grid = sweep_grid(tasks, hosts, cfg_b,
+                      [dyn_axis(batt_capacity_kwh=caps), region_axis(fleet)])
+    op_curve = [pct(v) for v in np.asarray(grid.total.op_carbon_kg)]
+    rows.append({"bench": "spatial", "policy": "spatial+battery_grid",
+                 "metric": "op_carbon_kg_by_capacity", "value": op_curve[0],
+                 "capacities_kwh": [float(c) for c in caps],
+                 "op_carbon_curve": op_curve})
     save_rows("spatial", rows)
     return rows
 
@@ -79,11 +89,25 @@ def check(rows) -> list[str]:
     s = next(r for r in rows if r["policy"] == "summary")
     ok = s["value"] > 0
     cap_matters = (s["greedy_worst_sla_pct"] >= s["spatial_worst_sla_pct"])
+    g = next(r for r in rows if r["policy"] == "spatial+battery_grid")
+    curve = g["op_carbon_curve"]
+    # the claim here is COMPOSABILITY (fleet x battery in one program, a
+    # finite sensible curve); whether more storage pays off is region- and
+    # sizing-dependent (round-trip losses vs peak-shaving, see
+    # bench_battery_capacity) and is not asserted
+    composes = (len(curve) == len(g["capacities_kwh"])
+                and all(np.isfinite(v) and v > 0 for v in curve))
+    best = int(np.argmin(curve))
     return [
         f"spatial: carbon-aware placement saves {s['value']}% op-carbon vs "
-        f"home placement ({'OK' if ok else 'WEAK'})",
+        f"home placement ({'OK' if ok else 'WEAK'}); online spill saves "
+        f"{s['spill_reduction_pct']}% at worst-region SLA "
+        f"{s['spill_worst_sla_pct']}%",
         f"spatial §III: uncapped greedy saves {s['greedy_reduction_pct']}% "
         f"but worst-region SLA {s['greedy_worst_sla_pct']}% vs capped "
         f"{s['spatial_worst_sla_pct']}% — capacity constraints "
         f"{'matter (OK)' if cap_matters else 'did not bind here'}",
+        f"spatial x battery grid composes in one program: op carbon "
+        f"{curve} kg across capacities {g['capacities_kwh']}, best at "
+        f"{g['capacities_kwh'][best]} kWh ({'OK' if composes else 'FAIL'})",
     ]

@@ -1,0 +1,93 @@
+"""Fleet-level trade-off sweep: spatial shifting x horizontal scaling x
+batteries over R regional datacenters, ONE compiled program.
+
+This is the scenario class CEO-DC argues operators actually navigate:
+given a fleet of heterogeneous sites (each with its own grid carbon, local
+climate and capacity), how should load be placed, how many hosts should
+each site keep powered, and how much storage is worth installing?  The
+fleet engine (core/fleet.py) answers all of it in a single `sweep_grid`
+program: `region_axis` carries the R-site fleet (correlated carbon +
+weather traces), `fleet_axis` sweeps per-region host-count *products*, and
+a `dyn_axis` sweeps battery capacity — K x C fleet scenarios, each running
+R regional engines.
+
+Run:  PYTHONPATH=src python examples/fleet_sweep.py [--regions 4]
+"""
+import argparse
+
+import numpy as np
+
+from repro.carbontraces.synthetic import make_region_traces, trace_stats
+from repro.core import (BatteryConfig, CoolingConfig, FleetSpec, SimConfig,
+                        dyn_axis, fleet_axis, region_axis, simulate_fleet,
+                        sweep_grid)
+from repro.weathertraces.synthetic import make_weather_traces
+from repro.workloads.synthetic import make_workload
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--regions", type=int, default=4)
+ap.add_argument("--workload", default="surf")
+args = ap.parse_args()
+R = args.regions
+
+DAYS, DT = 7, 0.25
+n_steps = int(DAYS * 24 / DT)
+tasks, hosts, spec, meta = make_workload(args.workload, scale=0.05,
+                                         n_tasks_cap=1024, horizon_days=DAYS)
+n_hosts = meta["n_hosts"]
+cfg = SimConfig(dt_h=DT, n_steps=n_steps, embodied=meta["embodied"],
+                battery=BatteryConfig(enabled=True),
+                cooling=CoolingConfig(enabled=True))
+
+# correlated trace families: site r's carbon AND climate from the same seed
+ci = make_region_traces(n_steps, DT, R, seed=3)
+wb = make_weather_traces(n_steps, DT, R, seed=3)
+ci_mean, _ = trace_stats(ci, DT)
+fleet = FleetSpec(ci_traces=ci, wb_traces=wb, capacity_frac=1.5)
+
+print(f"{R}-site fleet, {meta['n_tasks']} tasks, {n_hosts} hosts/site max; "
+      f"site carbon {ci_mean.min():.0f}-{ci_mean.max():.0f} gCO2/kWh")
+
+# per-region host-count PRODUCTS: uniform fleets plus green-skewed fleets
+# that keep more hosts on where the grid is cleanest
+rank = np.argsort(np.argsort(ci_mean))             # 0 = greenest
+uniform = [np.full(R, max(int(n_hosts * f), 1)) for f in (1.0, 0.75, 0.5)]
+skewed = [np.clip((n_hosts * (w - 0.5 * w * rank / max(R - 1, 1))
+                   ).astype(int), 1, n_hosts) for w in (1.0, 0.75)]
+counts = np.stack(uniform + skewed).astype(np.int32)       # [K, R]
+caps = np.asarray([0.0, 4.0, 16.0], np.float32) * n_hosts  # [C] kWh fleet-wide
+labels = ["all-on", "75%", "50%", "green-skew", "green-skew-75%"]
+
+res = sweep_grid(tasks, hosts, cfg, [
+    fleet_axis(n_active_hosts=counts),
+    dyn_axis(batt_capacity_kwh=np.maximum(caps / R, 1e-3)),  # per site
+    region_axis(fleet),
+])
+total = np.asarray(res.total.total_carbon_kg)      # [K, C]
+sla = np.asarray(res.per_region.sla_violation_frac).max(axis=-1)  # worst site
+pue = np.asarray(res.total.pue)
+
+print(f"\n{total.size}-scenario fleet grid "
+      f"({counts.shape[0]} host plans x {caps.shape[0]} battery sizes "
+      f"x {R} sites each):")
+print(f"{'host plan':>16s} {'batt kWh':>9s} {'kgCO2':>9s} {'worst SLA':>10s} "
+      f"{'PUE':>6s}")
+for k, lab in enumerate(labels):
+    for c, cap in enumerate(caps):
+        print(f"{lab:>16s} {cap:9.0f} {total[k, c]:9.1f} "
+              f"{100 * sla[k, c]:9.1f}% {pue[k, c]:6.3f}")
+
+best = np.unravel_index(np.argmin(np.where(sla <= 0.01, total, np.inf)),
+                        total.shape)
+print(f"\nbest <=1%-SLA fleet plan: '{labels[best[0]]}' hosts + "
+      f"{caps[best[1]]:.0f} kWh storage -> {total[best]:.1f} kgCO2")
+
+# placement policy face-off on the winning plan (same compiled fleet cell)
+dyn = {"n_active_hosts": counts[best[0]],
+       "batt_capacity_kwh": float(max(caps[best[1]] / R, 1e-3))}
+for policy in ("round_robin", "greedy", "spill"):
+    r = simulate_fleet(tasks, hosts, cfg, fleet.replace(policy=policy),
+                       dyn=dyn)
+    print(f"policy {policy:>12s}: {float(r.total.total_carbon_kg):8.1f} kg, "
+          f"worst SLA "
+          f"{100 * float(np.max(np.asarray(r.per_region.sla_violation_frac))):.1f}%")

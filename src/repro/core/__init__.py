@@ -4,9 +4,13 @@ from .config import (BatteryConfig, CoolingConfig, EmbodiedConfig,
                      ShiftingConfig, SimConfig, techniques)
 from .engine import (StepInputs, build_step_fn, build_step_inputs,
                      default_pipeline, simulate)
-from .grid import (Axis, ScenarioGrid, dyn_axis, seed_axis, sweep_grid,
-                   trace_axis, weather_axis)
-from .metrics import SimResult, carbon_reduction_pct, summarize
+from .fleet import FleetResult, FleetSpec, fleet_place, simulate_fleet
+from .grid import (Axis, ScenarioGrid, dyn_axis, fleet_axis, region_axis,
+                   seed_axis, sweep_grid, trace_axis, weather_axis)
+from .metrics import (SimResult, carbon_reduction_pct, fleet_totals,
+                      summarize)
+from .spatial import (spatial_assign, spatial_assign_online,
+                      spatial_assign_reference, split_by_region)
 from .thermal import (chiller_cop, cooling_step, dynamic_pue,
                       economizer_fraction)
 from .scaling import find_min_scale, with_scale
@@ -21,10 +25,13 @@ __all__ = [
     "BatteryConfig", "CoolingConfig", "EmbodiedConfig", "FailureConfig",
     "PowerModelConfig", "SchedulerConfig", "ShiftingConfig", "SimConfig",
     "techniques", "StepInputs", "build_step_fn", "build_step_inputs",
-    "default_pipeline", "simulate", "Axis", "ScenarioGrid", "dyn_axis",
-    "seed_axis", "sweep_grid", "trace_axis", "weather_axis", "SimResult",
-    "carbon_reduction_pct", "summarize", "chiller_cop", "cooling_step",
-    "dynamic_pue", "economizer_fraction",
+    "default_pipeline", "simulate", "FleetResult", "FleetSpec",
+    "fleet_place", "simulate_fleet", "Axis", "ScenarioGrid", "dyn_axis",
+    "fleet_axis", "region_axis", "seed_axis", "sweep_grid", "trace_axis",
+    "weather_axis", "SimResult", "carbon_reduction_pct", "fleet_totals",
+    "summarize", "spatial_assign", "spatial_assign_online",
+    "spatial_assign_reference", "split_by_region", "chiller_cop",
+    "cooling_step", "dynamic_pue", "economizer_fraction",
     "find_min_scale", "with_scale", "DONE", "INVALID", "PENDING", "RUNNING",
     "BatteryState", "HostTable", "MetricsAcc", "SimState", "TaskTable",
     "active_host_mask", "init_sim_state", "make_host_table", "make_task_table",

@@ -123,15 +123,19 @@ class SimConfig:
         return dataclasses.replace(self, **kw)
 
 
-def techniques(cfg: SimConfig, horizontal_scaling: bool = False) -> str:
-    """Short label of enabled techniques, e.g. 'HS+B+TS'.
+def techniques(cfg: SimConfig, horizontal_scaling: bool = False,
+               spatial: bool = False) -> str:
+    """Short label of enabled techniques, e.g. 'HS+B+TS' or 'SS+B'.
 
     HS is expressed via the host table's active mask (or the `n_active_hosts`
-    dyn value), so it is not knowable from the config alone — callers that
-    down-scaled the host table pass `horizontal_scaling=True` to get the
-    canonical label instead of string-appending it themselves.
+    dyn value) and SS (spatial shifting) via the fleet's placement policy
+    (core/fleet.py), so neither is knowable from the config alone — callers
+    pass `horizontal_scaling=True` / `spatial=True` to get the canonical
+    label instead of string-appending it themselves.
     """
     parts = []
+    if spatial:
+        parts.append("SS")
     if horizontal_scaling:
         parts.append("HS")
     if cfg.battery.enabled:

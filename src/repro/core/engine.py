@@ -312,7 +312,12 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
              weather_trace=None):
     """Run one simulation.  Returns (final SimState, per-step series or None).
 
-    jit-able; vmap over scenario axes is done by core/grid.py.  `dyn` holds
+    jit-able; vmap over scenario axes is done by core/grid.py, and
+    core/fleet.py vmaps this SAME function over the region axis of a
+    multi-datacenter fleet — per-region heterogeneity (host counts, battery
+    sizing, setpoints, weather) arrives entirely through `dyn` and
+    `weather_trace`, which is what keeps spatial shifting an engine-free
+    technique.  `dyn` holds
     traced scenario parameters that static config cannot sweep without
     recompiling: `batt_capacity_kwh` / `batt_rate_kw` (battery sizing),
     `shift_quantile_value` (shifting threshold level), `n_active_hosts`

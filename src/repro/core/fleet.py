@@ -1,0 +1,251 @@
+"""Multi-datacenter fleet engine: R heterogeneous regions as ONE program.
+
+`core/spatial.py` places tasks across regional datacenters; this module runs
+the placed fleet: each region has its own carbon trace, weather trace,
+battery sizing, cooling setpoint and host count, and the whole fleet is one
+jitted `jax.vmap` of the UNCHANGED engine (`core/engine.simulate`) — the
+paper's composability claim (C1) at facility granularity.  Per-region
+heterogeneity rides on the existing dyn mechanism: host counts through
+`n_active_hosts` (horizontal-scaling mask), battery sizing through
+`batt_capacity_kwh`/`batt_rate_kw`, climate through per-region wet-bulb
+traces, so spatial shifting composes with every other technique, and
+`core/grid.py`'s `region_axis`/`fleet_axis` make per-region parameters
+sweepable grid dimensions on top.
+
+The contract (differential-tested): a fleet of R=1 regions reproduces
+`simulate` on the same workload bit-for-bit, and a fleet grid equals the
+per-scenario Python loop of `simulate_fleet` calls.
+
+Placement is host-side and exogenous (traces + task list only); the fleet
+program itself is pure jnp, so grids vmap it freely.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import SimConfig
+from .engine import simulate
+from .metrics import SimResult, fleet_totals, summarize
+from .spatial import (spatial_assign, spatial_assign_online, split_by_region)
+from .state import HostTable, TaskTable
+
+# dyn keys that may be per-region vectors (length R) in a fleet
+PER_REGION_KEYS = ("n_active_hosts", "batt_capacity_kwh", "batt_rate_kw",
+                   "cooling_setpoint", "seed")
+
+POLICIES = ("greedy", "spill", "round_robin")
+
+
+class FleetResult(NamedTuple):
+    """`total` aggregates the fleet (metrics.fleet_totals); `per_region` is a
+    SimResult whose fields carry a leading (in grids: trailing) R axis."""
+    total: SimResult
+    per_region: SimResult
+
+
+class FleetSpec:
+    """R regional datacenters: per-region traces, sizing, and a placement
+    policy.  Everything per-region is an optional length-R array; scalars
+    broadcast.  Arrays live host-side (numpy) — a FleetSpec is scenario
+    *structure*, not traced data — and the same spec can be re-run under
+    different `dyn` overrides or swept through `core/grid.py`.
+
+    ci_traces:      f32[R, S]  per-region carbon intensity (required)
+    wb_traces:      f32[R, S]  per-region wet-bulb weather (needs cooling)
+    n_active_hosts: i32[R]     per-region host count (default: all hosts)
+    batt_capacity_kwh, batt_rate_kw, cooling_setpoint, seeds: f32/i32[R]
+    capacity_frac:  float      aggregate core-hour cap per region, as a
+                               multiple of its fair (host-count-weighted)
+                               share of total work; None = uncapped
+    policy:         'greedy' (capped aggregate, core/spatial.py),
+                    'spill' (online time-resolved re-routing), or
+                    'round_robin' (carbon-blind baseline)
+    forecast_h:     placement forecast horizon (hours)
+    """
+
+    def __init__(self, ci_traces, wb_traces=None, n_active_hosts=None,
+                 batt_capacity_kwh=None, batt_rate_kw=None,
+                 cooling_setpoint=None, seeds=None,
+                 capacity_frac: float | None = None, policy: str = "greedy",
+                 forecast_h: float = 24.0):
+        self.ci_traces = np.asarray(ci_traces, np.float32)
+        assert self.ci_traces.ndim == 2, (
+            f"ci_traces must be f32[R, S], got {self.ci_traces.shape}")
+        r = self.ci_traces.shape[0]
+        if policy not in POLICIES:
+            raise ValueError(f"unknown fleet policy '{policy}'; "
+                             f"pick one of {POLICIES}")
+        self.wb_traces = None
+        if wb_traces is not None:
+            self.wb_traces = np.asarray(wb_traces, np.float32)
+            assert self.wb_traces.shape[0] == r, (
+                f"wb_traces regions {self.wb_traces.shape[0]} != {r}")
+
+        def per_region(x, dtype):
+            if x is None:
+                return None
+            a = np.broadcast_to(np.asarray(x, dtype), (r,)).copy()
+            return a
+
+        self.n_active_hosts = per_region(n_active_hosts, np.int32)
+        self.batt_capacity_kwh = per_region(batt_capacity_kwh, np.float32)
+        self.batt_rate_kw = per_region(batt_rate_kw, np.float32)
+        self.cooling_setpoint = per_region(cooling_setpoint, np.float32)
+        self.seeds = per_region(seeds, np.int32)
+        self.capacity_frac = capacity_frac
+        self.policy = policy
+        self.forecast_h = float(forecast_h)
+
+    @property
+    def n_regions(self) -> int:
+        return self.ci_traces.shape[0]
+
+    def replace(self, **kw) -> "FleetSpec":
+        args = dict(ci_traces=self.ci_traces, wb_traces=self.wb_traces,
+                    n_active_hosts=self.n_active_hosts,
+                    batt_capacity_kwh=self.batt_capacity_kwh,
+                    batt_rate_kw=self.batt_rate_kw,
+                    cooling_setpoint=self.cooling_setpoint, seeds=self.seeds,
+                    capacity_frac=self.capacity_frac, policy=self.policy,
+                    forecast_h=self.forecast_h)
+        args.update(kw)
+        return FleetSpec(**args)
+
+    def per_region_dyn(self) -> dict:
+        """The spec's per-region dyn values as length-R arrays (the leaves
+        the fleet vmap maps over)."""
+        dyn = {}
+        for key, val in (("n_active_hosts", self.n_active_hosts),
+                         ("batt_capacity_kwh", self.batt_capacity_kwh),
+                         ("batt_rate_kw", self.batt_rate_kw),
+                         ("cooling_setpoint", self.cooling_setpoint),
+                         ("seed", self.seeds)):
+            if val is not None:
+                dyn[key] = jnp.asarray(val)
+        return dyn
+
+    def region_cores(self, hosts: HostTable) -> np.ndarray:
+        """f64[R] concurrent-core capacity per region (first-n active)."""
+        cores = np.asarray(hosts.cores, np.float64)
+        csum = np.concatenate([[0.0], np.cumsum(cores)])
+        if self.n_active_hosts is None:
+            return np.full(self.n_regions, csum[-1])
+        n = np.clip(self.n_active_hosts, 0, cores.shape[0])
+        return csum[n]
+
+    def capacity_core_h(self, tasks: TaskTable, hosts: HostTable):
+        """f64[R] aggregate core-hour caps from `capacity_frac`, split in
+        proportion to each region's core capacity; None when uncapped."""
+        if self.capacity_frac is None:
+            return None
+        arrival = np.asarray(tasks.arrival)
+        valid = np.isfinite(arrival)
+        total = float(np.sum((np.asarray(tasks.cores, np.float64)
+                              * np.asarray(tasks.duration, np.float64))[valid]))
+        share = self.region_cores(hosts)
+        share = share / max(share.sum(), 1e-9)
+        return self.capacity_frac * total * share
+
+
+def fleet_place(tasks: TaskTable, hosts: HostTable, fleet: FleetSpec,
+                dt_h: float, n_steps: int | None = None) -> np.ndarray:
+    """Run the fleet's placement policy.  Returns i32[T] region ids."""
+    if fleet.policy == "round_robin":
+        arrival = np.asarray(tasks.arrival)
+        valid = np.isfinite(arrival)
+        region = np.full(arrival.shape[0], -1, np.int32)
+        region[valid] = (np.arange(int(valid.sum()))
+                        % fleet.n_regions).astype(np.int32)
+        return region
+    if fleet.policy == "spill":
+        return spatial_assign_online(tasks, fleet.ci_traces, dt_h,
+                                     fleet.region_cores(hosts),
+                                     n_steps=n_steps,
+                                     forecast_h=fleet.forecast_h)
+    return spatial_assign(tasks, fleet.ci_traces, dt_h,
+                          capacity_core_h=fleet.capacity_core_h(tasks, hosts),
+                          forecast_h=fleet.forecast_h)
+
+
+def fleet_cell(tasks_r: TaskTable, hosts: HostTable, cfg: SimConfig,
+               ci_traces, wb_traces=None, scalar_dyn: dict | None = None,
+               per_region_dyn: dict | None = None) -> FleetResult:
+    """The jit/vmap-safe fleet program over PRE-PLACED stacked tables.
+
+    tasks_r: TaskTable with leading region axis [R, W] (split_by_region).
+    scalar_dyn: traced values shared by every region; per_region_dyn: dict
+    of length-R arrays, one value per region.  This is the cell the grid
+    engine vmaps — `simulate_fleet` is its host-side front door.
+    """
+    scalar_dyn = dict(scalar_dyn or {})
+    per_region_dyn = dict(per_region_dyn or {})
+    ci = jnp.asarray(ci_traces, jnp.float32)
+
+    def one(tt, tr, per_r, wb):
+        final, _ = simulate(tt, hosts, tr, cfg, dyn={**scalar_dyn, **per_r},
+                            weather_trace=wb)
+        return summarize(final, cfg)
+
+    if wb_traces is None:
+        per = jax.vmap(lambda tt, tr, d: one(tt, tr, d, None))(
+            tasks_r, ci, per_region_dyn)
+    else:
+        per = jax.vmap(one)(tasks_r, ci, per_region_dyn,
+                            jnp.asarray(wb_traces, jnp.float32))
+    return FleetResult(total=fleet_totals(per), per_region=per)
+
+
+def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
+                   fleet: FleetSpec, dyn: dict | None = None,
+                   region=None, width: int | None = None,
+                   jit: bool = True) -> FleetResult:
+    """Run R regional datacenters as one compiled vmapped program.
+
+    tasks: ONE fresh task table (as from `make_task_table`) — placement
+    happens here, at submission time, via `fleet.policy` (pass `region` to
+    override with a precomputed i32[T] assignment).  hosts: the per-region
+    host inventory (identical chassis across regions; heterogeneous *counts*
+    via `fleet.n_active_hosts`).  `dyn` adds traced values on top of the
+    spec: scalars apply to every region, length-R arrays per region.
+
+    Returns a FleetResult: `total` (fleet-aggregated SimResult) and
+    `per_region` (leading axis R).  With R=1 this reproduces
+    `simulate`+`summarize` bit-for-bit (tests/test_fleet.py).
+    """
+    if fleet.wb_traces is not None and not cfg.cooling.enabled:
+        # same contract as the grid path (ScenarioGrid._check_cfg): refuse
+        # to silently drop the per-region weather
+        raise ValueError("the fleet carries wb_traces but "
+                         "cfg.cooling.enabled is False: the per-region "
+                         "weather would be ignored")
+    if region is None:
+        region = fleet_place(tasks, hosts, fleet, cfg.dt_h,
+                             n_steps=cfg.n_steps)
+    stacked = split_by_region(tasks, region, fleet.n_regions, width=width)
+    per_region_dyn = fleet.per_region_dyn()
+    scalar_dyn = {}
+    for key, val in (dyn or {}).items():
+        arr = jnp.asarray(val)
+        if key in PER_REGION_KEYS and arr.ndim >= 1:
+            assert arr.shape[0] == fleet.n_regions, (
+                f"per-region dyn '{key}' has length {arr.shape[0]}, "
+                f"fleet has {fleet.n_regions} regions")
+            per_region_dyn[key] = arr
+        else:
+            scalar_dyn[key] = val
+
+    fn = _jitted_fleet_cell if jit else fleet_cell
+    return fn(stacked, hosts, cfg, jnp.asarray(fleet.ci_traces),
+              None if fleet.wb_traces is None
+              else jnp.asarray(fleet.wb_traces),
+              scalar_dyn, per_region_dyn)
+
+
+# one shared jit cache across simulate_fleet calls: same (shapes, cfg, dyn
+# keys) -> same compiled fleet program, so e.g. comparing placement policies
+# re-runs one executable instead of recompiling per policy
+_jitted_fleet_cell = jax.jit(fleet_cell, static_argnames=("cfg",))

@@ -25,6 +25,16 @@ Axis kinds:
       - `n_active_hosts`                     (horizontal scaling, core/scaling.py)
       - `cooling_setpoint`                   (thermal setpoint, core/thermal.py)
   * `seed_axis(seeds)` — PRNG seeds for the stochastic failure model.
+  * `region_axis(fleet)` — a multi-datacenter FLEET (core/fleet.py): the
+    FleetSpec's R regional datacenters (per-region carbon + weather traces,
+    host counts, battery sizing, setpoints) run INSIDE every grid cell as
+    one vmapped fleet program.  Not a swept dimension: the region axis shows
+    up as the TRAILING axis of the result's `per_region` fields, and each
+    cell additionally carries fleet-aggregated totals.  Placement (spatial
+    shifting) happens once, host-side, when the grid function is built.
+  * `fleet_axis(**named_values)` — per-region dyn vectors, values [K, R]:
+    the K grid points each supply one length-R vector (e.g. per-region
+    host-count products for spatial+HS studies).  Requires a `region_axis`.
 
 Usage — a climate x regions x battery-capacity grid in one program::
 
@@ -46,6 +56,19 @@ Usage — a climate x regions x battery-capacity grid in one program::
     # materialize the full grid): per-field min/argmin over axis 1
     best = sweep_grid(tasks, hosts, cfg, axes, reduce=("min", 1))
     best_idx = sweep_grid(tasks, hosts, cfg, axes, reduce=("argmin", 1))
+
+A FLEET grid — spatial shifting x horizontal scaling x battery in one
+compiled program (each cell is an R-region fleet, results are
+FleetResults)::
+
+    fleet = FleetSpec(ci_traces=ci, wb_traces=wb, capacity_frac=1.5)
+    res = sweep_grid(tasks, hosts, cfg, [
+        fleet_axis(n_active_hosts=counts),            # i32[K, R]
+        dyn_axis(batt_capacity_kwh=caps),             # f32[C]
+        region_axis(fleet),
+    ])
+    # res.total.*      : [K, C]      fleet-aggregated
+    # res.per_region.* : [K, C, R]   per-datacenter
 
 When `chunk_size` is omitted, it is derived automatically from a
 device-memory budget (`memory_budget_bytes`, default from
@@ -74,6 +97,8 @@ from .state import HostTable, TaskTable
 TRACE_KEY = "ci_trace"
 SEED_KEY = "seed"
 WEATHER_KEY = "wet_bulb_trace"
+FLEET_CI_KEY = "fleet_ci_traces"
+FLEET_WB_KEY = "fleet_wb_traces"
 
 _REDUCERS = {"min": jnp.min, "max": jnp.max,
              "argmin": jnp.argmin, "argmax": jnp.argmax}
@@ -82,9 +107,10 @@ _REDUCERS = {"min": jnp.min, "max": jnp.max,
 class Axis(NamedTuple):
     """One grid dimension: `names[j]` is swept with `values[j]` (zipped)."""
 
-    kind: str                      # 'trace' | 'weather' | 'dyn' | 'seed'
+    kind: str                      # 'trace'|'weather'|'dyn'|'seed'|'fleet'|'region'
     names: tuple[str, ...]         # dyn ctx keys (TRACE_KEY / SEED_KEY special)
     values: tuple[jax.Array, ...]  # equal leading dims = the axis length
+    meta: object = None            # kind-specific payload (region: FleetSpec)
 
     @property
     def length(self) -> int:
@@ -124,6 +150,40 @@ def weather_axis(wb_traces) -> Axis:
 def seed_axis(seeds) -> Axis:
     """PRNG-seed axis (stochastic failures replicate across seeds)."""
     return Axis("seed", (SEED_KEY,), (jnp.asarray(seeds, jnp.int32),))
+
+
+def region_axis(fleet) -> Axis:
+    """Fleet axis: the FleetSpec's R regional datacenters run inside every
+    grid cell (core/fleet.py).  Not a swept result dimension — per-region
+    results appear as the TRAILING axis of `per_region` fields.  Declare it
+    after the swept axes (it cannot lead a chunked/sharded grid)."""
+    values = (jnp.asarray(fleet.ci_traces, jnp.float32),)
+    names = (FLEET_CI_KEY,)
+    if fleet.wb_traces is not None:
+        values += (jnp.asarray(fleet.wb_traces, jnp.float32),)
+        names += (FLEET_WB_KEY,)
+    return Axis("region", names, values, meta=fleet)
+
+
+def fleet_axis(**named_values) -> Axis:
+    """Per-region dyn axis: each value is [K, R] — K grid points, each a
+    length-R vector applied region-wise inside the fleet cell (e.g.
+    `fleet_axis(n_active_hosts=counts)` sweeps per-region host-count
+    products).  Requires a `region_axis` in the same grid; multiple names
+    zip along K exactly like `dyn_axis`."""
+    if not named_values:
+        raise ValueError("fleet_axis needs at least one name=values pair")
+    names = tuple(named_values)
+    values = tuple(jnp.asarray(v) for v in named_values.values())
+    for n, v in zip(names, values):
+        if v.ndim != 2:
+            raise ValueError(f"fleet_axis '{n}' wants [K, R] values, "
+                             f"got shape {v.shape}")
+    lengths = {v.shape[0] for v in values}
+    if len(lengths) != 1:
+        raise ValueError(f"zipped fleet_axis values disagree on length: "
+                         f"{dict(zip(names, (v.shape for v in values)))}")
+    return Axis("fleet", names, values)
 
 
 def _normalize_reduce(reduce, ndim: int):
@@ -168,12 +228,38 @@ class ScenarioGrid:
                 seen.add(name)
         if base_dyn and (dup := seen & set(base_dyn)):
             raise ValueError(f"base dyn keys {sorted(dup)} shadow grid axes")
+        regions = [ax for ax in axes if ax.kind == "region"]
+        if len(regions) > 1:
+            raise ValueError("a grid can hold at most one region_axis")
+        self.fleet = regions[0].meta if regions else None
+        if self.fleet is not None:
+            if axes[0].kind == "region" and len(axes) > 1:
+                raise ValueError(
+                    "region_axis cannot be the grid's leading axis: declare "
+                    "it after the swept axes (chunking/sharding split the "
+                    "leading axis, and a fleet must never be split)")
+            if any(ax.kind in ("trace", "weather") for ax in axes):
+                raise ValueError(
+                    "region_axis already carries per-region carbon/weather "
+                    "traces; drop the trace_axis/weather_axis")
+            for ax in axes:
+                if ax.kind == "fleet":
+                    for n, v in zip(ax.names, ax.values):
+                        if v.shape[1] != self.fleet.n_regions:
+                            raise ValueError(
+                                f"fleet_axis '{n}' has {v.shape[1]} regions, "
+                                f"the fleet has {self.fleet.n_regions}")
+        elif any(ax.kind == "fleet" for ax in axes):
+            raise ValueError("fleet_axis sweeps per-region values: the grid "
+                             "also needs a region_axis(fleet)")
         self.axes = axes
         self.base_dyn = dict(base_dyn or {})
 
     @property
     def shape(self) -> tuple[int, ...]:
-        return tuple(ax.length for ax in self.axes)
+        """Leading result dimensions: one per SWEPT axis (the region axis is
+        intra-cell — its R shows up trailing on per_region fields)."""
+        return tuple(ax.length for ax in self.axes if ax.kind != "region")
 
     @property
     def n_scenarios(self) -> int:
@@ -183,7 +269,7 @@ class ScenarioGrid:
         return n
 
     def has_trace_axis(self) -> bool:
-        return any(ax.kind == "trace" for ax in self.axes)
+        return any(ax.kind in ("trace", "region") for ax in self.axes)
 
     def payloads(self) -> tuple:
         return tuple(ax.values for ax in self.axes)
@@ -201,21 +287,49 @@ class ScenarioGrid:
                                  "drop the ci_trace argument")
         elif ci_trace is None:
             raise ValueError("no trace_axis in the grid: pass ci_trace")
-        axes, base_dyn = self.axes, self.base_dyn
+        axes, base_dyn, fleet = self.axes, self.base_dyn, self.fleet
 
-        def base(*payloads):
-            ci = ci_trace
-            dyn = dict(base_dyn)
-            for ax, vals in zip(axes, payloads):
-                if ax.kind == "trace":
-                    ci = vals[0]
-                else:
-                    dyn.update(zip(ax.names, vals))
-            final, _ = simulate(tasks, hosts, ci, cfg, dyn=dyn)
-            return summarize(final, cfg)
+        if fleet is None:
+            def base(*payloads):
+                ci = ci_trace
+                dyn = dict(base_dyn)
+                for ax, vals in zip(axes, payloads):
+                    if ax.kind == "trace":
+                        ci = vals[0]
+                    else:
+                        dyn.update(zip(ax.names, vals))
+                final, _ = simulate(tasks, hosts, ci, cfg, dyn=dyn)
+                return summarize(final, cfg)
+        else:
+            # placement is exogenous and happens ONCE, here, host-side: the
+            # compiled grid sweeps what the placed fleet *runs*, not where
+            # tasks go (sweeping placement itself would re-place per cell)
+            from .fleet import fleet_cell, fleet_place
+            from .spatial import split_by_region
+            region = fleet_place(tasks, hosts, fleet, cfg.dt_h,
+                                 n_steps=cfg.n_steps)
+            stacked = split_by_region(tasks, region, fleet.n_regions)
+            spec_dyn = fleet.per_region_dyn()
+
+            def base(*payloads):
+                dyn = dict(base_dyn)
+                per_region = dict(spec_dyn)
+                ci = wb = None
+                for ax, vals in zip(axes, payloads):
+                    if ax.kind == "region":
+                        ci = vals[0]
+                        wb = vals[1] if len(vals) > 1 else None
+                    elif ax.kind == "fleet":
+                        per_region.update(zip(ax.names, vals))
+                    else:
+                        dyn.update(zip(ax.names, vals))
+                return fleet_cell(stacked, hosts, cfg, ci, wb,
+                                  scalar_dyn=dyn, per_region_dyn=per_region)
 
         fn = base
         for i in reversed(range(len(axes))):
+            if axes[i].kind == "region":
+                continue               # intra-cell: replicated, not vmapped
             in_axes = [None] * len(axes)
             in_axes[i] = 0
             fn = jax.vmap(fn, in_axes=tuple(in_axes))
@@ -226,6 +340,11 @@ class ScenarioGrid:
                 and any(ax.kind == "weather" for ax in self.axes)):
             raise ValueError("grid has a weather_axis but cfg.cooling.enabled "
                              "is False: the wet-bulb trace would be ignored")
+        if (self.fleet is not None and self.fleet.wb_traces is not None
+                and not cfg.cooling.enabled):
+            raise ValueError("the fleet carries wb_traces but "
+                             "cfg.cooling.enabled is False: the per-region "
+                             "weather would be ignored")
 
     def run(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
             ci_trace=None, *, chunk_size: int | None = None, mesh=None,
@@ -253,11 +372,19 @@ class ScenarioGrid:
         if chunk_size is not None and chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         self._check_cfg(cfg)
-        red = _normalize_reduce(reduce, len(self.axes))
+        red = _normalize_reduce(reduce, len(self.shape))
         fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
         if red is not None:
             fn = _apply_reduce(fn, red)
         payloads = self.payloads()
+        if self.axes[0].kind == "region":
+            # a lone region_axis: nothing is swept, so nothing to chunk or
+            # shard — the fleet's internal region vmap must never be split
+            if mesh is not None:
+                raise ValueError("cannot shard a grid whose only axis is the "
+                                 "region_axis: add a swept leading axis")
+            fn = jax.jit(fn) if jit else fn
+            return fn(*payloads)
         if chunk_size is None:
             chunk_size = self._auto_chunk_size(tasks, hosts, cfg,
                                                memory_budget_bytes)
@@ -298,6 +425,9 @@ class ScenarioGrid:
         inputs_bytes = len(StepInputs._fields) * cfg.n_steps * 4  # f32[S] each
         out_bytes = len(SimResult._fields) * 4
         per_cell = 2 * carry_bytes + inputs_bytes + out_bytes
+        if self.fleet is not None:
+            # every cell runs R regional engines (stacked tables + inputs)
+            per_cell *= self.fleet.n_regions
         per_lead = per_cell * (self.n_scenarios / max(lead, 1))
         return max(1, min(lead, int(budget_bytes // max(per_lead, 1.0))))
 
@@ -309,9 +439,10 @@ class ScenarioGrid:
         in_sh = tuple(
             jax.tree.map(lambda _: lead if i == 0 else repl, p)
             for i, p in enumerate(self.payloads()))
-        n = len(self.axes)
+        n = len(self.shape)  # swept dims only; per_region trailing axes of a
+        # fleet grid are shorter than the spec and stay replicated
         if red is None:
-            out_spec = P(*(spec + tuple(None for _ in self.axes[1:])))
+            out_spec = P(*(spec + tuple(None for _ in range(n - 1))))
         elif red[1] == 0:  # the sharded axis is reduced away -> replicated
             out_spec = P(*(None,) * (n - 1))
         else:
@@ -358,7 +489,7 @@ class ScenarioGrid:
         paper-scale grid allocates nothing.
         """
         self._check_cfg(cfg)
-        red = _normalize_reduce(reduce, len(self.axes))
+        red = _normalize_reduce(reduce, len(self.shape))
         fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
         if red is not None:
             fn = _apply_reduce(fn, red)

@@ -37,6 +37,11 @@ class SimResult(NamedTuple):
     n_interrupts: jax.Array
     batt_discharged_kwh: jax.Array
     lost_work_h: jax.Array
+    # raw outcome counts (unclamped): the exact weights fleet aggregation
+    # needs to recombine the ratio metrics above across regions
+    n_done: jax.Array              # tasks finished within the horizon
+    n_started: jax.Array           # tasks that ever started
+    n_decided: jax.Array           # SLA denominator (done or past deadline)
 
 
 def summarize(state: SimState, cfg: SimConfig) -> SimResult:
@@ -56,7 +61,8 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
     n_decided = jnp.maximum(jnp.sum(decided.astype(jnp.float32)), 1.0)
     n_viol = jnp.sum(violated_done.astype(jnp.float32)) + jnp.sum(
         violated_undone.astype(jnp.float32))
-    n_valid = jnp.maximum(jnp.sum(arrived.astype(jnp.float32)), 1.0)
+    n_arrived = jnp.sum(arrived.astype(jnp.float32))
+    n_valid = jnp.maximum(n_arrived, 1.0)
 
     n_done = jnp.maximum(jnp.sum(done.astype(jnp.float32)), 1.0)
     delay = jnp.where(done, jnp.maximum(tasks.finish - expected, 0.0), 0.0)
@@ -81,10 +87,63 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
         mean_delay_h=jnp.sum(delay) / n_done,
         mean_start_delay_h=jnp.sum(sdelay) / n_started,
         done_frac=jnp.sum(done.astype(jnp.float32)) / n_valid,
-        n_tasks=n_valid,
+        # raw arrived count (no min-1 clamp): fleet_totals sums and weights
+        # by it, and a clamp would phantom-count empty regions
+        n_tasks=n_arrived,
         n_interrupts=m.n_interrupts,
         batt_discharged_kwh=m.batt_discharged,
         lost_work_h=jnp.sum(jnp.where(arrived, tasks.lost_work, 0.0)),
+        n_done=jnp.sum(done.astype(jnp.float32)),
+        n_started=jnp.sum(started.astype(jnp.float32)),
+        n_decided=jnp.sum(decided.astype(jnp.float32)),
+    )
+
+
+def fleet_totals(per_region: SimResult, axis: int = 0) -> SimResult:
+    """Aggregate per-region SimResults into one fleet-level SimResult.
+
+    Additive fields (carbon, energy, water, counts, lost work) sum over the
+    region axis; ratio fields recombine EXACTLY from the raw outcome counts
+    (`n_done`/`n_started`/`n_decided`) rather than averaging the per-region
+    ratios, so a region with 3 tasks cannot outvote one with 3000.  PUE and
+    WUE are recomputed from the summed energies (fleet PUE is the
+    energy-weighted one).  `peak_power_kw` is the sum of per-region peaks:
+    regions are separate facilities, each provisioning its own grid feed, so
+    the fleet-level figure is the provisioning total (an upper bound on the
+    coincident peak).  jit/vmap-safe: pure jnp on stacked fields.
+    """
+    def s(x):
+        return jnp.sum(x, axis=axis)
+
+    def wmean(value, weight):
+        return (jnp.sum(value * weight, axis=axis)
+                / jnp.maximum(s(weight), 1.0))
+
+    p = per_region
+    it_safe = jnp.maximum(s(p.it_energy_kwh), 1e-9)
+    return SimResult(
+        total_carbon_kg=s(p.total_carbon_kg),
+        op_carbon_kg=s(p.op_carbon_kg),
+        emb_carbon_kg=s(p.emb_carbon_kg),
+        grid_energy_kwh=s(p.grid_energy_kwh),
+        dc_energy_kwh=s(p.dc_energy_kwh),
+        it_energy_kwh=s(p.it_energy_kwh),
+        cooling_energy_kwh=s(p.cooling_energy_kwh),
+        water_l=s(p.water_l),
+        pue=s(p.dc_energy_kwh) / it_safe,
+        wue_l_per_kwh=s(p.water_l) / it_safe,
+        peak_power_kw=s(p.peak_power_kw),
+        sla_violation_frac=wmean(p.sla_violation_frac, p.n_decided),
+        mean_delay_h=wmean(p.mean_delay_h, p.n_done),
+        mean_start_delay_h=wmean(p.mean_start_delay_h, p.n_started),
+        done_frac=wmean(p.done_frac, p.n_tasks),
+        n_tasks=s(p.n_tasks),
+        n_interrupts=s(p.n_interrupts),
+        batt_discharged_kwh=s(p.batt_discharged_kwh),
+        lost_work_h=s(p.lost_work_h),
+        n_done=s(p.n_done),
+        n_started=s(p.n_started),
+        n_decided=s(p.n_decided),
     )
 
 

@@ -1,4 +1,4 @@
-"""Spatial workload shifting — a NEW technique composed into STEAM.
+"""Spatial workload shifting — placement policies for the fleet engine.
 
 The paper evaluates temporal shifting and cites Sukprasert et al. on
 spatial+temporal shifting as the natural extension (§IX, §XI).  This module
@@ -6,95 +6,260 @@ demonstrates the composability claim (contribution C1) by adding the fourth
 technique without touching the engine: tasks are assigned at submission to
 one of R regional datacenters by a carbon-aware placement policy, then each
 region's sub-workload runs through the UNCHANGED engine — one vmapped
-program over regions, exactly like every other sweep.
+program over regions (core/fleet.py), exactly like every other sweep.
 
-Placement policy (practical, forecast-based — mirroring the temporal policy
-of §V-B2 rather than an oracle): each task goes to the region with the
-lowest mean forecast carbon intensity over [arrival, arrival+duration],
-subject to a per-region running-load cap (expected core-hours per region may
-not exceed `capacity_frac` of its share) — the capacity constraint is what
-the paper's §III argues analytical models forget.
+Placement policies (practical, forecast-based — mirroring the temporal
+policy of §V-B2 rather than an oracle):
+
+* ``spatial_assign`` (greedy): each task goes to the region with the lowest
+  mean forecast carbon intensity over [arrival, arrival+duration], subject
+  to a per-region aggregate core-hour cap — the capacity constraint the
+  paper's §III argues analytical models forget.  Implemented as an
+  optimistic-batch vectorized algorithm with EXACTLY the semantics of the
+  sequential greedy loop (kept as ``spatial_assign_reference``, the
+  executable spec of the differential test tier): capacity caps rarely bind,
+  so whole blocks of tasks resolve in a handful of numpy calls and placement
+  scales to 10^5+ tasks.
+* ``spatial_assign_online`` (spill): an online capacity-aware router that
+  tracks each region's *time-resolved* core occupancy; a task spills to the
+  next-cheapest region when its first choice is saturated anywhere inside
+  the task's own run window ("saturates mid-run"), not merely in aggregate.
 
 All placement happens host-side at build time (it is exogenous: it depends
 only on traces + the task list, like the engine's threshold precomputes).
+Ties in forecast CI break toward the lower region index; the processing
+order breaks arrival ties by (duration, cores) content — not input position
+— so placement is stable under permutations of identical tasks.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
-from .state import TaskTable, make_task_table, pad_task_table
+from .state import (TaskTable, make_task_table, pad_task_table,
+                    stack_task_tables)
+
+_BLOCK = 4096  # optimistic-batch size for the capped greedy
+
+
+def _mean_ci_matrix(traces: np.ndarray, arrival, duration, dt_h: float,
+                    forecast_h: float):
+    """f64[T, R] mean forecast CI per (task, region) over each task's window.
+
+    Shared by every placement policy AND the sequential reference, so the
+    implementations can only differ in the assignment logic, never in the
+    forecast arithmetic.  Returns (matrix, i0, i1) with the step-index
+    window [i0, i1) of each task.
+    """
+    r, s = traces.shape
+    csum = np.concatenate([np.zeros((r, 1), np.float64),
+                           np.cumsum(traces.astype(np.float64), axis=1)],
+                          axis=1)
+    horizon = np.minimum(np.asarray(duration, np.float64), forecast_h)
+    t0 = np.asarray(arrival, np.float64)
+    with np.errstate(invalid="ignore"):  # inf padding rows: clipped below
+        i0 = np.clip(np.nan_to_num(t0 / dt_h, posinf=0).astype(np.int64),
+                     0, s - 1)
+        i1 = np.clip(np.nan_to_num(np.ceil((t0 + horizon) / dt_h),
+                                   posinf=0).astype(np.int64), i0 + 1, s)
+    m = (csum[:, i1] - csum[:, i0]) / (i1 - i0)        # [R, T]
+    return m.T, i0, i1
+
+
+def placement_order(tasks: TaskTable) -> np.ndarray:
+    """FIFO processing order with content-based tie-breaking.
+
+    Arrival is the primary key; ties break by (duration, cores) rather than
+    input position, so permuting identical tasks permutes — never changes —
+    the multiset of (task, region) assignments (property-tested)."""
+    return np.lexsort((np.asarray(tasks.cores), np.asarray(tasks.duration),
+                       np.asarray(tasks.arrival)))
 
 
 def spatial_assign(tasks: TaskTable, traces, dt_h: float,
-                   capacity_core_h=None, forecast_h: float = 24.0):
+                   capacity_core_h=None, forecast_h: float = 24.0,
+                   backend: str = "numpy"):
     """Assign each task to a region.  Returns i32[T] region ids (-1 pad).
 
     traces: f32[R, S] carbon traces.  capacity_core_h: optional per-region
-    cap on total assigned core-hours (None = uncapped).
+    cap on total assigned core-hours (None = uncapped).  backend: 'numpy'
+    (default) or 'jax' for the uncapped argmin path (the capped path keeps
+    its load state host-side).
+
+    Greedy invariant: every task lands on the region with minimal mean
+    forecast CI among regions that still have aggregate headroom at its
+    (arrival-ordered) turn; when no region has headroom the least-loaded
+    region (relative to its cap) takes the overflow.
     """
     traces = np.asarray(traces, np.float32)
-    r, s = traces.shape
+    r = traces.shape[0]
     arrival = np.asarray(tasks.arrival)
-    duration = np.asarray(tasks.duration)
-    cores = np.asarray(tasks.cores)
     valid = np.isfinite(arrival)
-
-    csum = np.concatenate([np.zeros((r, 1), np.float64),
-                           np.cumsum(traces, axis=1)], axis=1)
-
-    def mean_ci(t0, t1):
-        i0 = np.clip(int(t0 / dt_h), 0, s - 1)
-        i1 = np.clip(int(np.ceil(t1 / dt_h)), i0 + 1, s)
-        return (csum[:, i1] - csum[:, i0]) / (i1 - i0)
-
-    load = np.zeros(r)
-    cap = (np.full(r, np.inf) if capacity_core_h is None
-           else np.asarray(capacity_core_h, np.float64))
     region = np.full(arrival.shape[0], -1, np.int32)
-    order = np.argsort(arrival)           # FIFO placement
-    for i in order:
-        if not valid[i]:
-            continue
-        horizon = min(duration[i], forecast_h)
-        ci = mean_ci(arrival[i], arrival[i] + horizon)
-        work = cores[i] * duration[i]
-        pref = np.argsort(ci)
-        for rr in pref:                   # cheapest region with headroom
-            if load[rr] + work <= cap[rr]:
-                region[i] = rr
-                load[rr] += work
-                break
-        else:                             # all full: least-loaded fallback
+    ci, _, _ = _mean_ci_matrix(traces, arrival, tasks.duration, dt_h,
+                               forecast_h)
+
+    if capacity_core_h is None:
+        # uncapped: placement is a pure per-task argmin — one vector op
+        if backend == "jax":
+            best = np.asarray(jnp.argmin(jnp.asarray(ci), axis=1))
+        else:
+            best = np.argmin(ci, axis=1)
+        region[valid] = best[valid].astype(np.int32)
+        return region
+
+    cap = np.asarray(capacity_core_h, np.float64)
+    work = (np.asarray(tasks.cores, np.float64)
+            * np.asarray(tasks.duration, np.float64))
+    order = placement_order(tasks)
+    order = order[valid[order]]
+    load = np.zeros(r, np.float64)
+    pos = 0
+    while pos < order.shape[0]:
+        blk = order[pos:pos + _BLOCK]
+        w = work[blk]
+        # cheapest region with headroom, judged from block-start loads
+        headroom = load[None, :] + w[:, None] <= cap[None, :]      # [b, R]
+        any_head = headroom.any(axis=1)
+        choice = np.argmin(np.where(headroom, ci[blk], np.inf), axis=1)
+        # within-block load each choice adds to its region, before each task
+        add = np.zeros((blk.shape[0], r))
+        add[np.arange(blk.shape[0]), choice] = w
+        before = np.cumsum(add, axis=0) - add
+        ok = any_head & (load[choice] + before[np.arange(blk.shape[0]), choice]
+                         + w <= cap[choice])
+        # the optimistic prefix is exact: loads only grow, so a region that
+        # was cheapest-with-headroom at block start and still fits the task
+        # at its turn is still cheapest-with-headroom (cheaper regions that
+        # lacked headroom cannot regain it)
+        k = int(np.argmax(~ok)) if not ok.all() else blk.shape[0]
+        taken = blk[:k]
+        region[taken] = choice[:k].astype(np.int32)
+        load += add[:k].sum(axis=0)
+        pos += k
+        if k < blk.shape[0] and not any_head[k]:
+            # all regions full for this task: least-loaded fallback, then
+            # re-enter the batch loop with the updated loads
+            i = blk[k]
             rr = int(np.argmin(load / np.maximum(cap, 1e-9)))
             region[i] = rr
-            load[rr] += work
+            load[rr] += work[i]
+            pos += 1
+        # else: a cap was crossed mid-block — re-evaluate from the violator
     return region
 
 
-def split_by_region(tasks: TaskTable, region, n_regions: int):
-    """Per-region padded task tables (equal row count for vmap batching)."""
+def spatial_assign_reference(tasks: TaskTable, traces, dt_h: float,
+                             capacity_core_h=None, forecast_h: float = 24.0):
+    """Sequential greedy placement — the executable spec.
+
+    One task at a time, in `placement_order`: cheapest region (mean forecast
+    CI over the task window) with aggregate headroom, least-loaded fallback.
+    `spatial_assign` must match this bit-for-bit (tests/test_fleet.py
+    differential tier); it exists because the vectorized batch algorithm's
+    correctness argument is subtle and this one's is not.
+    """
+    traces = np.asarray(traces, np.float32)
+    r = traces.shape[0]
+    arrival = np.asarray(tasks.arrival)
+    valid = np.isfinite(arrival)
+    ci, _, _ = _mean_ci_matrix(traces, arrival, tasks.duration, dt_h,
+                               forecast_h)
+    work = (np.asarray(tasks.cores, np.float64)
+            * np.asarray(tasks.duration, np.float64))
+    cap = (np.full(r, np.inf) if capacity_core_h is None
+           else np.asarray(capacity_core_h, np.float64))
+    load = np.zeros(r)
+    region = np.full(arrival.shape[0], -1, np.int32)
+    for i in placement_order(tasks):
+        if not valid[i]:
+            continue
+        for rr in np.argsort(ci[i], kind="stable"):
+            if load[rr] + work[i] <= cap[rr]:
+                region[i] = rr
+                load[rr] += work[i]
+                break
+        else:
+            rr = int(np.argmin(load / np.maximum(cap, 1e-9)))
+            region[i] = rr
+            load[rr] += work[i]
+    return region
+
+
+def spatial_assign_online(tasks: TaskTable, traces, dt_h: float,
+                          capacity_cores, n_steps: int | None = None,
+                          forecast_h: float = 24.0):
+    """Online capacity-aware re-routing ("spill" policy).
+
+    Tracks per-region core occupancy over TIME (not aggregate core-hours):
+    a task goes to the cheapest region whose occupancy stays within
+    `capacity_cores[r]` throughout the task's own run window, spilling to
+    the next-cheapest region when its first choice is saturated anywhere
+    mid-run; if every region saturates, the one with the smallest peak
+    overflow takes it.  This is the router an operator actually deploys —
+    aggregate caps admit tasks into regions that are full *right now*.
+
+    capacity_cores: f32[R] concurrent-core capacity per region.
+    Returns i32[T] region ids (-1 for padding rows).
+    """
+    traces = np.asarray(traces, np.float32)
+    r, s = traces.shape
+    s = s if n_steps is None else min(s, n_steps)
+    # truncate to the simulated horizon BEFORE the forecast matrix so the
+    # occupancy window indices (i0) and j1 share one step range — a task
+    # arriving past the horizon otherwise produces an inverted empty slice
+    traces = traces[:, :s]
+    arrival = np.asarray(tasks.arrival)
+    valid = np.isfinite(arrival)
+    cores = np.asarray(tasks.cores, np.float64)
+    duration = np.asarray(tasks.duration, np.float64)
+    cap = np.asarray(capacity_cores, np.float64)
+    ci, i0, _ = _mean_ci_matrix(traces, arrival, tasks.duration, dt_h,
+                                forecast_h)
+    # occupancy windows cover the full nominal run, not just the forecast
+    with np.errstate(invalid="ignore"):
+        j1 = np.clip(np.nan_to_num(np.ceil((arrival + duration) / dt_h),
+                                   posinf=0).astype(np.int64), i0 + 1, s)
+    occ = np.zeros((r, s))
+    region = np.full(arrival.shape[0], -1, np.int32)
+    for i in placement_order(tasks):
+        if not valid[i]:
+            continue
+        lo, hi = int(i0[i]), int(j1[i])
+        peak = occ[:, lo:hi].max(axis=1)          # [R] current peak in window
+        fits = peak + cores[i] <= cap
+        if fits.any():
+            rr = int(np.argmin(np.where(fits, ci[i], np.inf)))
+        else:                                     # least peak overflow
+            rr = int(np.argmin(peak + cores[i] - cap))
+        region[i] = rr
+        occ[rr, lo:hi] += cores[i]
+    return region
+
+
+def split_by_region(tasks: TaskTable, region, n_regions: int,
+                    width: int | None = None):
+    """Per-region padded task tables, stacked [R, W] for vmap batching.
+
+    width: pad every region's table to this many rows (default: the largest
+    region's count).  Pass `tasks.n` when a fixed, region-count-independent
+    shape is needed (e.g. comparing fleets of different R in one grid)."""
     region = np.asarray(region)
     arrival = np.asarray(tasks.arrival)
+    subsets = [np.where(region == rr)[0] for rr in range(n_regions)]
+    w = max(max((len(i) for i in subsets), default=0), 1)
+    if width is not None:
+        assert width >= w, f"width {width} < largest region {w}"
+        w = width
     out = []
-    width = 0
-    subsets = []
-    for rr in range(n_regions):
-        idx = np.where(region == rr)[0]
-        subsets.append(idx)
-        width = max(width, len(idx))
-    width = max(width, 1)
     for idx in subsets:
-        if len(idx):
-            t = make_task_table(arrival[idx],
-                                np.asarray(tasks.duration)[idx],
-                                np.asarray(tasks.cores)[idx],
-                                np.asarray(tasks.gpus)[idx],
-                                np.asarray(tasks.cpu_util)[idx],
-                                np.asarray(tasks.gpu_util)[idx])
-        else:
-            t = make_task_table(np.array([np.inf]), np.array([0.0]),
-                                np.array([0.0]))
-        out.append(pad_task_table(t, width))
-    import jax
-    return jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
-                        *out)
+        t = make_task_table(arrival[idx],
+                            np.asarray(tasks.duration)[idx],
+                            np.asarray(tasks.cores)[idx],
+                            np.asarray(tasks.gpus)[idx],
+                            np.asarray(tasks.cpu_util)[idx],
+                            np.asarray(tasks.gpu_util)[idx])
+        # empty regions become a full-width INVALID table through the same
+        # pad path as everyone else (no hand-built sentinel rows)
+        out.append(pad_task_table(t, w))
+    return stack_task_tables(out)

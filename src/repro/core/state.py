@@ -131,6 +131,16 @@ def make_task_table(arrival, duration, cores, gpus=None, cpu_util=None,
     )
 
 
+def stack_task_tables(tables) -> TaskTable:
+    """Stack equal-width task tables along a new leading region/batch axis.
+
+    The result [R, W] is what `jax.vmap(simulate)` consumes — the fleet
+    engine (core/fleet.py) and spatial splitting (core/spatial.py) both
+    batch per-region sub-workloads this way."""
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                        *tables)
+
+
 def pad_task_table(tasks: TaskTable, n: int) -> TaskTable:
     """Pad a task table to n rows with INVALID entries (for batching)."""
     t = tasks.n

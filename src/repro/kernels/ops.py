@@ -51,6 +51,26 @@ def facility_power(cpu_util, gpu_util, n_gpus, on, wet_bulb_c, setpoint_c,
         interpret=_INTERPRET)
 
 
+def facility_power_batched(cpu_util, gpu_util, n_gpus, on, wet_bulb_c,
+                           setpoint_c, cpu_cfg: PowerModelConfig,
+                           gpu_cfg: PowerModelConfig,
+                           cooling_cfg: CoolingConfig):
+    """Fleet-batched `facility_power`: every input carries a leading region
+    axis (utilizations [R, H], weather/setpoint [R]); returns
+    (power_kw[R, H], it_kw[R], cooling_kw[R], water_l_per_h[R]).
+
+    This is the batched facility-power path the fleet engine exercises when
+    `cfg.use_pallas` is set: `jax.vmap` lowers the kernel's pallas_call
+    through its batching rule (one fused program, the region axis folded
+    into the grid) rather than looping R kernel launches.  Kept as a public
+    op so the batched lowering is pinned by tests/test_kernels.py.
+    """
+    return jax.vmap(
+        lambda cu, gu, ng, o, wb, sp: facility_power(
+            cu, gu, ng, o, wb, sp, cpu_cfg, gpu_cfg, cooling_cfg)
+    )(cpu_util, gpu_util, n_gpus, on, wet_bulb_c, setpoint_c)
+
+
 def fused_power_carbon(cpu_util, gpu_util, n_gpus, on, ci, dt_h,
                        cpu_cfg: PowerModelConfig, gpu_cfg: PowerModelConfig):
     """(power_kw[H], dc_power_kw, op_carbon_kg) in one VMEM pass."""

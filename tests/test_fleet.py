@@ -1,0 +1,365 @@
+"""Differential tests for the fleet engine (core/fleet.py + grid axes).
+
+The contracts, mirroring PR 2's `cooling.enabled=False` invariant:
+  * `simulate_fleet` with R=1 == `simulate` + `summarize`, BIT-FOR-BIT:
+    the fleet path (placement, split, vmap, aggregation) must add nothing.
+  * the vectorized `spatial_assign` == the sequential reference, bit-for-bit,
+    capped and uncapped (the batch algorithm's correctness is subtle; the
+    reference's is not).
+  * a fleet grid (`region_axis` + `fleet_axis` + dyn axes) == the Python
+    loop of per-scenario `simulate_fleet` calls, in every execution mode
+    (plain / chunked / sharded / reduced) — the acceptance grid is
+    spatial x horizontal-scaling x battery in ONE compiled program.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (BatteryConfig, CoolingConfig, FleetSpec, ScenarioGrid,
+                        SimConfig, dyn_axis, fleet_axis, make_host_table,
+                        make_task_table, region_axis, seed_axis, simulate,
+                        simulate_fleet, spatial_assign,
+                        spatial_assign_online, spatial_assign_reference,
+                        summarize, sweep_grid, trace_axis)
+from repro.core.fleet import fleet_place
+
+N_STEPS = 96
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(7)
+    n = 40
+    tasks = make_task_table(np.sort(rng.uniform(0.0, 8.0, n)),
+                            rng.uniform(0.5, 4.0, n),
+                            rng.integers(1, 3, n).astype(float))
+    hosts = make_host_table(4, 4)
+    return tasks, hosts
+
+
+@pytest.fixture(scope="module")
+def traces():
+    t = np.arange(N_STEPS) * 0.25
+    return np.stack([300.0 + 200.0 * np.sin(2 * np.pi * t / 24.0 + p)
+                     for p in (0.0, 1.7, 3.1)]).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def wb_traces():
+    t = np.arange(N_STEPS) * 0.25
+    return np.stack([15.0 + 8.0 * np.sin(2 * np.pi * t / 24.0 + p)
+                     for p in (0.3, 2.0, 4.0)]).astype(np.float32)
+
+
+def _assert_results_equal(a, b, idx=(), rtol=None):
+    """Compare two SimResults field-for-field; rtol=None means bitwise."""
+    for f in a._fields:
+        x = np.asarray(getattr(a, f))
+        y = np.asarray(getattr(b, f))[idx] if idx != () else np.asarray(
+            getattr(b, f))
+        if rtol is None:
+            np.testing.assert_array_equal(x, y, err_msg=f)
+        else:
+            np.testing.assert_allclose(x, y, rtol=rtol, atol=1e-6,
+                                       err_msg=f)
+
+
+class TestSingleRegionEquivalence:
+    """The spatial analogue of PR 2's cooling-off invariant."""
+
+    def test_r1_fleet_reproduces_simulate_bitwise(self, workload, traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        ref = summarize(simulate(tasks, hosts, traces[0], cfg)[0], cfg)
+        res = simulate_fleet(tasks, hosts, cfg,
+                             FleetSpec(ci_traces=traces[:1]))
+        _assert_results_equal(ref, res.total)
+        _assert_results_equal(ref, res.per_region, idx=(0,))
+
+    def test_r1_fleet_with_weather_bitwise(self, workload, traces, wb_traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS, cooling=CoolingConfig(enabled=True))
+        ref = summarize(simulate(tasks, hosts, traces[0], cfg,
+                                 weather_trace=wb_traces[0])[0], cfg)
+        res = simulate_fleet(tasks, hosts, cfg,
+                             FleetSpec(ci_traces=traces[:1],
+                                       wb_traces=wb_traces[:1]))
+        _assert_results_equal(ref, res.total)
+
+    def test_r1_every_policy_identical(self, workload, traces):
+        """With one region every policy routes everything to it."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        base = None
+        for policy in ("greedy", "spill", "round_robin"):
+            res = simulate_fleet(tasks, hosts, cfg,
+                                 FleetSpec(ci_traces=traces[:1],
+                                           policy=policy))
+            if base is None:
+                base = res
+            else:
+                _assert_results_equal(base.total, res.total)
+
+
+class TestPlacementDifferential:
+    """Vectorized spatial_assign == the sequential executable spec."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    @pytest.mark.parametrize("capped", [False, True])
+    def test_vectorized_matches_reference(self, traces, seed, capped):
+        rng = np.random.default_rng(seed)
+        n = 200
+        tasks = make_task_table(np.sort(rng.uniform(0.0, 20.0, n)),
+                                rng.uniform(0.25, 6.0, n),
+                                rng.integers(1, 5, n).astype(float))
+        cap = None
+        if capped:
+            total = float(np.sum(np.asarray(tasks.cores)
+                                 * np.asarray(tasks.duration)))
+            # tight caps so they bind (incl. the least-loaded fallback)
+            cap = total * np.array([0.15, 0.3, 0.2])
+        got = spatial_assign(tasks, traces, 0.25, capacity_core_h=cap)
+        want = spatial_assign_reference(tasks, traces, 0.25,
+                                        capacity_core_h=cap)
+        np.testing.assert_array_equal(got, want)
+
+    def test_jax_backend_matches_numpy(self, workload, traces):
+        tasks, _ = workload
+        a = spatial_assign(tasks, traces, 0.25, backend="numpy")
+        b = spatial_assign(tasks, traces, 0.25, backend="jax")
+        np.testing.assert_array_equal(a, b)
+
+    def test_padding_rows_unassigned(self, traces):
+        from repro.core import pad_task_table
+        tasks = pad_task_table(
+            make_task_table([0.0, 1.0], [2.0, 2.0], [1.0, 1.0]), 6)
+        region = spatial_assign(tasks, traces, 0.25)
+        assert (region[2:] == -1).all() and (region[:2] >= 0).all()
+
+    def test_spill_respects_time_resolved_capacity(self, traces):
+        """Two long tasks that together exceed one region's concurrent
+        cores: the aggregate-capped greedy stacks them on the cheapest
+        region, the online spill router separates them."""
+        tasks = make_task_table([0.0, 0.0], [10.0, 10.0], [3.0, 3.0])
+        region_g = spatial_assign(tasks, traces, 0.25)
+        region_s = spatial_assign_online(tasks, traces, 0.25,
+                                         capacity_cores=np.array([4.0] * 3),
+                                         n_steps=N_STEPS)
+        assert region_g[0] == region_g[1]          # both on the cheapest
+        assert region_s[0] != region_s[1]          # spilled mid-run overlap
+
+    def test_spill_overflow_goes_least_overloaded(self, traces):
+        tasks = make_task_table([0.0, 0.0, 0.0], [10.0] * 3, [3.0] * 3)
+        region = spatial_assign_online(tasks, traces, 0.25,
+                                       capacity_cores=np.array([4.0] * 3),
+                                       n_steps=N_STEPS)
+        assert sorted(region.tolist()) == [0, 1, 2]  # one each
+
+
+class TestFleetGridMatchesLoop:
+    """The acceptance grid: spatial x HS x battery, one compiled program."""
+
+    @pytest.fixture(scope="class")
+    def grid_setup(self, workload, traces, wb_traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True),
+                        cooling=CoolingConfig(enabled=True))
+        fleet = FleetSpec(ci_traces=traces, wb_traces=wb_traces,
+                          capacity_frac=1.5)
+        counts = np.array([[4, 4, 4], [2, 4, 3], [1, 2, 4]], np.int32)
+        caps = np.array([2.0, 6.0], np.float32)
+        axes = [fleet_axis(n_active_hosts=counts),
+                dyn_axis(batt_capacity_kwh=caps), region_axis(fleet)]
+        full = sweep_grid(tasks, hosts, cfg, axes)
+        return tasks, hosts, cfg, fleet, counts, caps, axes, full
+
+    def test_grid_matches_per_scenario_loop(self, grid_setup):
+        tasks, hosts, cfg, fleet, counts, caps, axes, full = grid_setup
+        assert full.total.total_carbon_kg.shape == (3, 2)
+        assert full.per_region.total_carbon_kg.shape == (3, 2, 3)
+        for k in range(3):
+            for c in range(2):
+                one = simulate_fleet(tasks, hosts, cfg, fleet,
+                                     dyn={"n_active_hosts": counts[k],
+                                          "batt_capacity_kwh": caps[c]})
+                _assert_results_equal(one.total, full.total, idx=(k, c),
+                                      rtol=1e-5)
+                _assert_results_equal(one.per_region, full.per_region,
+                                      idx=(k, c), rtol=1e-5)
+
+    def test_chunked_and_sharded_match(self, grid_setup):
+        tasks, hosts, cfg, _, _, _, axes, full = grid_setup
+        chunked = sweep_grid(tasks, hosts, cfg, axes, chunk_size=2)
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+        sharded = sweep_grid(tasks, hosts, cfg, axes, mesh=mesh)
+        for other in (chunked, sharded):
+            _assert_results_equal(full.total, other.total, rtol=1e-6)
+            _assert_results_equal(full.per_region, other.per_region,
+                                  rtol=1e-6)
+
+    def test_reduce_inside_program(self, grid_setup):
+        tasks, hosts, cfg, _, _, _, axes, full = grid_setup
+        red = sweep_grid(tasks, hosts, cfg, axes, reduce=("min", 1))
+        assert red.total.total_carbon_kg.shape == (3,)
+        np.testing.assert_allclose(
+            np.asarray(red.total.total_carbon_kg),
+            np.asarray(full.total.total_carbon_kg).min(axis=1), rtol=1e-6)
+
+    def test_lower_whole_fleet_grid(self, grid_setup):
+        tasks, hosts, cfg, _, _, _, axes, _ = grid_setup
+        lowered = ScenarioGrid(axes).lower(tasks, hosts, cfg)
+        assert lowered.compile() is not None
+
+    def test_region_only_grid_equals_simulate_fleet(self, workload, traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        fleet = FleetSpec(ci_traces=traces)
+        solo = sweep_grid(tasks, hosts, cfg, [region_axis(fleet)])
+        base = simulate_fleet(tasks, hosts, cfg, fleet)
+        _assert_results_equal(base.total, solo.total, rtol=1e-6)
+
+    def test_seed_axis_composes_with_fleet(self, workload, traces):
+        """Stochastic failures sweep across a fleet grid: seed axis x fleet."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        from repro.core import FailureConfig
+        cfg = cfg.replace(failures=FailureConfig(enabled=True, mtbf_h=30.0))
+        fleet = FleetSpec(ci_traces=traces)
+        seeds = [0, 3]
+        res = sweep_grid(tasks, hosts, cfg,
+                         [seed_axis(seeds), region_axis(fleet)])
+        assert res.total.total_carbon_kg.shape == (2,)
+        for j, s in enumerate(seeds):
+            one = simulate_fleet(tasks, hosts, cfg, fleet, dyn={"seed": s})
+            _assert_results_equal(one.total, res.total, idx=(j,), rtol=1e-5)
+        # different seeds produce different failure draws somewhere
+        per = np.asarray(res.per_region.n_interrupts)
+        assert not np.array_equal(per[0], per[1])
+
+
+class TestFleetAggregation:
+    def test_totals_are_sums_and_exact_weighted_means(self, workload, traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        res = simulate_fleet(tasks, hosts, cfg, FleetSpec(ci_traces=traces))
+        per = res.per_region
+        for f in ("total_carbon_kg", "grid_energy_kwh", "dc_energy_kwh",
+                  "it_energy_kwh", "water_l", "n_done", "n_decided",
+                  "peak_power_kw", "lost_work_h"):
+            np.testing.assert_allclose(
+                float(getattr(res.total, f)),
+                float(np.sum(np.asarray(getattr(per, f)))), rtol=1e-6,
+                err_msg=f)
+        # exact count-weighted recombination, not a mean of ratios
+        want = (np.sum(np.asarray(per.mean_delay_h) * np.asarray(per.n_done))
+                / max(float(np.sum(np.asarray(per.n_done))), 1.0))
+        np.testing.assert_allclose(float(res.total.mean_delay_h), want,
+                                   rtol=1e-6)
+        assert float(res.total.pue) >= 1.0 - 1e-6
+
+    def test_empty_region_counts_zero_not_one(self, workload, traces):
+        """An uncapped greedy fleet can leave regions empty; their n_tasks
+        must be 0 (not the old min-1 clamp) so fleet totals and done_frac
+        stay exact."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        flat = np.stack([np.full(N_STEPS, v, np.float32)
+                         for v in (100.0, 200.0, 300.0)])
+        res = simulate_fleet(tasks, hosts, cfg, FleetSpec(ci_traces=flat))
+        per_counts = np.asarray(res.per_region.n_tasks)
+        n_valid = int(np.isfinite(np.asarray(tasks.arrival)).sum())
+        np.testing.assert_array_equal(per_counts, [n_valid, 0, 0])
+        assert float(res.total.n_tasks) == n_valid
+        assert float(res.total.done_frac) == pytest.approx(
+            float(res.per_region.done_frac[0]))
+
+    def test_spill_task_arriving_past_horizon(self, traces):
+        """A task arriving after n_steps must not crash the online router
+        (the occupancy window degenerates at the horizon edge)."""
+        tasks = make_task_table([0.0, 30.0], [2.0, 2.0], [1.0, 1.0])
+        region = spatial_assign_online(tasks, traces, 0.25,
+                                       capacity_cores=np.array([4.0] * 3),
+                                       n_steps=40)  # horizon = 10 h
+        assert (region >= 0).all()
+
+    def test_pallas_fleet_matches_reference_path(self, workload, traces,
+                                                 wb_traces):
+        """cfg.use_pallas exercises the batched facility-power kernel under
+        the fleet vmap; results match the pure-jnp engine."""
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=traces, wb_traces=wb_traces)
+        cfg = SimConfig(n_steps=N_STEPS, cooling=CoolingConfig(enabled=True))
+        a = simulate_fleet(tasks, hosts, cfg, fleet)
+        b = simulate_fleet(tasks, hosts, cfg.replace(use_pallas=True), fleet)
+        _assert_results_equal(a.total, b.total, rtol=1e-4)
+
+    def test_home_vs_aware_placement(self, workload, traces):
+        """Carbon-aware placement beats round-robin on op carbon (the
+        bench_spatial claim, pinned at test scale)."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        aware = simulate_fleet(tasks, hosts, cfg, FleetSpec(ci_traces=traces))
+        home = simulate_fleet(tasks, hosts, cfg,
+                              FleetSpec(ci_traces=traces,
+                                        policy="round_robin"))
+        assert (float(aware.total.op_carbon_kg)
+                < float(home.total.op_carbon_kg))
+
+
+class TestFleetGridValidation:
+    def test_fleet_axis_without_region_axis(self, workload, traces):
+        with pytest.raises(ValueError, match="region_axis"):
+            ScenarioGrid([fleet_axis(n_active_hosts=np.ones((2, 3),
+                                                            np.int32))])
+
+    def test_region_axis_leading_rejected(self, workload, traces):
+        fleet = FleetSpec(ci_traces=traces)
+        with pytest.raises(ValueError, match="leading axis"):
+            ScenarioGrid([region_axis(fleet),
+                          dyn_axis(batt_capacity_kwh=np.ones(2))])
+
+    def test_region_plus_trace_axis_rejected(self, traces):
+        fleet = FleetSpec(ci_traces=traces)
+        with pytest.raises(ValueError, match="trace_axis"):
+            ScenarioGrid([dyn_axis(batt_capacity_kwh=np.ones(2)),
+                          trace_axis(traces), region_axis(fleet)])
+
+    def test_fleet_axis_region_count_mismatch(self, traces):
+        fleet = FleetSpec(ci_traces=traces)  # R=3
+        with pytest.raises(ValueError, match="regions"):
+            ScenarioGrid([fleet_axis(n_active_hosts=np.ones((2, 4),
+                                                            np.int32)),
+                          region_axis(fleet)])
+
+    def test_fleet_weather_requires_cooling(self, workload, traces,
+                                            wb_traces):
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=traces, wb_traces=wb_traces)
+        with pytest.raises(ValueError, match="cooling.enabled"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=N_STEPS),
+                       [dyn_axis(batt_capacity_kwh=np.ones(2)),
+                        region_axis(fleet)])
+
+    def test_simulate_fleet_weather_requires_cooling(self, workload, traces,
+                                                     wb_traces):
+        """The direct entry point agrees with the grid path: wb_traces with
+        cooling disabled is an error, not a silent PUE=1 run."""
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=traces, wb_traces=wb_traces)
+        with pytest.raises(ValueError, match="cooling.enabled"):
+            simulate_fleet(tasks, hosts, SimConfig(n_steps=N_STEPS), fleet)
+
+    def test_bad_policy_rejected(self, traces):
+        with pytest.raises(ValueError, match="policy"):
+            FleetSpec(ci_traces=traces, policy="telepathy")
+
+    def test_region_only_grid_rejects_mesh(self, workload, traces):
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=traces)
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+        with pytest.raises(ValueError, match="only axis"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=N_STEPS),
+                       [region_axis(fleet)], mesh=mesh)

@@ -1,0 +1,67 @@
+"""Golden regression fixtures: tiny-seed SimResult snapshots.
+
+The grid/fleet equivalence tests prove *internal* consistency (one program
+== the per-scenario loop), but a refactor that changes the numbers
+everywhere at once sails through them.  These snapshots pin the actual
+metric values of three tiny, fully deterministic scenarios (JSON under
+tests/golden/); any silent drift across future refactors fails tier-1.
+
+Intentional metric changes: regenerate with `pytest --update-golden` and
+commit the diff — the snapshot diff *is* the review artifact.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (BatteryConfig, CoolingConfig, FleetSpec,
+                        ShiftingConfig, SimConfig, make_host_table,
+                        make_task_table, simulate, simulate_fleet, summarize)
+
+S = 96  # 1 day at dt=0.25
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(42)
+    n = 24
+    tasks = make_task_table(np.sort(rng.uniform(0.0, 8.0, n)),
+                            rng.uniform(0.5, 4.0, n),
+                            rng.integers(1, 3, n).astype(float))
+    hosts = make_host_table(4, 4)
+    return tasks, hosts
+
+
+@pytest.fixture(scope="module")
+def traces():
+    t = np.arange(S) * 0.25
+    return np.stack([300.0 + 200.0 * np.sin(2 * np.pi * t / 24.0 + p)
+                     for p in (0.0, 1.7, 3.1)]).astype(np.float32)
+
+
+def test_golden_core_battery_shifting(golden, workload, traces):
+    tasks, hosts = workload
+    cfg = SimConfig(n_steps=S,
+                    battery=BatteryConfig(enabled=True, capacity_kwh=4.0),
+                    shifting=ShiftingConfig(enabled=True))
+    res = summarize(simulate(tasks, hosts, traces[0], cfg)[0], cfg)
+    golden("core_battery_shifting", res)
+
+
+def test_golden_thermal(golden, workload, traces):
+    tasks, hosts = workload
+    t = np.arange(S) * 0.25
+    wb = (18.0 + 7.0 * np.sin(2 * np.pi * t / 24.0)).astype(np.float32)
+    cfg = SimConfig(n_steps=S, cooling=CoolingConfig(enabled=True))
+    res = summarize(simulate(tasks, hosts, traces[0], cfg,
+                             weather_trace=wb)[0], cfg)
+    golden("thermal", res)
+
+
+def test_golden_fleet(golden, workload, traces):
+    tasks, hosts = workload
+    fleet = FleetSpec(ci_traces=traces, n_active_hosts=[2, 4, 3],
+                      batt_capacity_kwh=[2.0, 5.0, 8.0], capacity_frac=1.2)
+    cfg = SimConfig(n_steps=S, battery=BatteryConfig(enabled=True))
+    res = simulate_fleet(tasks, hosts, cfg, fleet)
+    golden("fleet", res)

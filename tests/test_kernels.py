@@ -60,6 +60,34 @@ def test_facility_power_kernel(h, wb, sp):
     np.testing.assert_allclose(water, water_ref, rtol=1e-4, atol=1e-6)
 
 
+@pytest.mark.parametrize("r,h", [(1, 7), (4, 128), (3, 1000)])
+def test_facility_power_batched_matches_per_region_loop(r, h):
+    """The fleet-batched path (vmap over the pallas_call's batching rule)
+    == R independent kernel launches, per region and per output."""
+    from repro.core.config import CoolingConfig
+    rng = np.random.default_rng(r * h)
+    cpu_u = rng.uniform(0, 1, (r, h)).astype(np.float32)
+    gpu_u = rng.uniform(0, 1, (r, h)).astype(np.float32)
+    ngpu = rng.integers(0, 4, (r, h)).astype(np.float32)
+    on = (rng.uniform(size=(r, h)) < 0.8).astype(np.float32)
+    wb = rng.uniform(5.0, 35.0, r).astype(np.float32)
+    sp = rng.uniform(18.0, 28.0, r).astype(np.float32)
+    cpu_cfg = PowerModelConfig(80.0, 250.0, "sqrt")
+    gpu_cfg = PowerModelConfig(40.0, 300.0, "linear")
+    ccfg = CoolingConfig(enabled=True)
+    p, it, cool, water = ops.facility_power_batched(
+        cpu_u, gpu_u, ngpu, on, wb, sp, cpu_cfg, gpu_cfg, ccfg)
+    assert p.shape == (r, h) and it.shape == (r,)
+    for i in range(r):
+        p_i, it_i, cool_i, water_i = ops.facility_power(
+            cpu_u[i], gpu_u[i], ngpu[i], on[i], wb[i], sp[i],
+            cpu_cfg, gpu_cfg, ccfg)
+        np.testing.assert_allclose(p[i], p_i, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(it[i], it_i, rtol=1e-4)
+        np.testing.assert_allclose(cool[i], cool_i, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(water[i], water_i, rtol=1e-4, atol=1e-6)
+
+
 @pytest.mark.parametrize("k,h", [(4, 3), (16, 64), (64, 300)])
 def test_first_fit_kernel(k, h):
     rng = np.random.default_rng(k * h)

@@ -1,0 +1,164 @@
+"""Property-based tests (hypothesis) for spatial placement invariants.
+
+Four placement properties, checked on randomized workloads/fleets:
+  1. totality — every valid task is assigned exactly once, to a real region;
+     padding rows never are, and `split_by_region` partitions exactly.
+  2. capacity — a task only lands on a region past its cap when NO region
+     had headroom at its turn (the documented least-loaded fallback).
+  3. greediness — the chosen region has minimal mean forecast CI among
+     regions with headroom at the task's (arrival-ordered) turn.
+  4. permutation stability — shuffling the input order of tasks (including
+     arrival ties) permutes, never changes, the multiset of
+     (task signature, region) assignments.
+
+Properties 2+3 are verified with a sequential replay of the returned
+assignment, so they hold for the *vectorized* implementation on its own
+terms, not merely by equality with the reference.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property-based tier")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import make_task_table, pad_task_table  # noqa: E402
+from repro.core.spatial import (_mean_ci_matrix, placement_order,  # noqa: E402
+                                spatial_assign, split_by_region)
+
+DT = 0.25
+FORECAST_H = 24.0
+
+
+@st.composite
+def placement_case(draw):
+    seed = draw(st.integers(0, 2**16))
+    n = draw(st.integers(1, 120))
+    r = draw(st.integers(1, 5))
+    tie_frac = draw(st.floats(0.0, 1.0))
+    cap_scale = draw(st.one_of(st.none(), st.floats(0.05, 2.0)))
+    rng = np.random.default_rng(seed)
+    arrival = rng.uniform(0.0, 24.0, n)
+    # force arrival ties (quantize a fraction of tasks to a coarse grid)
+    ties = rng.uniform(size=n) < tie_frac
+    arrival[ties] = np.round(arrival[ties] / 4.0) * 4.0
+    duration = rng.uniform(0.25, 8.0, n)
+    cores = rng.integers(1, 5, n).astype(float)
+    s = int(48.0 / DT)
+    t = np.arange(s) * DT
+    traces = np.stack([
+        rng.uniform(50.0, 600.0)
+        * (1.0 + rng.uniform(0.0, 0.8) * np.sin(2 * np.pi * t / 24.0
+                                                + rng.uniform(0, 6)))
+        for _ in range(r)]).astype(np.float32)
+    cap = None
+    if cap_scale is not None:
+        total = float(np.sum(cores * duration))
+        cap = total * cap_scale * rng.dirichlet(np.ones(r)) * r / max(r, 1)
+    return dict(arrival=arrival, duration=duration, cores=cores,
+                traces=traces, cap=cap, rng_seed=seed)
+
+
+def _build(case, pad_to=None):
+    tasks = make_task_table(case["arrival"], case["duration"], case["cores"])
+    if pad_to:
+        tasks = pad_task_table(tasks, pad_to)
+    return tasks
+
+
+def _replay(tasks, traces, region, cap):
+    """Sequential replay of an assignment; asserts properties 2 and 3."""
+    r = traces.shape[0]
+    ci, _, _ = _mean_ci_matrix(traces, np.asarray(tasks.arrival),
+                               np.asarray(tasks.duration), DT, FORECAST_H)
+    work = np.asarray(tasks.cores, np.float64) * np.asarray(tasks.duration,
+                                                            np.float64)
+    cap = np.full(r, np.inf) if cap is None else np.asarray(cap, np.float64)
+    load = np.zeros(r)
+    valid = np.isfinite(np.asarray(tasks.arrival))
+    for i in placement_order(tasks):
+        if not valid[i]:
+            continue
+        rr = int(region[i])
+        headroom = load + work[i] <= cap
+        if headroom.any():
+            # property 2: never overflow while an open region exists
+            assert headroom[rr], (
+                f"task {i} put on full region {rr} while {np.where(headroom)} "
+                f"had headroom")
+            # property 3: cheapest open region wins (ties: lowest index)
+            best = int(np.argmin(np.where(headroom, ci[i], np.inf)))
+            assert ci[i][rr] == ci[i][best], (
+                f"task {i} on region {rr} (ci {ci[i][rr]}) but open region "
+                f"{best} is cheaper (ci {ci[i][best]})")
+        load[rr] += work[i]
+
+
+@settings(max_examples=40, deadline=None)
+@given(placement_case())
+def test_every_valid_task_assigned_exactly_once(case):
+    pad = case["arrival"].shape[0] + 5
+    tasks = _build(case, pad_to=pad)
+    r = case["traces"].shape[0]
+    region = spatial_assign(tasks, case["traces"], DT,
+                            capacity_core_h=case["cap"])
+    valid = np.isfinite(np.asarray(tasks.arrival))
+    assert ((region[valid] >= 0) & (region[valid] < r)).all()
+    assert (region[~valid] == -1).all()
+    # split_by_region partitions: every valid row in exactly one region table
+    stacked = split_by_region(tasks, region, r)
+    n_rows = sum(int(np.isfinite(np.asarray(stacked.arrival)[rr]).sum())
+                 for rr in range(r))
+    assert n_rows == int(valid.sum())
+
+
+@settings(max_examples=40, deadline=None)
+@given(placement_case())
+def test_capacity_and_greedy_invariants(case):
+    tasks = _build(case)
+    region = spatial_assign(tasks, case["traces"], DT,
+                            capacity_core_h=case["cap"])
+    _replay(tasks, case["traces"], region, case["cap"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(placement_case(), st.integers(0, 2**16))
+def test_permutation_stable_under_arrival_ties(case, perm_seed):
+    """Shuffling input rows (ties included) leaves the multiset of
+    (signature, region) pairs unchanged — placement depends on content,
+    not input position."""
+    rng = np.random.default_rng(perm_seed)
+    perm = rng.permutation(case["arrival"].shape[0])
+    a = spatial_assign(_build(case), case["traces"], DT,
+                       capacity_core_h=case["cap"])
+    shuffled = dict(case, arrival=case["arrival"][perm],
+                    duration=case["duration"][perm],
+                    cores=case["cores"][perm])
+    b = spatial_assign(_build(shuffled), case["traces"], DT,
+                       capacity_core_h=case["cap"])
+
+    def signature_multiset(c, region):
+        t = _build(c)
+        order = placement_order(t)
+        sig = np.stack([np.asarray(t.arrival)[order],
+                        np.asarray(t.duration)[order],
+                        np.asarray(t.cores)[order],
+                        region[order].astype(np.float64)], axis=1)
+        return sig[np.lexsort(sig.T)]
+
+    np.testing.assert_array_equal(signature_multiset(case, a),
+                                  signature_multiset(shuffled, b))
+
+
+@settings(max_examples=15, deadline=None)
+@given(placement_case())
+def test_uncapped_is_pure_argmin(case):
+    """With no caps the greedy collapses to a per-task argmin — the fully
+    vectorized fast path must equal that closed form."""
+    tasks = _build(case)
+    region = spatial_assign(tasks, case["traces"], DT, capacity_core_h=None)
+    ci, _, _ = _mean_ci_matrix(case["traces"], np.asarray(tasks.arrival),
+                               np.asarray(tasks.duration), DT, FORECAST_H)
+    np.testing.assert_array_equal(region, np.argmin(ci, axis=1))
