@@ -1,23 +1,35 @@
-"""Paper Fig 9/14/15: peak power, mean task delay, and total energy per
-technique combination (the trade-off panel).
+"""Paper Fig 9/14/15: peak power, mean task delay, total energy AND cost per
+technique combination (the trade-off panel), on the grid API.
 
 Validates: batteries raise PEAK grid draw (up to ~8x in the paper) while
 leaving task delay untouched; temporal shifting adds hours of delay but no
-power spike; technique choice barely changes total energy.
+power spike; technique choice barely changes total energy.  With the
+pricing subsystem on, every combo is one `sweep_grid` program over a
+`price_axis` of synthetic tariff scenarios, so each row also carries the
+simulated bill (energy + demand charges) — and the battery combos
+additionally sweep `dispatch_lambda` to trace the cost-carbon Pareto front
+in the same compiled program (the triangle the paper's §XI points at).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import ShiftingConfig, simulate, summarize
-from .common import battery_cfg, pct, regions, save_rows, setup
+from repro.core import (PricingConfig, ShiftingConfig, dyn_axis, price_axis,
+                        sweep_grid)
+from repro.pricetraces.synthetic import make_price_traces
+from .common import DT_H, battery_cfg, pct, regions, save_rows, setup
+
+LAMBDAS = (0.0, 0.5, 1.0)  # pure price-arbitrage .. pure carbon dispatch
 
 
 def run(quick: bool = True):
     rows = []
     for wl in ("surf", "marconi", "borg"):
         tasks, hosts, meta, cfg = setup(wl, quick)
+        cfg = cfg.replace(pricing=PricingConfig(enabled=True,
+                                                demand_charge_per_kw=12.0))
         trace = regions(2, cfg.n_steps, seed=7)[1]
+        prices = make_price_traces(cfg.n_steps, DT_H, 2, seed=7)
         combos = {
             "none": cfg,
             "B": cfg.replace(battery=battery_cfg(meta)),
@@ -26,13 +38,36 @@ def run(quick: bool = True):
                                 shifting=ShiftingConfig(enabled=True)),
         }
         for name, c in combos.items():
-            res = summarize(simulate(tasks, hosts, trace, c)[0], c)
+            # one compiled grid per combo: P tariff scenarios in one program
+            res = sweep_grid(tasks, hosts, c, [price_axis(prices)],
+                             ci_trace=trace)
+            cell = lambda f, p=0: pct(np.asarray(getattr(res, f))[p])
             rows.append({
                 "bench": "tradeoffs", "workload": wl, "combo": name,
-                "metric": "peak_power_kw", "value": pct(res.peak_power_kw),
-                "mean_delay_h": pct(res.mean_delay_h),
-                "energy_mwh": pct(res.dc_energy_kwh / 1000.0),
-                "grid_energy_mwh": pct(res.grid_energy_kwh / 1000.0),
+                "metric": "peak_power_kw", "value": cell("peak_power_kw"),
+                "mean_delay_h": cell("mean_delay_h"),
+                "energy_mwh": pct(np.asarray(res.dc_energy_kwh)[0] / 1000.0),
+                "grid_energy_mwh": pct(np.asarray(res.grid_energy_kwh)[0]
+                                       / 1000.0),
+                "energy_cost": cell("energy_cost"),
+                "demand_cost": cell("demand_cost"),
+                "total_cost": cell("total_cost"),
+                "total_cost_alt_tariff": cell("total_cost", 1),
+            })
+        # cost-carbon Pareto: lambda x tariff in ONE program (blended dispatch)
+        c = combos["B"].replace(
+            battery=battery_cfg(meta, policy="blended", price_window_h=48.0))
+        front = sweep_grid(tasks, hosts, c, [
+            dyn_axis(dispatch_lambda=np.asarray(LAMBDAS, np.float32)),
+            price_axis(prices),
+        ], ci_trace=trace)
+        for i, lam in enumerate(LAMBDAS):
+            rows.append({
+                "bench": "tradeoffs", "workload": wl,
+                "combo": f"B(lambda={lam})", "metric": "total_cost",
+                "value": pct(np.asarray(front.total_cost)[i, 0]),
+                "total_carbon_kg": pct(np.asarray(front.total_carbon_kg)[i, 0]),
+                "peak_power_kw": pct(np.asarray(front.peak_power_kw)[i, 0]),
             })
     save_rows("tradeoffs", rows)
     return rows
@@ -51,4 +86,17 @@ def check(rows) -> list[str]:
                    f"({'OK' if d_ts > 0.5 and d_b < 0.1 else 'WEAK'})")
         de = abs(by['TS']['energy_mwh'] - by['none']['energy_mwh'])
         out.append(f"F5 {wl}: TS energy delta {de:.2f} MWh (idle-draw effect)")
+        # cost leg: the battery spike is BILLED (demand charge), and sliding
+        # lambda from carbon to price dispatch must not raise the bill
+        dc_up = by["B"]["demand_cost"] - by["none"]["demand_cost"]
+        out.append(f"§XI {wl}: battery demand-charge delta {dc_up:+.1f} "
+                   f"({'OK' if dc_up > 0 else 'WEAK'}: spikes are billed)")
+        c0 = by[f"B(lambda={LAMBDAS[0]})"]
+        c1 = by[f"B(lambda={LAMBDAS[-1]})"]
+        out.append(
+            f"§XI {wl}: Pareto ends cost {c0['value']:.1f} vs "
+            f"{c1['value']:.1f}, carbon {c0['total_carbon_kg']:.1f} vs "
+            f"{c1['total_carbon_kg']:.1f} "
+            f"({'OK' if c0['value'] <= c1['value'] * 1.02 else 'WEAK'}: "
+            f"price dispatch should not cost more)")
     return out

@@ -12,6 +12,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--fast" ]]; then
   shift
   exec python -m pytest -x -q tests/test_core_sim.py tests/test_grid.py \
-    tests/test_fleet.py tests/test_golden.py tests/test_kernels.py "$@"
+    tests/test_fleet.py tests/test_pricing.py tests/test_pricing_properties.py \
+    tests/test_golden.py tests/test_kernels.py "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -1,12 +1,16 @@
 """steamx core: the OpenDC-STEAM technique, tensorized for TPU."""
+from .battery import dispatch_decision
 from .config import (BatteryConfig, CoolingConfig, EmbodiedConfig,
-                     FailureConfig, PowerModelConfig, SchedulerConfig,
-                     ShiftingConfig, SimConfig, techniques)
+                     FailureConfig, PowerModelConfig, PricingConfig,
+                     SchedulerConfig, ShiftingConfig, SimConfig, techniques)
 from .engine import (StepInputs, build_step_fn, build_step_inputs,
                      default_pipeline, simulate)
 from .fleet import FleetResult, FleetSpec, fleet_place, simulate_fleet
-from .grid import (Axis, ScenarioGrid, dyn_axis, fleet_axis, region_axis,
-                   seed_axis, sweep_grid, trace_axis, weather_axis)
+from .grid import (Axis, ScenarioGrid, dyn_axis, fleet_axis, price_axis,
+                   region_axis, seed_axis, sweep_grid, trace_axis,
+                   weather_axis)
+from .pricing import (flat_energy_cost, precompute_price_signals,
+                      pricing_step, settle_demand_charge)
 from .metrics import (SimResult, carbon_reduction_pct, fleet_totals,
                       summarize)
 from .spatial import (spatial_assign, spatial_assign_online,
@@ -23,11 +27,14 @@ from .sweep import (lower_sweep, sharded_sweep, sweep_battery_sizes,
 
 __all__ = [
     "BatteryConfig", "CoolingConfig", "EmbodiedConfig", "FailureConfig",
-    "PowerModelConfig", "SchedulerConfig", "ShiftingConfig", "SimConfig",
+    "PowerModelConfig", "PricingConfig", "SchedulerConfig", "ShiftingConfig",
+    "SimConfig",
     "techniques", "StepInputs", "build_step_fn", "build_step_inputs",
     "default_pipeline", "simulate", "FleetResult", "FleetSpec",
     "fleet_place", "simulate_fleet", "Axis", "ScenarioGrid", "dyn_axis",
-    "fleet_axis", "region_axis", "seed_axis", "sweep_grid", "trace_axis",
+    "fleet_axis", "price_axis", "region_axis", "seed_axis", "sweep_grid",
+    "trace_axis", "dispatch_decision", "flat_energy_cost",
+    "precompute_price_signals", "pricing_step", "settle_demand_charge",
     "weather_axis", "SimResult", "carbon_reduction_pct", "fleet_totals",
     "summarize", "spatial_assign", "spatial_assign_online",
     "spatial_assign_reference", "split_by_region", "chiller_cop",

@@ -1,14 +1,29 @@
-"""Battery model + threshold charge/discharge policy (paper §V-B1).
+"""Battery model + dispatch policies (paper §V-B1, extended with cost).
 
-Policy: charge while the carbon intensity is below a rolling-mean threshold
-(past week), discharge above it.  As an optimization the battery waits until
-the carbon intensity stops decreasing before charging (charging at the trough
-rather than on the way down).  Charge/discharge rate scales linearly with
-capacity (3 kW/kWh by default).
+Three dispatch policies decide when to charge/discharge (the storage
+*physics* — C-rate caps, round-trip efficiency, SoC clipping — is shared):
 
-The threshold and trough signals depend only on the exogenous carbon trace, so
-they are precomputed outside the scan (`precompute_battery_signals`) — a
-tensorization win unavailable to the event-driven design.
+  * 'carbon'  — the paper's policy: charge while the carbon intensity is
+    below a rolling-mean threshold (past week), discharge above it, and
+    optionally wait for the trough (charge when the intensity stops
+    decreasing, not on the way down).
+  * 'price'   — spot-market arbitrage: charge while the price is strictly
+    below the forward `price_charge_quantile`, discharge strictly above
+    the `price_discharge_quantile` (bands from
+    core/pricing.precompute_price_signals; a constant price trace makes
+    both conditions vacuous, so arbitrage degenerates to a no-op).
+  * 'blended' — a carbon-vs-cost objective: normalized margins of the two
+    policies mixed by `dispatch_lambda` (1 = pure carbon, 0 = pure price).
+    `dispatch_lambda` may be a TRACED scalar (dyn ctx key
+    `dispatch_lambda`), so `dyn_axis(dispatch_lambda=[...])` sweeps the
+    whole cost-carbon Pareto front in one compiled program; the endpoints
+    select the exact single-objective decisions, so lambda=1 reproduces
+    'carbon' (and lambda=0 'price') bit-for-bit.
+
+The threshold/trough/band signals depend only on the exogenous traces, so
+they are precomputed outside the scan (`precompute_battery_signals`,
+`pricing.precompute_price_signals`) — a tensorization win unavailable to
+the event-driven design.
 """
 from __future__ import annotations
 
@@ -16,6 +31,8 @@ import jax.numpy as jnp
 
 from .config import BatteryConfig
 from .state import BatteryState
+
+POLICIES = ("carbon", "price", "blended")
 
 
 def precompute_battery_signals(ci_trace, dt_h: float, cfg: BatteryConfig):
@@ -37,15 +54,68 @@ def precompute_battery_signals(ci_trace, dt_h: float, cfg: BatteryConfig):
     return threshold, ci_rising
 
 
+def dispatch_decision(cfg: BatteryConfig, charge, ci, threshold, ci_rising,
+                      price=None, price_lo=None, price_hi=None,
+                      dispatch_lambda=None):
+    """(want_charge, want_discharge) bools under the configured policy.
+
+    The policy string is static (it selects the compiled decision logic);
+    `dispatch_lambda` is traced so grids can sweep the blend.  The blended
+    endpoints are selected EXACTLY (`jnp.where` on lambda >= 1 / <= 0)
+    rather than relying on the mixed score's sign, which keeps lambda=1
+    bitwise identical to the 'carbon' policy (tests/test_pricing_properties).
+    """
+    want_charge = ci < threshold
+    if cfg.wait_for_trough:
+        want_charge = want_charge & ci_rising
+    want_discharge = (ci > threshold) & (charge > 0.0)
+    if cfg.policy == "carbon":
+        return want_charge, want_discharge
+    if cfg.policy not in POLICIES:
+        raise ValueError(f"unknown battery dispatch policy '{cfg.policy}'; "
+                         f"pick one of {POLICIES}")
+    if price is None or price_lo is None or price_hi is None:
+        raise ValueError(f"battery policy '{cfg.policy}' needs price "
+                         "signals: enable cfg.pricing (core/pricing.py)")
+    p_charge = price < price_lo
+    p_discharge = (price > price_hi) & (charge > 0.0)
+    if cfg.policy == "price":
+        return p_charge, p_discharge
+    lam = (jnp.float32(cfg.dispatch_lambda) if dispatch_lambda is None
+           else dispatch_lambda)
+    # normalized margins: carbon in units of its rolling-mean threshold,
+    # price in units of the arbitrage band's midpoint — both dimensionless,
+    # so the lambda mix is scale-free (gCO2/kWh vs $/kWh never compare raw)
+    c_ref = jnp.maximum(threshold, 1e-6)
+    p_ref = jnp.maximum(0.5 * (price_lo + price_hi), 1e-6)
+    charge_score = (lam * (threshold - ci) / c_ref
+                    + (1.0 - lam) * (price_lo - price) / p_ref)
+    discharge_score = (lam * (ci - threshold) / c_ref
+                       + (1.0 - lam) * (price - price_hi) / p_ref)
+    b_charge = charge_score > 0.0
+    if cfg.wait_for_trough:
+        b_charge = b_charge & ci_rising
+    b_discharge = (discharge_score > 0.0) & (charge > 0.0)
+    pure_c = lam >= 1.0
+    pure_p = lam <= 0.0
+    blended_charge = jnp.where(pure_c, want_charge,
+                               jnp.where(pure_p, p_charge, b_charge))
+    blended_discharge = jnp.where(pure_c, want_discharge,
+                                  jnp.where(pure_p, p_discharge, b_discharge))
+    return blended_charge, blended_discharge
+
+
 def battery_step(batt: BatteryState, dc_power_kw, ci, threshold, ci_rising,
                  dt_h: float, cfg: BatteryConfig, capacity_kwh=None,
-                 rate_kw=None):
+                 rate_kw=None, price=None, price_lo=None, price_hi=None,
+                 dispatch_lambda=None):
     """One battery decision.  Returns (new_state, grid_power_kw, discharged_kwh).
 
     Charging ADDS to the grid draw (this is the power-spike effect the paper
     quantifies in Fig 9A); discharging serves datacenter load from storage.
     `capacity_kwh` / `rate_kw` may be traced values to sweep battery sizing
-    inside a single compiled program (paper Fig 7/8/12).
+    inside a single compiled program (paper Fig 7/8/12); `price`/`price_lo`/
+    `price_hi`/`dispatch_lambda` feed the price-aware dispatch policies.
     """
     if not cfg.enabled:
         return batt, dc_power_kw, jnp.float32(0.0)
@@ -55,10 +125,10 @@ def battery_step(batt: BatteryState, dc_power_kw, ci, threshold, ci_rising,
                else rate_kw)
     eff = jnp.float32(cfg.round_trip_efficiency)
 
-    want_charge = ci < threshold
-    if cfg.wait_for_trough:
-        want_charge = want_charge & ci_rising
-    want_discharge = (ci > threshold) & (batt.charge > 0.0)
+    want_charge, want_discharge = dispatch_decision(
+        cfg, batt.charge, ci, threshold, ci_rising, price=price,
+        price_lo=price_lo, price_hi=price_hi,
+        dispatch_lambda=dispatch_lambda)
 
     # charge: limited by C-rate and remaining headroom
     headroom_kw = (cap - batt.charge) / dt_h

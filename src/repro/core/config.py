@@ -38,6 +38,20 @@ class BatteryConfig:
     threshold_window_h: float = 168.0
     # wait until carbon intensity stops decreasing before charging
     wait_for_trough: bool = True
+    # dispatch policy (core/battery.dispatch_decision):
+    #   'carbon'  : the paper's carbon-greedy threshold policy (default)
+    #   'price'   : arbitrage against the forward price quantiles
+    #   'blended' : carbon-vs-cost objective weighted by `dispatch_lambda`
+    # 'price'/'blended' need the pricing subsystem (cfg.pricing.enabled);
+    # `dispatch_lambda` may be a traced dyn value (grid axis) — 1 is pure
+    # carbon (bitwise the 'carbon' policy), 0 pure price arbitrage.
+    policy: str = "carbon"
+    dispatch_lambda: float = 1.0
+    # forward window + quantile levels for the price-arbitrage signals
+    # (precomputed like the shifting threshold, core/pricing.py)
+    price_window_h: float = 168.0
+    price_charge_quantile: float = 0.25
+    price_discharge_quantile: float = 0.75
 
     @property
     def charge_rate_kw(self) -> float:
@@ -93,6 +107,26 @@ class CoolingConfig:
 
 
 @dataclass(frozen=True)
+class PricingConfig:
+    """Electricity-price model (core/pricing.py).
+
+    Disabled by default: the engine then accumulates no cost and
+    `metrics.sustainability_extras` falls back to the legacy flat tariff
+    (exactly like the flat-WUE fallback when cooling is off).  Enabled, a
+    `stage_pricing` after the battery accumulates the energy charge from the
+    per-step price trace (pricetraces/, or a flat trace at
+    `flat_price_per_kwh` when none is given) plus a billing-window demand
+    charge on the peak metered grid draw — the quantity the battery can
+    shave, which is what makes peak shaving *worth money* here.
+    """
+    enabled: bool = False
+    flat_price_per_kwh: float = 0.12   # legacy tariff; trace default
+    # demand charge: price per kW of peak grid draw, billed once per window
+    demand_charge_per_kw: float = 10.0
+    billing_window_h: float = 168.0
+
+
+@dataclass(frozen=True)
 class SchedulerConfig:
     # 'first_fit'  : exact bounded first-fit placement (K slots/step)
     # 'aggregate'  : capacity-only admission (analytical-model-like placement)
@@ -113,6 +147,7 @@ class SimConfig:
     shifting: ShiftingConfig = ShiftingConfig()
     failures: FailureConfig = FailureConfig()
     cooling: CoolingConfig = CoolingConfig()
+    pricing: PricingConfig = PricingConfig()
     embodied: EmbodiedConfig = EmbodiedConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
     sla_grace_h: float = 24.0       # task meets SLA if done within 24h of expected

@@ -10,12 +10,15 @@ runtime dispatch.
 
 Default pipeline (order matters and mirrors OpenDC's event cascade):
   failures -> checkpoint -> task_stopper -> shifting_gate -> scheduler
-  -> progress -> utilization -> power -> cooling -> battery -> carbon
-  -> metrics
+  -> progress -> utilization -> power -> cooling -> battery -> pricing
+  -> carbon -> metrics
 
 `stage_cooling` (cfg.cooling.enabled) sits between power and battery so that
 battery peak-shaving and carbon accounting operate on *facility* power
-(IT + weather-driven cooling overhead), not just IT power.
+(IT + weather-driven cooling overhead), not just IT power.  `stage_pricing`
+(cfg.pricing.enabled) sits after the battery so the electricity bill —
+energy charge plus billing-window demand charge (core/pricing.py) — meters
+the battery-shaped grid draw.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import jax.numpy as jnp
 from . import battery as battery_mod
 from . import carbon as carbon_mod
 from . import failures as failures_mod
+from . import pricing as pricing_mod
 from . import scaling as scaling_mod
 from . import scheduler as scheduler_mod
 from . import shifting as shifting_mod
@@ -46,6 +50,9 @@ class StepInputs(NamedTuple):
     ci_rising: jax.Array       # bool[S]
     shift_threshold: jax.Array # f32[S]
     wet_bulb_c: jax.Array      # f32[S] wet-bulb temperature (cooling weather)
+    price: jax.Array           # f32[S] electricity price (currency/kWh)
+    price_lo: jax.Array        # f32[S] forward charge-quantile band
+    price_hi: jax.Array        # f32[S] forward discharge-quantile band
 
 
 def build_step_inputs(ci_trace, cfg: SimConfig,
@@ -68,8 +75,31 @@ def build_step_inputs(ci_trace, cfg: SimConfig,
         assert wb.shape[0] >= cfg.n_steps, (
             f"weather trace too short: {wb.shape[0]} < {cfg.n_steps}")
         wb = wb[: cfg.n_steps]
+    price_policy = cfg.battery.enabled and cfg.battery.policy != "carbon"
+    if price_policy and not cfg.pricing.enabled:
+        raise ValueError(
+            f"battery dispatch policy '{cfg.battery.policy}' arbitrages the "
+            "price trace but cfg.pricing.enabled is False: enable the "
+            "pricing subsystem (core/pricing.py)")
+    if cfg.pricing.enabled:
+        pr = dyn.get("price_trace")
+        if pr is None:  # traceless: the legacy flat tariff, now simulated
+            pr = jnp.full_like(ci, cfg.pricing.flat_price_per_kwh)
+        else:
+            pr = jnp.asarray(pr, jnp.float32)
+            assert pr.shape[0] >= cfg.n_steps, (
+                f"price trace too short: {pr.shape[0]} < {cfg.n_steps}")
+            pr = pr[: cfg.n_steps]
+        if price_policy:
+            plo, phi = pricing_mod.precompute_price_signals(pr, cfg.dt_h,
+                                                            cfg.battery)
+        else:
+            plo = phi = jnp.zeros_like(ci)
+    else:
+        pr = plo = phi = jnp.zeros_like(ci)
     return StepInputs(ci=ci, batt_threshold=bt, ci_rising=rising,
-                      shift_threshold=st, wet_bulb_c=wb)
+                      shift_threshold=st, wet_bulb_c=wb, price=pr,
+                      price_lo=plo, price_hi=phi)
 
 
 # --------------------------------------------------------------------------
@@ -215,11 +245,38 @@ def stage_battery(cfg: SimConfig) -> Stage:
             state.battery, ctx["dc_power_kw"], ctx["ci"],
             ctx["batt_threshold"], ctx["ci_rising"], cfg.dt_h, cfg.battery,
             capacity_kwh=ctx.get("batt_capacity_kwh"),
-            rate_kw=ctx.get("batt_rate_kw"))
+            rate_kw=ctx.get("batt_rate_kw"),
+            price=ctx.get("price"), price_lo=ctx.get("price_lo"),
+            price_hi=ctx.get("price_hi"),
+            dispatch_lambda=ctx.get("dispatch_lambda"))
         metrics = state.metrics._replace(
             batt_discharged=state.metrics.batt_discharged + discharged)
         ctx = dict(ctx, grid_power_kw=grid_kw)
         return state._replace(battery=batt, metrics=metrics), ctx
+    return fn
+
+
+def stage_pricing(cfg: SimConfig) -> Stage:
+    """Grid draw -> money: energy charge + billing-window demand charge.
+
+    Sits after `stage_battery` so the bill meters the battery-shaped grid
+    draw (charge spikes cost, shaved peaks save) — the same quantity
+    `peak_power` tracks.  The price may vary per step (`price_trace` dyn
+    key / `price_axis` grid axis); the final open billing window is settled
+    by `summarize`.
+    """
+    wsteps = pricing_mod.billing_window_steps(cfg.pricing, cfg.dt_h)
+
+    def fn(state: SimState, ctx: dict):
+        grid_kw = ctx.get("grid_power_kw", ctx["dc_power_kw"])
+        m = state.metrics
+        ec, dc, wp = pricing_mod.pricing_step(
+            m.energy_cost, m.demand_cost, m.window_peak_kw, grid_kw,
+            ctx["price"], state.step, cfg.dt_h, wsteps,
+            cfg.pricing.demand_charge_per_kw)
+        metrics = m._replace(energy_cost=ec, demand_cost=dc,
+                             window_peak_kw=wp)
+        return state._replace(metrics=metrics), ctx
     return fn
 
 
@@ -269,6 +326,8 @@ def default_pipeline(cfg: SimConfig) -> list[Stage]:
         stages.append(stage_cooling(cfg))
     if cfg.battery.enabled:
         stages.append(stage_battery(cfg))
+    if cfg.pricing.enabled:
+        stages.append(stage_pricing(cfg))
     stages.append(stage_carbon(cfg))
     return stages
 
@@ -286,7 +345,9 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
         ctx = {"ci": inputs.ci, "batt_threshold": inputs.batt_threshold,
                "ci_rising": inputs.ci_rising,
                "shift_threshold": inputs.shift_threshold,
-               "wet_bulb_c": inputs.wet_bulb_c, **dyn}
+               "wet_bulb_c": inputs.wet_bulb_c, "price": inputs.price,
+               "price_lo": inputs.price_lo, "price_hi": inputs.price_hi,
+               **dyn}
         for stage in stages:
             state, ctx = stage(state, ctx)
         state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
@@ -300,6 +361,8 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
             if cfg.cooling.enabled:
                 ys["cooling_power_kw"] = ctx["cooling_power_kw"]
                 ys["wet_bulb_c"] = ctx["wet_bulb_c"]
+            if cfg.pricing.enabled:
+                ys["price_per_kwh"] = ctx["price"]
         else:
             ys = None
         return state, ys
@@ -323,7 +386,9 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     `shift_quantile_value` (shifting threshold level), `n_active_hosts`
     (horizontal-scaling mask), `cooling_setpoint` (thermal setpoint),
     `wet_bulb_trace` (f32[S] weather series, also settable via the
-    `weather_trace` argument) and `seed` (failure-model PRNG).
+    `weather_trace` argument), `price_trace` (f32[S] electricity prices,
+    core/pricing.py), `dispatch_lambda` (blended battery-dispatch weight)
+    and `seed` (failure-model PRNG).
     """
     dyn = dict(dyn) if dyn else {}
     if weather_trace is not None:
@@ -332,6 +397,7 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
         hosts = scaling_mod.with_scale(hosts, dyn["n_active_hosts"])
     inputs = build_step_inputs(ci_trace, cfg, dyn=dyn)
     dyn.pop("wet_bulb_trace", None)  # consumed by the inputs, not a ctx key
+    dyn.pop("price_trace", None)
     state0 = init_sim_state(tasks, hosts, dyn.get("seed", cfg.seed))
     step = build_step_fn(cfg, stages, dyn)
     final, series = jax.lax.scan(step, state0, inputs)

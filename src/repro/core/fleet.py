@@ -35,7 +35,7 @@ from .state import HostTable, TaskTable
 
 # dyn keys that may be per-region vectors (length R) in a fleet
 PER_REGION_KEYS = ("n_active_hosts", "batt_capacity_kwh", "batt_rate_kw",
-                   "cooling_setpoint", "seed")
+                   "cooling_setpoint", "dispatch_lambda", "seed")
 
 POLICIES = ("greedy", "spill", "round_robin")
 
@@ -56,6 +56,7 @@ class FleetSpec:
 
     ci_traces:      f32[R, S]  per-region carbon intensity (required)
     wb_traces:      f32[R, S]  per-region wet-bulb weather (needs cooling)
+    price_traces:   f32[R, S]  per-region electricity prices (needs pricing)
     n_active_hosts: i32[R]     per-region host count (default: all hosts)
     batt_capacity_kwh, batt_rate_kw, cooling_setpoint, seeds: f32/i32[R]
     capacity_frac:  float      aggregate core-hour cap per region, as a
@@ -67,7 +68,8 @@ class FleetSpec:
     forecast_h:     placement forecast horizon (hours)
     """
 
-    def __init__(self, ci_traces, wb_traces=None, n_active_hosts=None,
+    def __init__(self, ci_traces, wb_traces=None, price_traces=None,
+                 n_active_hosts=None,
                  batt_capacity_kwh=None, batt_rate_kw=None,
                  cooling_setpoint=None, seeds=None,
                  capacity_frac: float | None = None, policy: str = "greedy",
@@ -84,6 +86,11 @@ class FleetSpec:
             self.wb_traces = np.asarray(wb_traces, np.float32)
             assert self.wb_traces.shape[0] == r, (
                 f"wb_traces regions {self.wb_traces.shape[0]} != {r}")
+        self.price_traces = None
+        if price_traces is not None:
+            self.price_traces = np.asarray(price_traces, np.float32)
+            assert self.price_traces.shape[0] == r, (
+                f"price_traces regions {self.price_traces.shape[0]} != {r}")
 
         def per_region(x, dtype):
             if x is None:
@@ -106,6 +113,7 @@ class FleetSpec:
 
     def replace(self, **kw) -> "FleetSpec":
         args = dict(ci_traces=self.ci_traces, wb_traces=self.wb_traces,
+                    price_traces=self.price_traces,
                     n_active_hosts=self.n_active_hosts,
                     batt_capacity_kwh=self.batt_capacity_kwh,
                     batt_rate_kw=self.batt_rate_kw,
@@ -173,29 +181,33 @@ def fleet_place(tasks: TaskTable, hosts: HostTable, fleet: FleetSpec,
 
 def fleet_cell(tasks_r: TaskTable, hosts: HostTable, cfg: SimConfig,
                ci_traces, wb_traces=None, scalar_dyn: dict | None = None,
-               per_region_dyn: dict | None = None) -> FleetResult:
+               per_region_dyn: dict | None = None,
+               price_traces=None) -> FleetResult:
     """The jit/vmap-safe fleet program over PRE-PLACED stacked tables.
 
     tasks_r: TaskTable with leading region axis [R, W] (split_by_region).
     scalar_dyn: traced values shared by every region; per_region_dyn: dict
-    of length-R arrays, one value per region.  This is the cell the grid
-    engine vmaps — `simulate_fleet` is its host-side front door.
+    of length-R arrays, one value per region.  wb_traces/price_traces are
+    optional [R, S] per-region weather/tariff families.  This is the cell
+    the grid engine vmaps — `simulate_fleet` is its host-side front door.
     """
     scalar_dyn = dict(scalar_dyn or {})
     per_region_dyn = dict(per_region_dyn or {})
     ci = jnp.asarray(ci_traces, jnp.float32)
+    wb = (None if wb_traces is None
+          else jnp.asarray(wb_traces, jnp.float32))
+    pr = (None if price_traces is None
+          else jnp.asarray(price_traces, jnp.float32))
 
-    def one(tt, tr, per_r, wb):
-        final, _ = simulate(tt, hosts, tr, cfg, dyn={**scalar_dyn, **per_r},
-                            weather_trace=wb)
+    def one(tt, tr, per_r, wb_r, pr_r):
+        dyn = {**scalar_dyn, **per_r}
+        if pr_r is not None:
+            dyn["price_trace"] = pr_r
+        final, _ = simulate(tt, hosts, tr, cfg, dyn=dyn, weather_trace=wb_r)
         return summarize(final, cfg)
 
-    if wb_traces is None:
-        per = jax.vmap(lambda tt, tr, d: one(tt, tr, d, None))(
-            tasks_r, ci, per_region_dyn)
-    else:
-        per = jax.vmap(one)(tasks_r, ci, per_region_dyn,
-                            jnp.asarray(wb_traces, jnp.float32))
+    in_axes = (0, 0, 0, None if wb is None else 0, None if pr is None else 0)
+    per = jax.vmap(one, in_axes=in_axes)(tasks_r, ci, per_region_dyn, wb, pr)
     return FleetResult(total=fleet_totals(per), per_region=per)
 
 
@@ -222,6 +234,10 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
         raise ValueError("the fleet carries wb_traces but "
                          "cfg.cooling.enabled is False: the per-region "
                          "weather would be ignored")
+    if fleet.price_traces is not None and not cfg.pricing.enabled:
+        raise ValueError("the fleet carries price_traces but "
+                         "cfg.pricing.enabled is False: the per-region "
+                         "prices would be ignored")
     if region is None:
         region = fleet_place(tasks, hosts, fleet, cfg.dt_h,
                              n_steps=cfg.n_steps)
@@ -242,7 +258,9 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
     return fn(stacked, hosts, cfg, jnp.asarray(fleet.ci_traces),
               None if fleet.wb_traces is None
               else jnp.asarray(fleet.wb_traces),
-              scalar_dyn, per_region_dyn)
+              scalar_dyn, per_region_dyn,
+              None if fleet.price_traces is None
+              else jnp.asarray(fleet.price_traces))
 
 
 # one shared jit cache across simulate_fleet calls: same (shapes, cfg, dyn

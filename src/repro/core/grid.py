@@ -17,6 +17,11 @@ Axis kinds:
     (weathertraces/synthetic.py) driving the thermal subsystem
     (core/thermal.py); requires `cfg.cooling.enabled`.  Composes a climate
     dimension orthogonal to the carbon-region dimension.
+  * `price_axis(traces)` — electricity-price traces `f32[P, S]`
+    (pricetraces/synthetic.py) driving the pricing subsystem
+    (core/pricing.py): cost accumulation + the battery's price-aware
+    dispatch; requires `cfg.pricing.enabled`.  A tariff dimension
+    orthogonal to region and climate.
   * `dyn_axis(**named_values)` — traced scenario scalars fed to the engine as
     dyn ctx keys.  Several names in one call sweep *zipped* (one grid dim);
     separate calls sweep as a cross product (separate dims).  Understood keys:
@@ -24,6 +29,9 @@ Axis kinds:
       - `shift_quantile_value`               (shifting threshold, core/shifting.py)
       - `n_active_hosts`                     (horizontal scaling, core/scaling.py)
       - `cooling_setpoint`                   (thermal setpoint, core/thermal.py)
+      - `dispatch_lambda`                    (blended battery dispatch weight,
+                                              core/battery.py: 1 = carbon,
+                                              0 = price arbitrage)
   * `seed_axis(seeds)` — PRNG seeds for the stochastic failure model.
   * `region_axis(fleet)` — a multi-datacenter FLEET (core/fleet.py): the
     FleetSpec's R regional datacenters (per-region carbon + weather traces,
@@ -76,9 +84,20 @@ device-memory budget (`memory_budget_bytes`, default from
 fits the budget run unchunked — exactly the old behaviour — while larger
 grids chunk instead of OOMing.
 
+The cost-carbon Pareto front in ONE program (battery policy 'blended',
+`cfg.pricing.enabled`; see examples/cost_carbon_pareto.py)::
+
+    res = sweep_grid(tasks, hosts, cfg, [
+        dyn_axis(dispatch_lambda=lams),               # f32[L] 1=carbon 0=price
+        price_axis(price_traces),                     # f32[P, S]
+        dyn_axis(batt_capacity_kwh=caps),             # f32[C]
+    ], ci_trace=ci)
+    # res.total_cost / res.total_carbon_kg have shape [L, P, C]
+
 Swept config knobs must be *enabled* statically (`cfg.battery.enabled`,
-`cfg.shifting.enabled`, `cfg.cooling.enabled`) — the dyn value modulates an
-enabled technique; the enable flag itself switches the compiled pipeline.
+`cfg.shifting.enabled`, `cfg.cooling.enabled`, `cfg.pricing.enabled`) — the
+dyn value modulates an enabled technique; the enable flag itself switches
+the compiled pipeline.
 """
 from __future__ import annotations
 
@@ -97,8 +116,10 @@ from .state import HostTable, TaskTable
 TRACE_KEY = "ci_trace"
 SEED_KEY = "seed"
 WEATHER_KEY = "wet_bulb_trace"
+PRICE_KEY = "price_trace"
 FLEET_CI_KEY = "fleet_ci_traces"
 FLEET_WB_KEY = "fleet_wb_traces"
+FLEET_PRICE_KEY = "fleet_price_traces"
 
 _REDUCERS = {"min": jnp.min, "max": jnp.max,
              "argmin": jnp.argmin, "argmax": jnp.argmax}
@@ -107,7 +128,7 @@ _REDUCERS = {"min": jnp.min, "max": jnp.max,
 class Axis(NamedTuple):
     """One grid dimension: `names[j]` is swept with `values[j]` (zipped)."""
 
-    kind: str                      # 'trace'|'weather'|'dyn'|'seed'|'fleet'|'region'
+    kind: str                      # 'trace'|'weather'|'price'|'dyn'|'seed'|'fleet'|'region'
     names: tuple[str, ...]         # dyn ctx keys (TRACE_KEY / SEED_KEY special)
     values: tuple[jax.Array, ...]  # equal leading dims = the axis length
     meta: object = None            # kind-specific payload (region: FleetSpec)
@@ -147,6 +168,17 @@ def weather_axis(wb_traces) -> Axis:
     return Axis("weather", (WEATHER_KEY,), (traces,))
 
 
+def price_axis(price_traces) -> Axis:
+    """Tariff axis: electricity-price traces f32[P, S] -> one grid dim of
+    length P (pricetraces/synthetic.py).  Drives the pricing subsystem
+    (core/pricing.py) — cost accumulation and the battery's price-aware
+    dispatch policies; requires `cfg.pricing.enabled`.  Composes a tariff
+    dimension orthogonal to carbon region and climate."""
+    traces = jnp.asarray(price_traces, jnp.float32)
+    assert traces.ndim == 2, f"price_axis wants f32[P, S], got {traces.shape}"
+    return Axis("price", (PRICE_KEY,), (traces,))
+
+
 def seed_axis(seeds) -> Axis:
     """PRNG-seed axis (stochastic failures replicate across seeds)."""
     return Axis("seed", (SEED_KEY,), (jnp.asarray(seeds, jnp.int32),))
@@ -162,6 +194,9 @@ def region_axis(fleet) -> Axis:
     if fleet.wb_traces is not None:
         values += (jnp.asarray(fleet.wb_traces, jnp.float32),)
         names += (FLEET_WB_KEY,)
+    if fleet.price_traces is not None:
+        values += (jnp.asarray(fleet.price_traces, jnp.float32),)
+        names += (FLEET_PRICE_KEY,)
     return Axis("region", names, values, meta=fleet)
 
 
@@ -238,10 +273,11 @@ class ScenarioGrid:
                     "region_axis cannot be the grid's leading axis: declare "
                     "it after the swept axes (chunking/sharding split the "
                     "leading axis, and a fleet must never be split)")
-            if any(ax.kind in ("trace", "weather") for ax in axes):
+            if any(ax.kind in ("trace", "weather", "price") for ax in axes):
                 raise ValueError(
-                    "region_axis already carries per-region carbon/weather "
-                    "traces; drop the trace_axis/weather_axis")
+                    "region_axis already carries per-region carbon/weather/"
+                    "price traces; drop the trace_axis/weather_axis/"
+                    "price_axis")
             for ax in axes:
                 if ax.kind == "fleet":
                     for n, v in zip(ax.names, ax.values):
@@ -314,17 +350,20 @@ class ScenarioGrid:
             def base(*payloads):
                 dyn = dict(base_dyn)
                 per_region = dict(spec_dyn)
-                ci = wb = None
+                ci = wb = pr = None
                 for ax, vals in zip(axes, payloads):
                     if ax.kind == "region":
-                        ci = vals[0]
-                        wb = vals[1] if len(vals) > 1 else None
+                        named = dict(zip(ax.names, vals))
+                        ci = named[FLEET_CI_KEY]
+                        wb = named.get(FLEET_WB_KEY)
+                        pr = named.get(FLEET_PRICE_KEY)
                     elif ax.kind == "fleet":
                         per_region.update(zip(ax.names, vals))
                     else:
                         dyn.update(zip(ax.names, vals))
                 return fleet_cell(stacked, hosts, cfg, ci, wb,
-                                  scalar_dyn=dyn, per_region_dyn=per_region)
+                                  scalar_dyn=dyn, per_region_dyn=per_region,
+                                  price_traces=pr)
 
         fn = base
         for i in reversed(range(len(axes))):
@@ -345,6 +384,15 @@ class ScenarioGrid:
             raise ValueError("the fleet carries wb_traces but "
                              "cfg.cooling.enabled is False: the per-region "
                              "weather would be ignored")
+        if (not cfg.pricing.enabled
+                and any(ax.kind == "price" for ax in self.axes)):
+            raise ValueError("grid has a price_axis but cfg.pricing.enabled "
+                             "is False: the price trace would be ignored")
+        if (self.fleet is not None and self.fleet.price_traces is not None
+                and not cfg.pricing.enabled):
+            raise ValueError("the fleet carries price_traces but "
+                             "cfg.pricing.enabled is False: the per-region "
+                             "prices would be ignored")
 
     def run(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
             ci_trace=None, *, chunk_size: int | None = None, mesh=None,

@@ -13,6 +13,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import pricing as pricing_mod
 from .config import SimConfig
 from .state import DONE, INVALID, SimState
 
@@ -28,6 +29,9 @@ class SimResult(NamedTuple):
     water_l: jax.Array             # cooling-tower evaporation (on-site)
     pue: jax.Array                 # dc_energy / it_energy (1.0 w/o cooling)
     wue_l_per_kwh: jax.Array       # water_l / it_energy (0.0 w/o cooling)
+    energy_cost: jax.Array         # currency; 0 unless cfg.pricing.enabled
+    demand_cost: jax.Array         # billing-window peak charges (incl. final)
+    total_cost: jax.Array          # energy_cost + demand_cost
     peak_power_kw: jax.Array
     sla_violation_frac: jax.Array
     mean_delay_h: jax.Array        # mean(finish - arrival - duration) over done
@@ -71,6 +75,9 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
     sdelay = jnp.where(started, tasks.first_start - tasks.arrival, 0.0)
 
     it_safe = jnp.maximum(m.it_energy, 1e-9)
+    # settle the final (still open) demand-charge billing window
+    demand_cost = pricing_mod.settle_demand_charge(
+        m.demand_cost, m.window_peak_kw, cfg.pricing)
     return SimResult(
         total_carbon_kg=m.op_carbon + m.emb_carbon,
         op_carbon_kg=m.op_carbon,
@@ -82,6 +89,9 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
         water_l=m.water_l,
         pue=m.dc_energy / it_safe,
         wue_l_per_kwh=m.water_l / it_safe,
+        energy_cost=m.energy_cost,
+        demand_cost=demand_cost,
+        total_cost=m.energy_cost + demand_cost,
         peak_power_kw=m.peak_power,
         sla_violation_frac=n_viol / n_decided,
         mean_delay_h=jnp.sum(delay) / n_done,
@@ -110,7 +120,9 @@ def fleet_totals(per_region: SimResult, axis: int = 0) -> SimResult:
     energy-weighted one).  `peak_power_kw` is the sum of per-region peaks:
     regions are separate facilities, each provisioning its own grid feed, so
     the fleet-level figure is the provisioning total (an upper bound on the
-    coincident peak).  jit/vmap-safe: pure jnp on stacked fields.
+    coincident peak).  Costs sum for the same reason — each facility is
+    billed on its own meter, demand charges included.  jit/vmap-safe: pure
+    jnp on stacked fields.
     """
     def s(x):
         return jnp.sum(x, axis=axis)
@@ -132,6 +144,9 @@ def fleet_totals(per_region: SimResult, axis: int = 0) -> SimResult:
         water_l=s(p.water_l),
         pue=s(p.dc_energy_kwh) / it_safe,
         wue_l_per_kwh=s(p.water_l) / it_safe,
+        energy_cost=s(p.energy_cost),
+        demand_cost=s(p.demand_cost),
+        total_cost=s(p.total_cost),
         peak_power_kw=s(p.peak_power_kw),
         sla_violation_frac=wmean(p.sla_violation_frac, p.n_decided),
         mean_delay_h=wmean(p.mean_delay_h, p.n_done),
@@ -158,26 +173,45 @@ def carbon_reduction_pct(baseline: SimResult, treated: SimResult):
 # ---------------------------------------------------------------------------
 
 class SustainabilityExtras(NamedTuple):
-    """Paper §XI names water usage and monetary cost as the next metrics;
-    both are linear post-processings of the energy accumulators, so they
-    compose onto any SimResult without touching the engine."""
+    """Paper §XI names water usage and monetary cost as the next metrics.
+    Water and cost now have first-class simulated counterparts (the thermal
+    subsystem, core/thermal.py, and the pricing subsystem, core/pricing.py);
+    this post-processing composes onto any SimResult and falls back to the
+    legacy flat-intensity estimates when a subsystem did not run."""
     water_l: jax.Array        # on-site + upstream water, litres
-    energy_cost: jax.Array    # grid energy cost, currency units
+    energy_cost: jax.Array    # electricity bill, currency units
 
 
-def sustainability_extras(res: SimResult, *, wue_l_per_kwh: float = 1.8,
+def sustainability_extras(res: SimResult, *, cfg: SimConfig | None = None,
+                          wue_l_per_kwh: float = 1.8,
                           water_intensity_l_per_kwh: float = 1.6,
                           price_per_kwh: float = 0.12,
                           simulated_water: bool | None = None,
+                          simulated_cost: bool | None = None,
                           ) -> SustainabilityExtras:
     """On-site water: the *simulated* cooling-tower evaporation when the
     thermal subsystem ran, else the legacy flat-WUE estimate (~1.8 L/kWh).
-    Pass `simulated_water` explicitly when you know whether cooling was
-    simulated (`cfg.cooling.enabled`); by default it is inferred per cell
-    from `cooling_energy_kwh > 0`, which only misfires in the degenerate
-    zero-fan-overhead fully-economized case.  Upstream water intensity of
-    generation (~1.6 L/kWh grid average) and a flat tariff as before.
-    Regionalized values can be passed per sweep exactly like carbon traces."""
+    Cost: the *simulated* bill (energy + demand charges, core/pricing.py)
+    when the pricing subsystem ran, else the legacy flat tariff
+    `price_per_kwh * grid_energy` — the pre-pricing behaviour, kept as the
+    documented fallback exactly like the flat-WUE path.
+
+    Pass `cfg` (or `simulated_water`/`simulated_cost` explicitly) when you
+    know which subsystems were simulated — callers that hold the SimConfig
+    always do, and threading `cfg.cooling.enabled`/`cfg.pricing.enabled`
+    through avoids the per-cell inference below.  Without it, water is
+    inferred from `cooling_energy_kwh > 0` (which misfires in the
+    degenerate zero-fan-overhead fully-economized case: cooling ran, used
+    no energy, evaporated no water, and the flat estimate wrongly kicks
+    in) and cost from `total_cost > 0` (which misfires on an all-zero-price
+    trace).  Upstream water intensity of generation (~1.6 L/kWh grid
+    average) is always estimate-based.  Regionalized values can be passed
+    per sweep exactly like carbon traces."""
+    if cfg is not None:
+        if simulated_water is None:
+            simulated_water = cfg.cooling.enabled
+        if simulated_cost is None:
+            simulated_cost = cfg.pricing.enabled
     if simulated_water is None:
         onsite = jnp.where(res.cooling_energy_kwh > 0.0, res.water_l,
                            res.dc_energy_kwh * wue_l_per_kwh)
@@ -186,5 +220,12 @@ def sustainability_extras(res: SimResult, *, wue_l_per_kwh: float = 1.8,
     else:
         onsite = res.dc_energy_kwh * wue_l_per_kwh
     water = onsite + res.grid_energy_kwh * water_intensity_l_per_kwh
-    return SustainabilityExtras(water_l=water,
-                                energy_cost=res.grid_energy_kwh * price_per_kwh)
+    flat_cost = pricing_mod.flat_energy_cost(res.grid_energy_kwh,
+                                             price_per_kwh)
+    if simulated_cost is None:
+        cost = jnp.where(res.total_cost > 0.0, res.total_cost, flat_cost)
+    elif simulated_cost:
+        cost = res.total_cost
+    else:
+        cost = flat_cost
+    return SustainabilityExtras(water_l=water, energy_cost=cost)

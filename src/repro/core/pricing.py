@@ -1,0 +1,90 @@
+"""Electricity-price subsystem: energy + demand charges (paper §XI, cost).
+
+The paper names monetary cost as the next first-class metric; CEO-DC
+(arXiv:2507.08923) shows decarbonization decisions flip sign once
+electricity economics are modeled jointly with carbon.  This module makes
+cost a *simulated* quantity instead of the flat `price * energy`
+post-processing in `metrics.sustainability_extras` (which remains as the
+documented legacy fallback when `cfg.pricing.enabled` is False):
+
+  * **Energy charge** — per-step `grid_kw * price(t) * dt`, accumulated in
+    `MetricsAcc.energy_cost` from the per-region price trace
+    (pricetraces/synthetic.py, or a flat trace at
+    `cfg.pricing.flat_price_per_kwh`).
+  * **Demand charge** — utilities bill the PEAK metered draw per billing
+    window (`demand_charge_per_kw * max_kw`, typically monthly).  The open
+    window's running peak lives in `MetricsAcc.window_peak_kw`; closed
+    windows accumulate into `MetricsAcc.demand_cost`, and `summarize`
+    settles the final open window.  Deliberately billed on the metered
+    GRID draw (`grid_power_kw`, the same quantity `peak_power` tracks) and
+    not on raw facility power: the utility's meter sits behind the
+    battery, so charge spikes cost money and discharge shaving saves it —
+    the cost leg of the paper's cost-emissions-performance triangle.
+  * **Dispatch signals** — the forward price-quantile bands the battery's
+    'price' and 'blended' dispatch policies (core/battery.py) arbitrage
+    against, precomputed outside the scan with the SAME forward-window
+    quantile machinery as the shifting threshold
+    (`shifting.forward_window_quantile`).
+
+Everything here is elementwise jnp on traced values, so the whole model
+fuses into the simulation step; the price trace is a sweepable grid axis
+(`price_axis`, core/grid.py) and `dispatch_lambda` a traced dyn scalar.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import BatteryConfig, PricingConfig
+from .shifting import forward_window_quantile
+
+
+def billing_window_steps(cfg: PricingConfig, dt_h: float) -> int:
+    """Steps per demand-charge billing window (static: shapes the scan)."""
+    return max(int(round(cfg.billing_window_h / dt_h)), 1)
+
+
+def precompute_price_signals(price_trace, dt_h: float, cfg: BatteryConfig):
+    """(price_lo[S], price_hi[S]) forward-quantile arbitrage bands.
+
+    price_lo[t] = `price_charge_quantile` of the price over
+    [t, t + price_window_h): charge while strictly cheaper.  price_hi is
+    the `price_discharge_quantile`: discharge while strictly dearer.
+    Strict inequalities make a constant price trace a no-op (both bands
+    collapse onto the price itself), the arbitrage analogue of a flat
+    carbon trace.
+    """
+    lo = forward_window_quantile(price_trace, dt_h, cfg.price_window_h,
+                                 jnp.float32(cfg.price_charge_quantile))
+    hi = forward_window_quantile(price_trace, dt_h, cfg.price_window_h,
+                                 jnp.float32(cfg.price_discharge_quantile))
+    return lo, hi
+
+
+def pricing_step(energy_cost, demand_cost, window_peak_kw, grid_kw, price,
+                 step, dt_h: float, window_steps: int,
+                 demand_charge_per_kw: float):
+    """One billing update.  Returns (energy_cost, demand_cost, window_peak).
+
+    Accumulates the energy charge and rolls the demand-charge window: when
+    `step` crosses a window boundary the previous window's peak is billed
+    into `demand_cost` and the running peak resets before absorbing this
+    step's draw.  The final (still open) window is settled by
+    `settle_demand_charge` at summary time.  All scalars may be traced.
+    """
+    energy_cost = energy_cost + grid_kw * price * dt_h
+    close = (step % window_steps == 0) & (step > 0)
+    demand_cost = demand_cost + jnp.where(
+        close, window_peak_kw * jnp.float32(demand_charge_per_kw), 0.0)
+    window_peak_kw = jnp.maximum(jnp.where(close, 0.0, window_peak_kw),
+                                 grid_kw)
+    return energy_cost, demand_cost, window_peak_kw
+
+
+def settle_demand_charge(demand_cost, window_peak_kw, cfg: PricingConfig):
+    """Total demand cost incl. the final open billing window's peak."""
+    return demand_cost + window_peak_kw * jnp.float32(cfg.demand_charge_per_kw)
+
+
+def flat_energy_cost(grid_energy_kwh, price_per_kwh: float):
+    """The legacy flat-tariff estimate (`sustainability_extras` fallback)."""
+    return grid_energy_kwh * price_per_kwh

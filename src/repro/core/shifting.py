@@ -16,6 +16,23 @@ import jax.numpy as jnp
 from .config import ShiftingConfig
 
 
+def forward_window_quantile(trace, dt_h: float, window_h: float, quantile):
+    """threshold[t] = `quantile` of the trace over [t, t + window).
+
+    The shared forward-looking windowed quantile: temporal shifting gates
+    task starts on it over the carbon trace, and battery price arbitrage
+    (core/pricing.precompute_price_signals) computes its charge/discharge
+    bands from it over the price trace.  `quantile` may be a traced scalar
+    so scenario grids can sweep the level inside one compiled program.
+    """
+    x = jnp.asarray(trace, jnp.float32)
+    s = x.shape[0]
+    w = max(int(round(window_h / dt_h)), 1)
+    idx = jnp.minimum(jnp.arange(s)[:, None] + jnp.arange(w)[None, :], s - 1)
+    windows = x[idx]                                    # f32[S, W]
+    return jnp.quantile(windows, quantile, axis=1).astype(jnp.float32)
+
+
 def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig,
                                quantile=None):
     """threshold[t] = `quantile` of ci over the forward window [t, t + window).
@@ -24,13 +41,8 @@ def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig,
     scenario grids can sweep the threshold level inside one compiled program;
     None falls back to the static `cfg.quantile`.
     """
-    ci = jnp.asarray(ci_trace, jnp.float32)
-    s = ci.shape[0]
-    w = max(int(round(cfg.forecast_window_h / dt_h)), 1)
-    idx = jnp.minimum(jnp.arange(s)[:, None] + jnp.arange(w)[None, :], s - 1)
-    windows = ci[idx]                                   # f32[S, W]
     q = jnp.float32(cfg.quantile) if quantile is None else quantile
-    return jnp.quantile(windows, q, axis=1).astype(jnp.float32)
+    return forward_window_quantile(ci_trace, dt_h, cfg.forecast_window_h, q)
 
 
 def start_allowed(ci, threshold, now, arrival, cfg: ShiftingConfig):

@@ -93,6 +93,9 @@ class MetricsAcc(NamedTuple):
     batt_discharged: jax.Array # f32[] kWh served from the battery
     n_interrupts: jax.Array    # f32[] task interruptions (failures + stops)
     n_shift_delays: jax.Array  # f32[] task-steps spent delayed by shifting
+    energy_cost: jax.Array     # f32[] currency; 0 unless cfg.pricing.enabled
+    demand_cost: jax.Array     # f32[] currency from CLOSED billing windows
+    window_peak_kw: jax.Array  # f32[] running peak of the open billing window
 
 
 class SimState(NamedTuple):
@@ -201,7 +204,8 @@ def init_metrics() -> MetricsAcc:
     return MetricsAcc(op_carbon=z, emb_carbon=z, grid_energy=z, dc_energy=z,
                       it_energy=z, cooling_energy=z, water_l=z,
                       peak_power=z, batt_discharged=z, n_interrupts=z,
-                      n_shift_delays=z)
+                      n_shift_delays=z, energy_cost=z, demand_cost=z,
+                      window_peak_kw=z)
 
 
 def init_sim_state(tasks: TaskTable, hosts: HostTable, seed: int = 0) -> SimState:

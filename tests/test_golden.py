@@ -15,8 +15,9 @@ import numpy as np
 import pytest
 
 from repro.core import (BatteryConfig, CoolingConfig, FleetSpec,
-                        ShiftingConfig, SimConfig, make_host_table,
-                        make_task_table, simulate, simulate_fleet, summarize)
+                        PricingConfig, ShiftingConfig, SimConfig,
+                        make_host_table, make_task_table, simulate,
+                        simulate_fleet, summarize)
 
 S = 96  # 1 day at dt=0.25
 
@@ -56,6 +57,26 @@ def test_golden_thermal(golden, workload, traces):
     res = summarize(simulate(tasks, hosts, traces[0], cfg,
                              weather_trace=wb)[0], cfg)
     golden("thermal", res)
+
+
+def test_golden_pricing(golden, workload, traces):
+    """Pin the pricing subsystem: spot-like tariff, demand charge crossing a
+    billing-window boundary, and blended battery dispatch at lambda=0.5."""
+    from repro.pricetraces.synthetic import make_price_traces
+    tasks, hosts = workload
+    prices = make_price_traces(S, 0.25, 2, seed=5)
+    cfg = SimConfig(n_steps=S,
+                    pricing=PricingConfig(enabled=True,
+                                          demand_charge_per_kw=8.0,
+                                          billing_window_h=12.0),
+                    battery=BatteryConfig(enabled=True, capacity_kwh=4.0,
+                                          policy="blended",
+                                          dispatch_lambda=0.5,
+                                          price_window_h=24.0))
+    res = summarize(simulate(tasks, hosts, traces[0], cfg,
+                             dyn={"price_trace": prices[0]})[0], cfg)
+    assert float(res.total_cost) > 0.0
+    golden("pricing", res)
 
 
 def test_golden_fleet(golden, workload, traces):

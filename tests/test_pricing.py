@@ -1,0 +1,364 @@
+"""Pricing subsystem (pricetraces/ + core/pricing.py + stage_pricing).
+
+The differential layer: pricing.enabled=False reproduces the pre-pricing
+pipeline bit-for-bit (mirroring tests/test_thermal.py's invariant), the
+energy/demand charges match hand-computed bills from the collected series,
+and the acceptance grid — dispatch_lambda x price_axis x battery capacity —
+equals the per-scenario Python loop in plain/chunked/sharded/reduced modes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (BatteryConfig, CoolingConfig, FleetSpec,
+                        PricingConfig, SimConfig, default_pipeline, dyn_axis,
+                        make_host_table, make_task_table, price_axis,
+                        region_axis, simulate, simulate_fleet, summarize,
+                        sweep_grid, trace_axis)
+from repro.core.metrics import sustainability_extras
+from repro.pricetraces.synthetic import (make_price_traces, price_stats,
+                                         sample_price_params)
+
+S = 192  # 2 days at dt=0.25: the billing window below closes mid-run
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(11)
+    n = 16
+    tasks = make_task_table(np.sort(rng.uniform(0.0, 12.0, n)),
+                            rng.uniform(0.5, 4.0, n),
+                            rng.integers(1, 3, n).astype(float))
+    hosts = make_host_table(4, 4)
+    return tasks, hosts
+
+
+@pytest.fixture(scope="module")
+def ci_traces():
+    t = np.arange(S) * 0.25
+    return np.stack([300.0 + 200.0 * np.sin(2 * np.pi * t / 24.0 + p)
+                     for p in (0.0, 1.7)]).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def prices():
+    return make_price_traces(S, 0.25, 2, seed=3)
+
+
+class TestPriceTraces:
+    def test_shapes_and_determinism(self):
+        a = make_price_traces(192, 0.25, 6, seed=4)
+        b = make_price_traces(192, 0.25, 6, seed=4)
+        assert a.shape == (6, 192) and a.dtype == np.float32
+        np.testing.assert_array_equal(a, b)
+        assert not np.allclose(a, make_price_traces(192, 0.25, 6, seed=5))
+        assert (a > 0).all()
+
+    def test_prices_correlate_with_carbon_regions(self):
+        """Fossil grids (high mean CI) skew pricey AND peaky: the joint
+        distribution couples tariffs to the carbon regions of the same
+        seed, the coupling CEO-DC shows flips decarbonization decisions."""
+        from repro.carbontraces.synthetic import sample_region_params
+        n = 158
+        carbon = sample_region_params(n, seed=0)
+        p = sample_price_params(n, seed=0)
+        r_mean = np.corrcoef(np.log(carbon.mean), p.mean)[0, 1]
+        r_peak = np.corrcoef(np.log(carbon.mean), p.tou_amp)[0, 1]
+        assert r_mean > 0.3, f"carbon-price correlation too weak: {r_mean:.2f}"
+        assert r_peak > 0.2, f"carbon-peakiness corr too weak: {r_peak:.2f}"
+        assert p.mean.min() >= 0.05 and p.mean.max() <= 0.22
+
+    def test_time_of_use_peak_present(self):
+        """The deterministic TOU base shows up: the evening peak block is
+        dearer than the overnight trough, per region, on average."""
+        n = 8
+        tr = make_price_traces(96 * 14, 0.25, n, seed=2)
+        p = sample_price_params(n, seed=2)
+        t = np.arange(96 * 14) * 0.25
+        hour = (t[None, :] - p.phase_d[:, None]) % 24.0
+        peak = np.array([tr[i, (hour[i] >= 17) & (hour[i] < 21)].mean()
+                         for i in range(n)])
+        trough = np.array([tr[i, hour[i] < 5].mean() for i in range(n)])
+        assert (peak > trough).all()
+        _, ratio = price_stats(tr)
+        assert (ratio > 1.05).all()
+
+
+class TestDisabledBitForBit:
+    def test_disabled_pipeline_identical_to_seed(self, workload, ci_traces):
+        """pricing.enabled=False reproduces the pre-pricing engine exactly:
+        no stage_pricing in the pipeline, zero cost fields, and every
+        legacy metric bitwise-stable against a config that merely carries a
+        (disabled) PricingConfig with non-default knobs."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=S)
+        n_stages = len(default_pipeline(cfg))
+        cfg_p = cfg.replace(pricing=PricingConfig(enabled=False,
+                                                  flat_price_per_kwh=9.9,
+                                                  demand_charge_per_kw=99.0,
+                                                  billing_window_h=6.0))
+        assert len(default_pipeline(cfg_p)) == n_stages
+        a = summarize(simulate(tasks, hosts, ci_traces[0], cfg)[0], cfg)
+        b = summarize(simulate(tasks, hosts, ci_traces[0], cfg_p)[0], cfg_p)
+        for field in a._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                          np.asarray(getattr(b, field)), field)
+        assert float(a.energy_cost) == 0.0
+        assert float(a.demand_cost) == 0.0
+        assert float(a.total_cost) == 0.0
+
+    def test_price_policy_without_pricing_rejected(self, workload, ci_traces):
+        tasks, hosts = workload
+        for policy in ("price", "blended"):
+            cfg = SimConfig(n_steps=S,
+                            battery=BatteryConfig(enabled=True, policy=policy))
+            with pytest.raises(ValueError, match="pricing"):
+                simulate(tasks, hosts, ci_traces[0], cfg)
+
+    def test_unknown_policy_rejected(self, workload, ci_traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=S,
+                        pricing=PricingConfig(enabled=True),
+                        battery=BatteryConfig(enabled=True, policy="oracle"))
+        with pytest.raises(ValueError, match="unknown battery dispatch"):
+            simulate(tasks, hosts, ci_traces[0], cfg)
+
+
+class TestBilling:
+    def test_flat_tariff_matches_legacy_formula(self, workload, ci_traces):
+        """Traceless pricing == the legacy flat `price * grid_energy` (the
+        simulated path degenerates to the §XI post-processing)."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=S,
+                        pricing=PricingConfig(enabled=True,
+                                              flat_price_per_kwh=0.21,
+                                              demand_charge_per_kw=0.0))
+        res = summarize(simulate(tasks, hosts, ci_traces[0], cfg)[0], cfg)
+        np.testing.assert_allclose(float(res.energy_cost),
+                                   0.21 * float(res.grid_energy_kwh),
+                                   rtol=1e-5)
+        assert float(res.demand_cost) == 0.0
+        np.testing.assert_allclose(float(res.total_cost),
+                                   float(res.energy_cost), rtol=1e-7)
+
+    def test_bill_matches_hand_computed_series(self, workload, ci_traces,
+                                               prices):
+        """Energy charge == sum(grid_kw * price * dt) and demand charge ==
+        sum over billing windows of (peak grid kW * rate), recomputed in
+        numpy from the collected per-step series."""
+        tasks, hosts = workload
+        rate, window_h = 7.0, 12.0
+        cfg = SimConfig(n_steps=S, collect_series=True,
+                        battery=BatteryConfig(enabled=True, capacity_kwh=5.0),
+                        pricing=PricingConfig(enabled=True,
+                                              demand_charge_per_kw=rate,
+                                              billing_window_h=window_h))
+        final, series = simulate(tasks, hosts, ci_traces[0], cfg,
+                                 dyn={"price_trace": prices[0]})
+        res = summarize(final, cfg)
+        grid_kw = np.asarray(series["grid_power_kw"])
+        price = np.asarray(series["price_per_kwh"])
+        np.testing.assert_array_equal(price, prices[0][:S])
+        np.testing.assert_allclose(float(res.energy_cost),
+                                   float((grid_kw * price * 0.25).sum()),
+                                   rtol=1e-5)
+        wsteps = int(window_h / 0.25)
+        want_demand = rate * sum(
+            grid_kw[s:s + wsteps].max() for s in range(0, S, wsteps))
+        np.testing.assert_allclose(float(res.demand_cost), want_demand,
+                                   rtol=1e-5)
+
+    def test_battery_moves_money_both_ways(self, workload):
+        """The cost leg of the trade-off triangle: against a flat carbon
+        trace (carbon dispatch idle) a price-arbitrage battery moves energy
+        from peak to trough, cutting the ENERGY bill vs. no battery — while
+        its charge spikes raise the billed peak, so the DEMAND charge goes
+        the other way (the cost shadow of the paper's Fig 9A power spike).
+        The demand side is computed with the charge rate on, so a
+        regression in the windowed-peak path cannot hide behind a zero
+        demand tariff."""
+        tasks, hosts = workload
+        ci = np.full(S, 300.0, np.float32)
+        t = np.arange(S) * 0.25
+        pr = (0.12 + 0.08 * np.sin(2 * np.pi * t / 24.0)).astype(np.float32)
+        base_cfg = SimConfig(n_steps=S,
+                             pricing=PricingConfig(enabled=True,
+                                                   demand_charge_per_kw=6.0,
+                                                   billing_window_h=24.0))
+        base = summarize(simulate(tasks, hosts, ci, base_cfg,
+                                  dyn={"price_trace": pr})[0], base_cfg)
+        arb_cfg = base_cfg.replace(
+            battery=BatteryConfig(enabled=True, capacity_kwh=6.0,
+                                  policy="price", price_window_h=24.0))
+        arb = summarize(simulate(tasks, hosts, ci, arb_cfg,
+                                 dyn={"price_trace": pr})[0], arb_cfg)
+        assert float(arb.batt_discharged_kwh) > 0.0
+        assert float(arb.energy_cost) < float(base.energy_cost)
+        # charging adds to the metered draw: the billed peak must not drop,
+        # and with a C-rate this large the spike is strictly billed
+        assert float(arb.peak_power_kw) > float(base.peak_power_kw)
+        assert float(arb.demand_cost) > float(base.demand_cost)
+
+
+class TestGridEquivalence:
+    def _grid(self, workload, ci_traces, prices, **run_kw):
+        tasks, hosts = workload
+        lams = np.array([0.0, 0.5, 1.0], np.float32)
+        caps = np.array([2.0, 6.0], np.float32)
+        cfg = SimConfig(n_steps=S,
+                        pricing=PricingConfig(enabled=True,
+                                              billing_window_h=24.0),
+                        battery=BatteryConfig(enabled=True, policy="blended",
+                                              price_window_h=24.0))
+        axes = [dyn_axis(dispatch_lambda=lams), price_axis(prices),
+                dyn_axis(batt_capacity_kwh=caps)]
+        res = sweep_grid(tasks, hosts, cfg, axes, ci_trace=ci_traces[0],
+                         **run_kw)
+        return cfg, lams, caps, res, axes
+
+    def test_pareto_grid_matches_loop(self, workload, ci_traces, prices):
+        """The acceptance grid: dispatch_lambda x price_axis x battery
+        capacity compiles to ONE program whose cells match the per-scenario
+        Python loop of simulate() calls."""
+        tasks, hosts = workload
+        cfg, lams, caps, res, _ = self._grid(workload, ci_traces, prices)
+        assert res.total_cost.shape == (3, 2, 2)
+        for i, lam in enumerate(lams):
+            for p in range(2):
+                for c, cap in enumerate(caps):
+                    final, _ = simulate(
+                        tasks, hosts, ci_traces[0], cfg,
+                        dyn={"dispatch_lambda": lam,
+                             "price_trace": prices[p],
+                             "batt_capacity_kwh": cap})
+                    ref = summarize(final, cfg)
+                    for field in res._fields:
+                        np.testing.assert_allclose(
+                            np.asarray(getattr(res, field))[i, p, c],
+                            np.asarray(getattr(ref, field)), rtol=1e-5,
+                            atol=1e-6, err_msg=f"{field} at {(i, p, c)}")
+
+    def test_chunked_sharded_reduced_match_plain(self, workload, ci_traces,
+                                                 prices):
+        _, _, _, full, axes = self._grid(workload, ci_traces, prices)
+        _, _, _, chunked, _ = self._grid(workload, ci_traces, prices,
+                                         chunk_size=2)
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+        _, _, _, sharded, _ = self._grid(workload, ci_traces, prices,
+                                         mesh=mesh)
+        _, _, _, red, _ = self._grid(workload, ci_traces, prices,
+                                     reduce=("min", 2))
+        for field in full._fields:
+            want = np.asarray(getattr(full, field))
+            np.testing.assert_allclose(np.asarray(getattr(chunked, field)),
+                                       want, rtol=1e-6, err_msg=field)
+            np.testing.assert_allclose(np.asarray(getattr(sharded, field)),
+                                       want, rtol=1e-6, err_msg=field)
+            np.testing.assert_allclose(np.asarray(getattr(red, field)),
+                                       want.min(axis=2), rtol=1e-6,
+                                       err_msg=field)
+
+    def test_price_axis_without_pricing_rejected(self, workload, ci_traces,
+                                                 prices):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="pricing.enabled"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=S),
+                       [price_axis(prices)], ci_trace=ci_traces[0])
+
+
+class TestFleetPricing:
+    def test_per_region_prices_and_totals(self, workload, ci_traces, prices):
+        """A fleet with per-region tariffs: total cost recombines exactly
+        as the sum of the per-region bills."""
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=ci_traces, price_traces=prices,
+                          batt_capacity_kwh=[3.0, 6.0])
+        cfg = SimConfig(n_steps=S, pricing=PricingConfig(enabled=True),
+                        battery=BatteryConfig(enabled=True, policy="blended",
+                                              dispatch_lambda=0.5,
+                                              price_window_h=24.0))
+        res = simulate_fleet(tasks, hosts, cfg, fleet)
+        per = np.asarray(res.per_region.total_cost)
+        assert per.shape == (2,) and (per > 0).all()
+        np.testing.assert_allclose(float(res.total.total_cost), per.sum(),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(res.total.energy_cost)
+                                   + float(res.total.demand_cost),
+                                   float(res.total.total_cost), rtol=1e-6)
+
+    def test_region_axis_carries_prices_into_grid(self, workload, ci_traces,
+                                                  prices):
+        """price traces ride the region_axis: the fleet grid equals the
+        per-scenario simulate_fleet loop."""
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=ci_traces, price_traces=prices)
+        caps = np.array([2.0, 5.0], np.float32)
+        cfg = SimConfig(n_steps=S, pricing=PricingConfig(enabled=True),
+                        battery=BatteryConfig(enabled=True))
+        res = sweep_grid(tasks, hosts, cfg,
+                         [dyn_axis(batt_capacity_kwh=caps),
+                          region_axis(fleet)])
+        assert res.total.total_cost.shape == (2,)
+        for c, cap in enumerate(caps):
+            ref = simulate_fleet(tasks, hosts, cfg, fleet,
+                                 dyn={"batt_capacity_kwh": float(cap)})
+            np.testing.assert_allclose(
+                np.asarray(res.total.total_cost)[c],
+                float(ref.total.total_cost), rtol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(res.per_region.energy_cost)[c],
+                np.asarray(ref.per_region.energy_cost), rtol=1e-5)
+
+    def test_fleet_prices_without_pricing_rejected(self, workload, ci_traces,
+                                                   prices):
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=ci_traces, price_traces=prices)
+        with pytest.raises(ValueError, match="price_traces"):
+            simulate_fleet(tasks, hosts, SimConfig(n_steps=S), fleet)
+        with pytest.raises(ValueError, match="price_traces"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=S),
+                       [dyn_axis(batt_capacity_kwh=np.ones(2, np.float32)),
+                        region_axis(fleet)])
+
+
+class TestSustainabilityExtras:
+    def test_simulated_cost_with_fallback(self, workload, ci_traces, prices):
+        """extras use the simulated bill when the pricing subsystem ran
+        (cfg threaded through), else the legacy flat tariff."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=S, pricing=PricingConfig(enabled=True))
+        res = summarize(simulate(tasks, hosts, ci_traces[0], cfg,
+                                 dyn={"price_trace": prices[0]})[0], cfg)
+        ex = sustainability_extras(res, cfg=cfg)
+        np.testing.assert_allclose(float(ex.energy_cost),
+                                   float(res.total_cost), rtol=1e-6)
+        cfg0 = SimConfig(n_steps=S)
+        res0 = summarize(simulate(tasks, hosts, ci_traces[0], cfg0)[0], cfg0)
+        ex0 = sustainability_extras(res0, cfg=cfg0, price_per_kwh=0.3)
+        np.testing.assert_allclose(float(ex0.energy_cost),
+                                   0.3 * float(res0.grid_energy_kwh),
+                                   rtol=1e-6)
+
+    def test_water_inference_misfire_fixed_by_cfg(self, workload, ci_traces):
+        """Regression for the degenerate zero-fan-overhead fully-economized
+        case: cooling RAN but used no energy and evaporated no water, so the
+        `cooling_energy_kwh > 0` inference wrongly falls back to the flat
+        WUE estimate — threading cfg.cooling.enabled through fixes it."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=S,
+                        cooling=CoolingConfig(enabled=True,
+                                              fan_pump_overhead=0.0))
+        wb = np.full(S, 0.0, np.float32)   # far below the economizer cutoff
+        res = summarize(simulate(tasks, hosts, ci_traces[0], cfg,
+                                 weather_trace=wb)[0], cfg)
+        assert float(res.cooling_energy_kwh) == 0.0
+        assert float(res.water_l) == 0.0
+        inferred = sustainability_extras(res, water_intensity_l_per_kwh=0.0)
+        assert float(inferred.water_l) > 0.0            # the documented misfire
+        fixed = sustainability_extras(res, cfg=cfg,
+                                      water_intensity_l_per_kwh=0.0)
+        assert float(fixed.water_l) == 0.0              # simulated: dry coils

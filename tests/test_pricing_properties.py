@@ -1,0 +1,182 @@
+"""Property-based tests (hypothesis) for battery dispatch policies.
+
+Physics invariants hold for EVERY policy under ANY price/carbon trace:
+  1. SoC stays in [0, capacity] at every step.
+  2. Charge/discharge rate caps are honored: the grid draw never deviates
+     from the datacenter load by more than the C-rate, and discharge never
+     exceeds the load (the battery cannot export).
+Policy identities:
+  3. 'blended' at lambda=1 reproduces the 'carbon' policy bit-for-bit, and
+     at lambda=0 the 'price' policy bit-for-bit (exact endpoint selection
+     in core/battery.dispatch_decision).
+  4. A constant price trace makes 'price' arbitrage a no-op: the battery
+     never acts, so grid-side metrics equal the no-battery baseline.
+
+The physics properties drive `battery_step` directly in a lax.scan with
+FIXED shapes (hypothesis varies values, not shapes, so the jit caches once).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property-based tier")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (BatteryConfig, PricingConfig, SimConfig,  # noqa: E402
+                        make_host_table, make_task_table,
+                        precompute_price_signals, simulate, summarize)
+from repro.core.battery import (battery_step,  # noqa: E402
+                                precompute_battery_signals)
+from repro.core.state import BatteryState  # noqa: E402
+
+S = 96
+DT = 0.25
+
+
+def _traces(seed: int):
+    """Deterministic-but-varied carbon/price/load series of fixed shape."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(S) * DT
+    ci = (rng.uniform(50, 600)
+          * (1 + rng.uniform(0, 0.8) * np.sin(2 * np.pi * t / 24
+                                              + rng.uniform(0, 6)))
+          + rng.normal(0, 10, S)).clip(5.0).astype(np.float32)
+    price = (rng.uniform(0.05, 0.2)
+             * (1 + rng.uniform(0, 0.9) * np.sin(2 * np.pi * t / 24
+                                                 + rng.uniform(0, 6)))
+             + rng.exponential(0.01, S)).clip(0.005).astype(np.float32)
+    load = rng.uniform(0.0, 3.0, S).astype(np.float32)
+    return ci, price, load
+
+
+@jax.jit
+def _run_policy_scan(ci, price, load, cap, rate, lam, policy_id):
+    """Scan battery_step under one of the three policies (policy picked by
+    a concrete int OUTSIDE jit via static branching on `policy_id` would
+    recompile; instead all three run and the caller selects)."""
+    cfgs = {0: BatteryConfig(enabled=True, policy="carbon"),
+            1: BatteryConfig(enabled=True, policy="price",
+                             price_window_h=24.0),
+            2: BatteryConfig(enabled=True, policy="blended",
+                             price_window_h=24.0)}
+    outs = []
+    for pid, cfg in cfgs.items():
+        thr, rising = precompute_battery_signals(ci, DT, cfg)
+        plo, phi = precompute_price_signals(price, DT, cfg)
+
+        def step(batt, xs, cfg=cfg, thr=thr, rising=rising, plo=plo, phi=phi):
+            i, dc_kw = xs
+            batt, grid_kw, discharged = battery_step(
+                batt, dc_kw, ci[i], thr[i], rising[i], DT, cfg,
+                capacity_kwh=cap, rate_kw=rate, price=price[i],
+                price_lo=plo[i], price_hi=phi[i], dispatch_lambda=lam)
+            return batt, (batt.charge, grid_kw)
+
+        _, (soc, grid) = jax.lax.scan(
+            step, BatteryState(charge=jnp.float32(0.0),
+                               was_charging=jnp.array(False)),
+            (jnp.arange(S), load))
+        outs.append((soc, grid))
+    soc = jnp.stack([o[0] for o in outs])
+    grid = jnp.stack([o[1] for o in outs])
+    return soc[policy_id], grid[policy_id]
+
+
+class TestPhysicsInvariants:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           cap=st.floats(0.1, 50.0),
+           c_rate=st.floats(0.1, 5.0),
+           lam=st.floats(0.0, 1.0),
+           policy_id=st.integers(0, 2))
+    def test_soc_and_rate_caps(self, seed, cap, c_rate, lam, policy_id):
+        ci, price, load = _traces(seed)
+        rate = cap * c_rate
+        soc, grid = _run_policy_scan(ci, price, load, jnp.float32(cap),
+                                     jnp.float32(rate), jnp.float32(lam),
+                                     policy_id)
+        soc, grid = np.asarray(soc), np.asarray(grid)
+        assert (soc >= 0.0).all() and (soc <= cap * (1 + 1e-6)).all()
+        delta = grid - load                      # + charging, - discharging
+        assert (delta <= rate * (1 + 1e-5) + 1e-6).all()
+        assert (-delta <= np.minimum(rate, load) * (1 + 1e-5) + 1e-6).all()
+        assert (grid >= -1e-6).all()             # no export to the grid
+
+
+class TestPolicyIdentities:
+    @pytest.fixture(scope="class")
+    def workload(self):
+        rng = np.random.default_rng(5)
+        n = 12
+        tasks = make_task_table(np.sort(rng.uniform(0.0, 8.0, n)),
+                                rng.uniform(0.5, 4.0, n),
+                                rng.integers(1, 3, n).astype(float))
+        return tasks, make_host_table(3, 4)
+
+    def _cfg(self, policy, lam=1.0):
+        return SimConfig(n_steps=S,
+                         pricing=PricingConfig(enabled=True),
+                         battery=BatteryConfig(enabled=True, capacity_kwh=5.0,
+                                               policy=policy,
+                                               dispatch_lambda=lam,
+                                               price_window_h=24.0))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_lambda_one_is_carbon_bitwise(self, workload, seed):
+        tasks, hosts = workload
+        ci, price, _ = _traces(seed)
+        dyn = {"price_trace": price}
+        a_cfg = self._cfg("carbon")
+        a = summarize(simulate(tasks, hosts, ci, a_cfg, dyn=dyn)[0], a_cfg)
+        b_cfg = self._cfg("blended", lam=1.0)
+        b = summarize(simulate(tasks, hosts, ci, b_cfg, dyn=dyn)[0], b_cfg)
+        for field in a._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                          np.asarray(getattr(b, field)),
+                                          field)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_lambda_zero_is_price_bitwise(self, workload, seed):
+        tasks, hosts = workload
+        ci, price, _ = _traces(seed)
+        dyn = {"price_trace": price}
+        a_cfg = self._cfg("price")
+        a = summarize(simulate(tasks, hosts, ci, a_cfg, dyn=dyn)[0], a_cfg)
+        b_cfg = self._cfg("blended", lam=0.0)
+        b = summarize(simulate(tasks, hosts, ci, b_cfg, dyn=dyn)[0], b_cfg)
+        for field in a._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                          np.asarray(getattr(b, field)),
+                                          field)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           flat=st.floats(0.01, 0.5))
+    def test_constant_price_makes_arbitrage_noop(self, workload, seed, flat):
+        """Both forward quantile bands collapse onto the (constant) price,
+        the strict inequalities never fire, and the grid-side metrics equal
+        the no-battery baseline (embodied carbon still differs: the idle
+        battery is still owned)."""
+        tasks, hosts = workload
+        ci, _, _ = _traces(seed)
+        price = np.full(S, flat, np.float32)
+        dyn = {"price_trace": price}
+        arb_cfg = self._cfg("price")
+        arb = summarize(simulate(tasks, hosts, ci, arb_cfg, dyn=dyn)[0],
+                        arb_cfg)
+        base_cfg = SimConfig(n_steps=S, pricing=PricingConfig(enabled=True))
+        base = summarize(simulate(tasks, hosts, ci, base_cfg, dyn=dyn)[0],
+                         base_cfg)
+        assert float(arb.batt_discharged_kwh) == 0.0
+        for field in ("grid_energy_kwh", "op_carbon_kg", "energy_cost",
+                      "demand_cost", "total_cost", "peak_power_kw"):
+            np.testing.assert_array_equal(np.asarray(getattr(arb, field)),
+                                          np.asarray(getattr(base, field)),
+                                          field)

@@ -142,10 +142,17 @@ class TestEngineIntegration:
         ex = sustainability_extras(res, water_intensity_l_per_kwh=0.0)
         np.testing.assert_allclose(float(ex.water_l), float(res.water_l),
                                    rtol=1e-6)
+        # callers that hold the config thread it through (no inference);
+        # here both paths agree because cooling visibly ran
+        ex_cfg = sustainability_extras(res, cfg=cfg,
+                                       water_intensity_l_per_kwh=0.0)
+        np.testing.assert_allclose(float(ex_cfg.water_l), float(res.water_l),
+                                   rtol=1e-6)
         # legacy fallback when the thermal subsystem did not run
         cfg0 = SimConfig(n_steps=S)
         res0 = summarize(simulate(tasks, hosts, ci, cfg0)[0], cfg0)
-        ex0 = sustainability_extras(res0, water_intensity_l_per_kwh=0.0,
+        ex0 = sustainability_extras(res0, cfg=cfg0,
+                                    water_intensity_l_per_kwh=0.0,
                                     wue_l_per_kwh=1.8)
         np.testing.assert_allclose(float(ex0.water_l),
                                    1.8 * float(res0.dc_energy_kwh), rtol=1e-6)
