@@ -1,0 +1,90 @@
+"""Beyond-paper (§XI direction): on-site PV x battery sizing Pareto.
+
+The renewables subsystem (core/renewables.py) closes the supply side of the
+paper's demand-shaping techniques: a PV plant displaces net grid import,
+the battery absorbs surplus that would otherwise be exported at a discount
+(or curtailed), and the export tariff prices the remainder.  Grid:
+[solar-resource x pv-capacity x battery-capacity x tariff] via
+`renewable_axis` + two `dyn_axis` + `price_axis` — ONE compiled program per
+workload, the renewables acceptance grid of tests/test_renewables.py at
+benchmark scale.
+
+Validates: PV monotonically cuts net carbon; storage raises PV
+self-consumption (less export for the same plant); curtailment appears only
+when export is forbidden; and the export tariff keeps total cost monotone
+non-increasing in plant size under 1:1-correlated tariffs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (BatteryConfig, PricingConfig, RenewableConfig,
+                        dyn_axis, price_axis, renewable_axis, sweep_grid)
+from repro.pricetraces.synthetic import make_price_traces
+from repro.renewabletraces.synthetic import make_pv_traces, pv_stats
+from .common import DT_H, pct, regions, save_rows, setup
+
+
+def run(quick: bool = True):
+    n_res = 2 if quick else 6          # solar resources (regions)
+    tasks, hosts, meta, cfg = setup("surf", quick)
+    cfg = cfg.replace(
+        renewables=RenewableConfig(enabled=True),
+        pricing=PricingConfig(enabled=True, export_price_fraction=0.4),
+        battery=BatteryConfig(enabled=True))
+    ci = regions(2, cfg.n_steps, seed=9)[1]
+    pv_cf = make_pv_traces(cfg.n_steps, DT_H, n_res, seed=9)
+    tariffs = make_price_traces(cfg.n_steps, DT_H, 2, seed=9)
+    mean_cf, _ = pv_stats(pv_cf)
+
+    pv_caps = (np.asarray([0.0, 0.5, 1.5], np.float32)
+               * meta["n_hosts"] * 0.4)
+    batt_caps = np.asarray([0.5, 4.0], np.float32) * meta["n_hosts"]
+
+    axes = [renewable_axis(pv_cf), dyn_axis(pv_capacity_kw=pv_caps),
+            dyn_axis(batt_capacity_kwh=batt_caps), price_axis(tariffs)]
+    res = sweep_grid(tasks, hosts, cfg, axes, ci_trace=ci)   # [V, K, C, P]
+    carbon = np.asarray(res.total_carbon_kg)
+    cost = np.asarray(res.total_cost)
+    export = np.asarray(res.grid_export_kwh)
+    pv_kwh = np.asarray(res.pv_energy_kwh)
+
+    # island mode: same grid with export forbidden -> curtailment appears
+    cfg_island = cfg.replace(renewables=RenewableConfig(
+        enabled=True, export_allowed=False))
+    island = sweep_grid(tasks, hosts, cfg_island, axes, ci_trace=ci)
+    curtailed = np.asarray(island.curtailed_kwh)
+
+    rows = [{
+        "bench": "renewables", "combo": "sizing_grid",
+        "metric": "carbon_cut_pct",
+        # biggest plant vs none, small battery, tariff 0, mean over regions
+        "value": pct(100.0 * (1.0 - carbon[:, -1, 0, 0].mean()
+                              / max(carbon[:, 0, 0, 0].mean(), 1e-9))),
+        "mean_cf": [pct(x) for x in mean_cf],
+        "pv_kwh_max": pct(pv_kwh.max()),
+        "export_small_batt": pct(export[:, -1, 0, 0].sum()),
+        "export_big_batt": pct(export[:, -1, -1, 0].sum()),
+        "curtailed_island": pct(curtailed[:, -1, 0, 0].sum()),
+        "export_island": pct(np.asarray(island.grid_export_kwh).max()),
+        "cost_no_pv": pct(cost[:, 0, 0, 0].mean()),
+        "cost_big_pv": pct(cost[:, -1, 0, 0].mean()),
+        "n_scenarios": int(carbon.size),
+    }]
+    save_rows("renewables", rows)
+    return rows
+
+
+def check(rows) -> list[str]:
+    r = rows[0]
+    ok = (r["value"] > 0                                     # PV cuts carbon
+          and r["export_big_batt"] <= r["export_small_batt"] + 1e-6
+          and r["export_island"] == 0.0                      # island: no sales
+          and r["curtailed_island"] > 0
+          and r["cost_big_pv"] < r["cost_no_pv"])            # free energy pays
+    return [f"renewables: biggest plant cuts carbon {r['value']:.1f}%; "
+            f"storage eats export {r['export_small_batt']:.0f}->"
+            f"{r['export_big_batt']:.0f} kWh; island curtails "
+            f"{r['curtailed_island']:.0f} kWh; bill "
+            f"{r['cost_no_pv']:.0f}->{r['cost_big_pv']:.0f} "
+            f"({'OK' if ok else 'FAIL'})"]

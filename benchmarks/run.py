@@ -19,9 +19,9 @@ import time
 
 from . import (bench_analytical_gap, bench_battery_capacity,
                bench_battery_regions, bench_climate, bench_combinations,
-               bench_embodied, bench_optimal_battery, bench_scaling,
-               bench_simperf, bench_spatial, bench_tradeoffs, common,
-               roofline)
+               bench_embodied, bench_optimal_battery, bench_renewables,
+               bench_scaling, bench_simperf, bench_spatial, bench_tradeoffs,
+               common, roofline)
 
 MODULES = {
     "scaling": bench_scaling,                # paper Fig 5  (F1/F2)
@@ -34,6 +34,7 @@ MODULES = {
     "analytical_gap": bench_analytical_gap,  # §III/§VI-C   (F5)
     "spatial": bench_spatial,                # beyond-paper (§IX/§XI ext.)
     "climate": bench_climate,                # beyond-paper (thermal subsys.)
+    "renewables": bench_renewables,          # beyond-paper (supply side)
     "simperf": bench_simperf,                # §VIII
     "roofline": roofline,                    # §Dry-run / §Roofline
 }

@@ -1,22 +1,27 @@
 """steamx core: the OpenDC-STEAM technique, tensorized for TPU."""
-from .battery import dispatch_decision
+from .battery import (battery_flow_step, dispatch_decision,
+                      surplus_aware_dispatch)
 from .config import (BatteryConfig, CoolingConfig, EmbodiedConfig,
                      FailureConfig, PowerModelConfig, PricingConfig,
-                     SchedulerConfig, ShiftingConfig, SimConfig, techniques)
-from .engine import (StepInputs, build_step_fn, build_step_inputs,
-                     default_pipeline, simulate)
+                     RenewableConfig, SchedulerConfig, ShiftingConfig,
+                     SimConfig, techniques)
+from .engine import (EnergyFlow, StepInputs, build_step_fn,
+                     build_step_inputs, default_pipeline, init_energy_flow,
+                     simulate)
 from .fleet import FleetResult, FleetSpec, fleet_place, simulate_fleet
 from .grid import (Axis, ScenarioGrid, dyn_axis, fleet_axis, price_axis,
-                   region_axis, seed_axis, sweep_grid, trace_axis,
-                   weather_axis)
-from .pricing import (flat_energy_cost, precompute_price_signals,
-                      pricing_step, settle_demand_charge)
+                   region_axis, renewable_axis, seed_axis, sweep_grid,
+                   trace_axis, weather_axis)
+from .pricing import (export_revenue_step, flat_energy_cost,
+                      precompute_price_signals, pricing_step,
+                      settle_demand_charge)
+from .renewables import net_load_split, pv_power_kw, split_surplus
 from .metrics import (SimResult, carbon_reduction_pct, fleet_totals,
                       summarize)
 from .spatial import (spatial_assign, spatial_assign_online,
                       spatial_assign_reference, split_by_region)
 from .thermal import (chiller_cop, cooling_step, dynamic_pue,
-                      economizer_fraction)
+                      economizer_fraction, reclaimable_heat_kw)
 from .scaling import find_min_scale, with_scale
 from .state import (DONE, INVALID, PENDING, RUNNING, BatteryState, HostTable,
                     MetricsAcc, SimState, TaskTable, active_host_mask,
@@ -27,18 +32,23 @@ from .sweep import (lower_sweep, sharded_sweep, sweep_battery_sizes,
 
 __all__ = [
     "BatteryConfig", "CoolingConfig", "EmbodiedConfig", "FailureConfig",
-    "PowerModelConfig", "PricingConfig", "SchedulerConfig", "ShiftingConfig",
-    "SimConfig",
-    "techniques", "StepInputs", "build_step_fn", "build_step_inputs",
-    "default_pipeline", "simulate", "FleetResult", "FleetSpec",
+    "PowerModelConfig", "PricingConfig", "RenewableConfig",
+    "SchedulerConfig", "ShiftingConfig", "SimConfig",
+    "techniques", "EnergyFlow", "StepInputs", "build_step_fn",
+    "build_step_inputs", "default_pipeline", "init_energy_flow", "simulate",
+    "FleetResult", "FleetSpec",
     "fleet_place", "simulate_fleet", "Axis", "ScenarioGrid", "dyn_axis",
-    "fleet_axis", "price_axis", "region_axis", "seed_axis", "sweep_grid",
-    "trace_axis", "dispatch_decision", "flat_energy_cost",
+    "fleet_axis", "price_axis", "region_axis", "renewable_axis",
+    "seed_axis", "sweep_grid",
+    "trace_axis", "battery_flow_step", "dispatch_decision",
+    "surplus_aware_dispatch", "export_revenue_step", "flat_energy_cost",
     "precompute_price_signals", "pricing_step", "settle_demand_charge",
+    "net_load_split", "pv_power_kw", "split_surplus",
     "weather_axis", "SimResult", "carbon_reduction_pct", "fleet_totals",
     "summarize", "spatial_assign", "spatial_assign_online",
     "spatial_assign_reference", "split_by_region", "chiller_cop",
     "cooling_step", "dynamic_pue", "economizer_fraction",
+    "reclaimable_heat_kw",
     "find_min_scale", "with_scale", "DONE", "INVALID", "PENDING", "RUNNING",
     "BatteryState", "HostTable", "MetricsAcc", "SimState", "TaskTable",
     "active_host_mask", "init_sim_state", "make_host_table", "make_task_table",

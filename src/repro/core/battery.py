@@ -20,6 +20,13 @@ Three dispatch policies decide when to charge/discharge (the storage
     select the exact single-objective decisions, so lambda=1 reproduces
     'carbon' (and lambda=0 'price') bit-for-bit.
 
+When the renewables subsystem runs (core/renewables.py), every policy is
+additionally *surplus-aware* (`surplus_aware_dispatch`): PV generation
+beyond the facility load charges the battery regardless of the policy's
+opinion (free energy beats any threshold), a surplus-only charge never
+draws from the grid, and the battery never discharges into its own
+surplus.
+
 The threshold/trough/band signals depend only on the exogenous traces, so
 they are precomputed outside the scan (`precompute_battery_signals`,
 `pricing.precompute_price_signals`) — a tensorization win unavailable to
@@ -105,6 +112,80 @@ def dispatch_decision(cfg: BatteryConfig, charge, ci, threshold, ci_rising,
     return blended_charge, blended_discharge
 
 
+def surplus_aware_dispatch(want_charge, want_discharge, surplus_kw):
+    """Extend a policy dispatch decision with PV-surplus awareness.
+
+    The 'surplus' extension of `dispatch_decision` (core/renewables.py
+    supplies `surplus_kw`, the PV generation beyond the facility load):
+
+      * free energy beats any policy — the battery absorbs surplus even
+        when the carbon/price policy declines to charge, but a
+        surplus-only charge may never draw from the grid (the returned
+        `charge_cap_kw` is the surplus itself unless the policy asked
+        for a charge, in which case grid top-up stays allowed);
+      * the battery never discharges into its own surplus (the energy
+        would round-trip straight back out as export at efficiency < 1).
+
+    Returns (want_charge, want_discharge, charge_cap_kw).
+    """
+    has_surplus = surplus_kw > 0.0
+    charge_cap_kw = jnp.where(want_charge, jnp.float32(jnp.inf), surplus_kw)
+    return (want_charge | has_surplus,
+            want_discharge & ~has_surplus,
+            charge_cap_kw)
+
+
+def battery_flow_step(batt: BatteryState, load_kw, ci, threshold, ci_rising,
+                      dt_h: float, cfg: BatteryConfig, capacity_kwh=None,
+                      rate_kw=None, price=None, price_lo=None, price_hi=None,
+                      dispatch_lambda=None, pv_surplus_kw=None):
+    """One battery decision in ledger terms.  Returns
+    (new_state, batt_charge_kw, batt_discharge_kw).
+
+    `load_kw` is the load the battery may serve — the full facility draw,
+    or the PV-netted residual when the renewables subsystem runs
+    (core/renewables.net_load_split).  `pv_surplus_kw`, when given, enables
+    the surplus-aware dispatch extension (`surplus_aware_dispatch`); None
+    reproduces the supply-free decision exactly.  The caller settles the
+    grid side of the ledger from the returned charge/discharge split.
+    """
+    if not cfg.enabled:
+        zero = jnp.float32(0.0)
+        return batt, zero, zero
+
+    cap = jnp.float32(cfg.capacity_kwh) if capacity_kwh is None else capacity_kwh
+    rate_kw = (cap * cfg.charge_rate_kw_per_kwh if rate_kw is None
+               else rate_kw)
+    eff = jnp.float32(cfg.round_trip_efficiency)
+
+    want_charge, want_discharge = dispatch_decision(
+        cfg, batt.charge, ci, threshold, ci_rising, price=price,
+        price_lo=price_lo, price_hi=price_hi,
+        dispatch_lambda=dispatch_lambda)
+    charge_cap_kw = None
+    if pv_surplus_kw is not None:
+        want_charge, want_discharge, charge_cap_kw = surplus_aware_dispatch(
+            want_charge, want_discharge, pv_surplus_kw)
+
+    # charge: limited by C-rate and remaining headroom (and, for a
+    # surplus-only charge, by the surplus itself — no grid draw)
+    headroom_kw = (cap - batt.charge) / dt_h
+    charge_kw = jnp.minimum(rate_kw, jnp.maximum(headroom_kw, 0.0))
+    if charge_cap_kw is not None:
+        charge_kw = jnp.minimum(charge_kw, charge_cap_kw)
+    charge_kw = jnp.where(want_charge, charge_kw, 0.0)
+
+    # discharge: limited by C-rate, stored energy, and actual load
+    avail_kw = batt.charge / dt_h
+    discharge_kw = jnp.minimum(jnp.minimum(rate_kw, avail_kw), load_kw)
+    discharge_kw = jnp.where(want_discharge & ~want_charge, discharge_kw, 0.0)
+
+    new_charge = jnp.clip(batt.charge + (charge_kw * eff - discharge_kw) * dt_h,
+                          0.0, cap)
+    new_state = BatteryState(charge=new_charge, was_charging=want_charge)
+    return new_state, charge_kw, discharge_kw
+
+
 def battery_step(batt: BatteryState, dc_power_kw, ci, threshold, ci_rising,
                  dt_h: float, cfg: BatteryConfig, capacity_kwh=None,
                  rate_kw=None, price=None, price_lo=None, price_hi=None,
@@ -116,34 +197,16 @@ def battery_step(batt: BatteryState, dc_power_kw, ci, threshold, ci_rising,
     `capacity_kwh` / `rate_kw` may be traced values to sweep battery sizing
     inside a single compiled program (paper Fig 7/8/12); `price`/`price_lo`/
     `price_hi`/`dispatch_lambda` feed the price-aware dispatch policies.
+    Thin wrapper over `battery_flow_step` (the ledger-term core).
     """
     if not cfg.enabled:
         return batt, dc_power_kw, jnp.float32(0.0)
-
-    cap = jnp.float32(cfg.capacity_kwh) if capacity_kwh is None else capacity_kwh
-    rate_kw = (cap * cfg.charge_rate_kw_per_kwh if rate_kw is None
-               else rate_kw)
-    eff = jnp.float32(cfg.round_trip_efficiency)
-
-    want_charge, want_discharge = dispatch_decision(
-        cfg, batt.charge, ci, threshold, ci_rising, price=price,
+    new_state, charge_kw, discharge_kw = battery_flow_step(
+        batt, dc_power_kw, ci, threshold, ci_rising, dt_h, cfg,
+        capacity_kwh=capacity_kwh, rate_kw=rate_kw, price=price,
         price_lo=price_lo, price_hi=price_hi,
         dispatch_lambda=dispatch_lambda)
-
-    # charge: limited by C-rate and remaining headroom
-    headroom_kw = (cap - batt.charge) / dt_h
-    charge_kw = jnp.minimum(rate_kw, jnp.maximum(headroom_kw, 0.0))
-    charge_kw = jnp.where(want_charge, charge_kw, 0.0)
-
-    # discharge: limited by C-rate, stored energy, and actual load
-    avail_kw = batt.charge / dt_h
-    discharge_kw = jnp.minimum(jnp.minimum(rate_kw, avail_kw), dc_power_kw)
-    discharge_kw = jnp.where(want_discharge & ~want_charge, discharge_kw, 0.0)
-
-    new_charge = jnp.clip(batt.charge + (charge_kw * eff - discharge_kw) * dt_h,
-                          0.0, cap)
     grid_kw = dc_power_kw + charge_kw - discharge_kw
-    new_state = BatteryState(charge=new_charge, was_charging=want_charge)
     return new_state, grid_kw, discharge_kw * dt_h
 
 

@@ -104,6 +104,12 @@ class CoolingConfig:
     max_cop: float = 8.0
     fan_pump_overhead: float = 0.05  # CRAH fans + pumps, fraction of IT power
     evap_l_per_kwh_heat: float = 1.5 # tower evaporation incl. blowdown
+    # district-heating reuse: this fraction of the chiller-path heat is
+    # reclaimed before the tower (heat exchangers to a heat network), so it
+    # neither evaporates water nor is wasted — `SimResult.heat_reuse_kwh`
+    # tracks it and `sustainability_extras` credits the displaced heating.
+    # 0.0 (default) reproduces the no-reuse pipeline bit-for-bit.
+    heat_reuse_fraction: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -118,12 +124,43 @@ class PricingConfig:
     `flat_price_per_kwh` when none is given) plus a billing-window demand
     charge on the peak metered grid draw — the quantity the battery can
     shave, which is what makes peak shaving *worth money* here.
+
+    With on-site generation (cfg.renewables, core/renewables.py) the bill
+    gains an export leg: exported surplus (`EnergyFlow.grid_export_kw`)
+    earns `export_price_fraction` of the spot price per kWh — a
+    time-of-use export tariff (feed-in below retail, the common net-billing
+    arrangement; 1.0 is classic 1:1 net metering).  Import charges always
+    meter the gross import, never an import-export net.
     """
     enabled: bool = False
     flat_price_per_kwh: float = 0.12   # legacy tariff; trace default
     # demand charge: price per kW of peak grid draw, billed once per window
     demand_charge_per_kw: float = 10.0
     billing_window_h: float = 168.0
+    # export tariff: fraction of the spot price paid for exported kWh
+    export_price_fraction: float = 0.5
+
+
+@dataclass(frozen=True)
+class RenewableConfig:
+    """On-site renewable generation (core/renewables.py).
+
+    Disabled by default: the engine's energy-flow ledger then carries zero
+    PV and the pipeline reproduces the supply-free behaviour bit-for-bit.
+    Enabled, a `stage_renewables` between cooling and battery supplies
+    `pv_capacity_kw * capacity_factor(t)` (renewabletraces/synthetic.py,
+    dyn key `pv_cf_trace`) to the ledger; generation first serves the
+    facility load, surplus preferentially charges the battery
+    (core/battery.surplus_aware_dispatch), and the remainder is exported to
+    the grid when `export_allowed` (earning the pricing subsystem's export
+    tariff) or curtailed when not.  Carbon accounting then meters the NET
+    grid import — the supply/demand structure Treehouse argues carbon-aware
+    infrastructure must expose.
+    """
+    enabled: bool = False
+    pv_capacity_kw: float = 0.0   # nameplate AC capacity; dyn-sweepable
+    # may the site sell surplus back to the grid?  False = island curtailment
+    export_allowed: bool = True
 
 
 @dataclass(frozen=True)
@@ -148,6 +185,7 @@ class SimConfig:
     failures: FailureConfig = FailureConfig()
     cooling: CoolingConfig = CoolingConfig()
     pricing: PricingConfig = PricingConfig()
+    renewables: RenewableConfig = RenewableConfig()
     embodied: EmbodiedConfig = EmbodiedConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
     sla_grace_h: float = 24.0       # task meets SLA if done within 24h of expected
@@ -173,6 +211,8 @@ def techniques(cfg: SimConfig, horizontal_scaling: bool = False,
         parts.append("SS")
     if horizontal_scaling:
         parts.append("HS")
+    if cfg.renewables.enabled:
+        parts.append("PV")
     if cfg.battery.enabled:
         parts.append("B")
     if cfg.shifting.enabled:

@@ -10,15 +10,45 @@ runtime dispatch.
 
 Default pipeline (order matters and mirrors OpenDC's event cascade):
   failures -> checkpoint -> task_stopper -> shifting_gate -> scheduler
-  -> progress -> utilization -> power -> cooling -> battery -> pricing
-  -> carbon -> metrics
+  -> progress -> utilization -> power -> cooling -> renewables -> battery
+  -> pricing -> carbon -> metrics
+
+Power flows between the facility stages travel on an explicit **energy-flow
+ledger** (`ctx["flow"]`, an `EnergyFlow` pytree) instead of ad-hoc scalar
+ctx keys: each stage reads and writes named ledger fields, and the ledger
+obeys a per-step conservation law (checked in tests/test_energy_ledger.py,
+not at runtime)
+
+    grid_import + pv + batt_discharge
+        == it + cooling + batt_charge + grid_export + curtailed
+
+Ledger field glossary (all kW, one value per step):
+
+  it_kw             IT-equipment draw (stage_power: hosts + accelerators)
+  cooling_kw        cooling overhead (stage_cooling; 0 with cooling off)
+  pv_kw             on-site PV generation (stage_renewables; 0 when off)
+  batt_charge_kw    power flowing INTO the battery (PV surplus first,
+                    grid top-up only when the dispatch policy asks)
+  batt_discharge_kw battery power serving facility load
+  grid_import_kw    metered grid draw — what carbon, pricing and
+                    peak-power accounting all meter
+  grid_export_kw    PV surplus sold to the grid (export tariff leg)
+  curtailed_kw      PV surplus thrown away (export not allowed / no takers)
 
 `stage_cooling` (cfg.cooling.enabled) sits between power and battery so that
 battery peak-shaving and carbon accounting operate on *facility* power
-(IT + weather-driven cooling overhead), not just IT power.  `stage_pricing`
+(IT + weather-driven cooling overhead), not just IT power.
+`stage_renewables` (cfg.renewables.enabled) supplies PV between cooling and
+battery, so generation first serves the facility load and the battery
+dispatches on the *net* load (charging preferentially from surplus,
+core/battery.surplus_aware_dispatch); without a battery, `stage_net_meter`
+settles the surplus into export or curtailment.  `stage_pricing`
 (cfg.pricing.enabled) sits after the battery so the electricity bill —
-energy charge plus billing-window demand charge (core/pricing.py) — meters
-the battery-shaped grid draw.
+energy charge plus billing-window demand charge, minus export revenue
+(core/pricing.py) — meters the battery-shaped grid draw.  `stage_carbon`
+always meters `grid_import_kw`, which with renewables on is the NET import:
+on-site generation displaces operational carbon one-for-one, exports earn
+money but no carbon credit (location-based accounting).
 """
 from __future__ import annotations
 
@@ -31,6 +61,7 @@ from . import battery as battery_mod
 from . import carbon as carbon_mod
 from . import failures as failures_mod
 from . import pricing as pricing_mod
+from . import renewables as renewables_mod
 from . import scaling as scaling_mod
 from . import scheduler as scheduler_mod
 from . import shifting as shifting_mod
@@ -43,6 +74,26 @@ from .state import (DONE, PENDING, RUNNING, HostTable, MetricsAcc, SimState,
 Stage = Callable[[SimState, dict], tuple[SimState, dict]]
 
 
+class EnergyFlow(NamedTuple):
+    """Per-step facility power ledger (kW) — see the module docstring for
+    the field glossary and the conservation law the fields obey."""
+    it_kw: jax.Array
+    cooling_kw: jax.Array
+    pv_kw: jax.Array
+    batt_charge_kw: jax.Array
+    batt_discharge_kw: jax.Array
+    grid_import_kw: jax.Array
+    grid_export_kw: jax.Array
+    curtailed_kw: jax.Array
+
+
+def init_energy_flow() -> EnergyFlow:
+    z = jnp.float32(0.0)
+    return EnergyFlow(it_kw=z, cooling_kw=z, pv_kw=z, batt_charge_kw=z,
+                      batt_discharge_kw=z, grid_import_kw=z,
+                      grid_export_kw=z, curtailed_kw=z)
+
+
 class StepInputs(NamedTuple):
     """Exogenous per-step inputs (the xs of the scan), all precomputed."""
     ci: jax.Array              # f32[S] carbon intensity gCO2/kWh
@@ -53,6 +104,7 @@ class StepInputs(NamedTuple):
     price: jax.Array           # f32[S] electricity price (currency/kWh)
     price_lo: jax.Array        # f32[S] forward charge-quantile band
     price_hi: jax.Array        # f32[S] forward discharge-quantile band
+    pv_cf: jax.Array           # f32[S] solar capacity factor in [0, 1]
 
 
 def build_step_inputs(ci_trace, cfg: SimConfig,
@@ -97,9 +149,25 @@ def build_step_inputs(ci_trace, cfg: SimConfig,
             plo = phi = jnp.zeros_like(ci)
     else:
         pr = plo = phi = jnp.zeros_like(ci)
+    cf = dyn.get("pv_cf_trace")
+    if cfg.renewables.enabled:
+        if cf is None:  # plant declared but no resource data: dark panels
+            cf = jnp.zeros_like(ci)
+        else:
+            cf = jnp.asarray(cf, jnp.float32)
+            assert cf.shape[0] >= cfg.n_steps, (
+                f"pv trace too short: {cf.shape[0]} < {cfg.n_steps}")
+            cf = cf[: cfg.n_steps]
+    else:
+        if cf is not None:
+            raise ValueError(
+                "a pv_cf_trace was provided but cfg.renewables.enabled is "
+                "False: the PV trace would be silently ignored — enable the "
+                "renewables subsystem (core/renewables.py)")
+        cf = jnp.zeros_like(ci)
     return StepInputs(ci=ci, batt_threshold=bt, ci_rising=rising,
                       shift_threshold=st, wet_bulb_c=wb, price=pr,
-                      price_lo=plo, price_hi=phi)
+                      price_lo=plo, price_hi=phi, pv_cf=cf)
 
 
 # --------------------------------------------------------------------------
@@ -183,6 +251,8 @@ def stage_progress(cfg: SimConfig) -> Stage:
 
 
 def stage_power(cfg: SimConfig) -> Stage:
+    """Writes `flow.it_kw` (and provisionally `flow.grid_import_kw`: with no
+    later facility stage, the IT draw IS the metered import)."""
     def fn(state: SimState, ctx: dict):
         cpu_u, gpu_u = scheduler_mod.host_utilization(state.tasks, state.hosts)
         on = (state.hosts.active & state.hosts.up).astype(jnp.float32)
@@ -197,7 +267,8 @@ def stage_power(cfg: SimConfig) -> Stage:
                 p, it_kw, cool_kw, water = pc_ops.facility_power(
                     cpu_u, gpu_u, state.hosts.n_gpus, on, ctx["wet_bulb_c"],
                     sp, cfg.cpu_power, cfg.gpu_power, cfg.cooling)
-                ctx = dict(ctx, host_power_kw=p, dc_power_kw=it_kw,
+                flow = ctx["flow"]._replace(it_kw=it_kw, grid_import_kw=it_kw)
+                ctx = dict(ctx, flow=flow, host_power_kw=p,
                            host_cpu_util=cpu_u, host_gpu_util=gpu_u,
                            fused_cooling_kw=cool_kw,
                            fused_water_l_per_h=water)
@@ -207,21 +278,30 @@ def stage_power(cfg: SimConfig) -> Stage:
         else:
             p = host_power_kw(cpu_u, gpu_u, state.hosts.n_gpus, on,
                               cfg.cpu_power, cfg.gpu_power)
-        ctx = dict(ctx, host_power_kw=p, dc_power_kw=jnp.sum(p),
+        it_kw = jnp.sum(p)
+        flow = ctx["flow"]._replace(it_kw=it_kw, grid_import_kw=it_kw)
+        ctx = dict(ctx, flow=flow, host_power_kw=p,
                    host_cpu_util=cpu_u, host_gpu_util=gpu_u)
         return state, ctx
     return fn
 
 
 def stage_cooling(cfg: SimConfig) -> Stage:
-    """IT power -> facility power: weather-driven cooling overhead + water.
+    """IT power -> facility power: writes `flow.cooling_kw` and lifts
+    `flow.grid_import_kw` to the facility draw.
 
     Sits between `stage_power` and `stage_battery` so downstream stages
     (battery peak-shaving, carbon accounting, peak-power tracking) see the
     facility draw.  `cooling_setpoint` may be a traced dyn value (grid axis).
+    With `heat_reuse_fraction > 0`, that share of the chiller-path heat is
+    reclaimed for district heating before the tower: it accumulates in
+    `metrics.heat_reuse` and stops evaporating water (dry heat exchangers).
     """
+    reuse = cfg.cooling.heat_reuse_fraction
+
     def fn(state: SimState, ctx: dict):
-        it_kw = ctx["dc_power_kw"]
+        flow = ctx["flow"]
+        it_kw = flow.it_kw
         if "fused_cooling_kw" in ctx:   # Pallas path: computed in stage_power
             cooling_kw = ctx["fused_cooling_kw"]
             water_l_per_h = ctx["fused_water_l_per_h"]
@@ -230,34 +310,102 @@ def stage_cooling(cfg: SimConfig) -> Stage:
                 it_kw, ctx["wet_bulb_c"], cfg.cooling,
                 setpoint_c=ctx.get("cooling_setpoint"))
         m = state.metrics
+        if reuse > 0.0:
+            heat_kw = thermal_mod.reclaimable_heat_kw(
+                it_kw, cooling_kw, ctx["wet_bulb_c"], cfg.cooling,
+                setpoint_c=ctx.get("cooling_setpoint"))
+            water_l_per_h = water_l_per_h * (1.0 - reuse)
+            m = m._replace(heat_reuse=m.heat_reuse + reuse * heat_kw * cfg.dt_h)
         metrics = m._replace(
             cooling_energy=m.cooling_energy + cooling_kw * cfg.dt_h,
             water_l=m.water_l + water_l_per_h * cfg.dt_h)
-        ctx = dict(ctx, it_power_kw=it_kw, cooling_power_kw=cooling_kw,
-                   dc_power_kw=it_kw + cooling_kw)
-        return state._replace(metrics=metrics), ctx
+        flow = flow._replace(cooling_kw=cooling_kw,
+                             grid_import_kw=it_kw + cooling_kw)
+        return state._replace(metrics=metrics), dict(ctx, flow=flow)
+    return fn
+
+
+def stage_renewables(cfg: SimConfig) -> Stage:
+    """On-site PV supply: writes `flow.pv_kw` from the capacity-factor
+    input and the (possibly traced) `pv_capacity_kw`.  Netting against the
+    facility load happens downstream — in `stage_battery` (so the battery
+    dispatches on the net load and charges from surplus) or, without a
+    battery, in `stage_net_meter`."""
+    def fn(state: SimState, ctx: dict):
+        cap = ctx.get("pv_capacity_kw")
+        if cap is None:
+            cap = jnp.float32(cfg.renewables.pv_capacity_kw)
+        pv_kw = renewables_mod.pv_power_kw(cap, ctx["pv_cf"])
+        return state, dict(ctx, flow=ctx["flow"]._replace(pv_kw=pv_kw))
+    return fn
+
+
+def stage_net_meter(cfg: SimConfig) -> Stage:
+    """Settle the ledger when renewables run WITHOUT a battery: PV serves
+    the facility load, and the storage-less surplus is exported or
+    curtailed per `cfg.renewables.export_allowed`."""
+    def fn(state: SimState, ctx: dict):
+        flow = ctx["flow"]
+        load = flow.it_kw + flow.cooling_kw
+        net_load, surplus = renewables_mod.net_load_split(load, flow.pv_kw)
+        _, export_kw, curtailed_kw = renewables_mod.split_surplus(
+            surplus, jnp.zeros_like(surplus), cfg.renewables)
+        flow = flow._replace(grid_import_kw=net_load,
+                             grid_export_kw=export_kw,
+                             curtailed_kw=curtailed_kw)
+        return state, dict(ctx, flow=flow)
     return fn
 
 
 def stage_battery(cfg: SimConfig) -> Stage:
+    """Storage dispatch in ledger terms: writes `flow.batt_charge_kw` /
+    `flow.batt_discharge_kw` and settles `flow.grid_import_kw` (and, with
+    renewables on, `grid_export_kw`/`curtailed_kw` — surplus PV charges
+    the battery before anything is exported or thrown away)."""
+    renew = cfg.renewables.enabled
+
     def fn(state: SimState, ctx: dict):
-        batt, grid_kw, discharged = battery_mod.battery_step(
-            state.battery, ctx["dc_power_kw"], ctx["ci"],
-            ctx["batt_threshold"], ctx["ci_rising"], cfg.dt_h, cfg.battery,
+        flow = ctx["flow"]
+        load = flow.it_kw + flow.cooling_kw
+        if renew:
+            net_load, surplus = renewables_mod.net_load_split(load, flow.pv_kw)
+        else:
+            net_load, surplus = load, None
+        batt, charge_kw, discharge_kw = battery_mod.battery_flow_step(
+            state.battery, net_load, ctx["ci"], ctx["batt_threshold"],
+            ctx["ci_rising"], cfg.dt_h, cfg.battery,
             capacity_kwh=ctx.get("batt_capacity_kwh"),
             rate_kw=ctx.get("batt_rate_kw"),
             price=ctx.get("price"), price_lo=ctx.get("price_lo"),
             price_hi=ctx.get("price_hi"),
-            dispatch_lambda=ctx.get("dispatch_lambda"))
+            dispatch_lambda=ctx.get("dispatch_lambda"),
+            pv_surplus_kw=surplus)
+        if renew:
+            pv_to_batt, export_kw, curtailed_kw = renewables_mod.split_surplus(
+                surplus, charge_kw, cfg.renewables)
+            grid_charge_kw = charge_kw - pv_to_batt
+            flow = flow._replace(
+                batt_charge_kw=charge_kw, batt_discharge_kw=discharge_kw,
+                grid_import_kw=net_load + grid_charge_kw - discharge_kw,
+                grid_export_kw=export_kw, curtailed_kw=curtailed_kw)
+        else:
+            # the supply-free ledger: import = facility + charge - discharge
+            # (exactly the pre-ledger metered-grid expression)
+            flow = flow._replace(
+                batt_charge_kw=charge_kw, batt_discharge_kw=discharge_kw,
+                grid_import_kw=load + charge_kw - discharge_kw)
         metrics = state.metrics._replace(
-            batt_discharged=state.metrics.batt_discharged + discharged)
-        ctx = dict(ctx, grid_power_kw=grid_kw)
-        return state._replace(battery=batt, metrics=metrics), ctx
+            batt_discharged=state.metrics.batt_discharged
+            + discharge_kw * cfg.dt_h)
+        return state._replace(battery=batt, metrics=metrics), dict(ctx,
+                                                                   flow=flow)
     return fn
 
 
 def stage_pricing(cfg: SimConfig) -> Stage:
-    """Grid draw -> money: energy charge + billing-window demand charge.
+    """Grid flows -> money: energy charge + billing-window demand charge on
+    `flow.grid_import_kw`, minus the export-tariff revenue earned by
+    `flow.grid_export_kw` (core/pricing.export_revenue_step).
 
     Sits after `stage_battery` so the bill meters the battery-shaped grid
     draw (charge spikes cost, shaved peaks save) — the same quantity
@@ -266,25 +414,38 @@ def stage_pricing(cfg: SimConfig) -> Stage:
     by `summarize`.
     """
     wsteps = pricing_mod.billing_window_steps(cfg.pricing, cfg.dt_h)
+    renew = cfg.renewables.enabled
 
     def fn(state: SimState, ctx: dict):
-        grid_kw = ctx.get("grid_power_kw", ctx["dc_power_kw"])
+        flow = ctx["flow"]
         m = state.metrics
         ec, dc, wp = pricing_mod.pricing_step(
-            m.energy_cost, m.demand_cost, m.window_peak_kw, grid_kw,
-            ctx["price"], state.step, cfg.dt_h, wsteps,
+            m.energy_cost, m.demand_cost, m.window_peak_kw,
+            flow.grid_import_kw, ctx["price"], state.step, cfg.dt_h, wsteps,
             cfg.pricing.demand_charge_per_kw)
         metrics = m._replace(energy_cost=ec, demand_cost=dc,
                              window_peak_kw=wp)
+        if renew:
+            metrics = metrics._replace(
+                export_revenue=pricing_mod.export_revenue_step(
+                    m.export_revenue, flow.grid_export_kw, ctx["price"],
+                    cfg.dt_h, cfg.pricing))
         return state._replace(metrics=metrics), ctx
     return fn
 
 
 def stage_carbon(cfg: SimConfig) -> Stage:
+    """Carbon + energy accounting off the settled ledger: operational
+    carbon, grid energy and the tracked peak all meter
+    `flow.grid_import_kw` — with renewables on, the NET import (on-site
+    generation displaces carbon one-for-one; exports earn no credit under
+    location-based accounting)."""
     static_batt_rate = battery_mod.battery_embodied_rate_kg_per_h(cfg.battery)
+    renew = cfg.renewables.enabled
 
     def fn(state: SimState, ctx: dict):
-        grid_kw = ctx.get("grid_power_kw", ctx["dc_power_kw"])
+        flow = ctx["flow"]
+        grid_kw = flow.grid_import_kw
         n_active = jnp.sum(state.hosts.active.astype(jnp.float32))
         cap = ctx.get("batt_capacity_kwh")
         if cap is not None and cfg.battery.enabled:
@@ -296,14 +457,20 @@ def stage_carbon(cfg: SimConfig) -> Stage:
         op, emb = carbon_mod.carbon_delta(grid_kw, ctx["ci"], cfg.dt_h,
                                           n_active, cfg.embodied, batt_rate)
         m = state.metrics
-        it_kw = ctx.get("it_power_kw", ctx["dc_power_kw"])
         metrics = m._replace(
             op_carbon=m.op_carbon + op,
             emb_carbon=m.emb_carbon + emb,
             grid_energy=m.grid_energy + grid_kw * cfg.dt_h,
-            dc_energy=m.dc_energy + ctx["dc_power_kw"] * cfg.dt_h,
-            it_energy=m.it_energy + it_kw * cfg.dt_h,
+            dc_energy=m.dc_energy + (flow.it_kw + flow.cooling_kw) * cfg.dt_h,
+            it_energy=m.it_energy + flow.it_kw * cfg.dt_h,
             peak_power=jnp.maximum(m.peak_power, grid_kw))
+        if renew:
+            metrics = metrics._replace(
+                pv_energy=metrics.pv_energy + flow.pv_kw * cfg.dt_h,
+                export_energy=(metrics.export_energy
+                               + flow.grid_export_kw * cfg.dt_h),
+                curtailed_energy=(metrics.curtailed_energy
+                                  + flow.curtailed_kw * cfg.dt_h))
         return state._replace(metrics=metrics), ctx
     return fn
 
@@ -324,8 +491,12 @@ def default_pipeline(cfg: SimConfig) -> list[Stage]:
     stages += [stage_scheduler(cfg), stage_progress(cfg), stage_power(cfg)]
     if cfg.cooling.enabled:
         stages.append(stage_cooling(cfg))
+    if cfg.renewables.enabled:
+        stages.append(stage_renewables(cfg))
     if cfg.battery.enabled:
         stages.append(stage_battery(cfg))
+    elif cfg.renewables.enabled:
+        stages.append(stage_net_meter(cfg))
     if cfg.pricing.enabled:
         stages.append(stage_pricing(cfg))
     stages.append(stage_carbon(cfg))
@@ -347,19 +518,23 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
                "shift_threshold": inputs.shift_threshold,
                "wet_bulb_c": inputs.wet_bulb_c, "price": inputs.price,
                "price_lo": inputs.price_lo, "price_hi": inputs.price_hi,
+               "pv_cf": inputs.pv_cf, "flow": init_energy_flow(),
                **dyn}
         for stage in stages:
             state, ctx = stage(state, ctx)
         state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
         if cfg.collect_series:
-            ys = {"grid_power_kw": ctx.get("grid_power_kw", ctx["dc_power_kw"]),
-                  "dc_power_kw": ctx["dc_power_kw"], "ci": ctx["ci"],
+            flow: EnergyFlow = ctx["flow"]
+            ys = {"grid_power_kw": flow.grid_import_kw,
+                  "dc_power_kw": flow.it_kw + flow.cooling_kw,
+                  "ci": ctx["ci"],
                   "n_running": jnp.sum((state.tasks.status == RUNNING)
                                        .astype(jnp.int32)),
                   "battery_charge": state.battery.charge,
-                  "max_overcommit": ctx.get("max_overcommit", jnp.float32(0.0))}
+                  "max_overcommit": ctx.get("max_overcommit", jnp.float32(0.0)),
+                  "flow": flow}
             if cfg.cooling.enabled:
-                ys["cooling_power_kw"] = ctx["cooling_power_kw"]
+                ys["cooling_power_kw"] = flow.cooling_kw
                 ys["wet_bulb_c"] = ctx["wet_bulb_c"]
             if cfg.pricing.enabled:
                 ys["price_per_kwh"] = ctx["price"]
@@ -387,8 +562,10 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     (horizontal-scaling mask), `cooling_setpoint` (thermal setpoint),
     `wet_bulb_trace` (f32[S] weather series, also settable via the
     `weather_trace` argument), `price_trace` (f32[S] electricity prices,
-    core/pricing.py), `dispatch_lambda` (blended battery-dispatch weight)
-    and `seed` (failure-model PRNG).
+    core/pricing.py), `dispatch_lambda` (blended battery-dispatch weight),
+    `pv_cf_trace` (f32[S] solar capacity factors, renewabletraces/) and
+    `pv_capacity_kw` (PV nameplate sizing, core/renewables.py) and `seed`
+    (failure-model PRNG).
     """
     dyn = dict(dyn) if dyn else {}
     if weather_trace is not None:
@@ -398,6 +575,7 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     inputs = build_step_inputs(ci_trace, cfg, dyn=dyn)
     dyn.pop("wet_bulb_trace", None)  # consumed by the inputs, not a ctx key
     dyn.pop("price_trace", None)
+    dyn.pop("pv_cf_trace", None)
     state0 = init_sim_state(tasks, hosts, dyn.get("seed", cfg.seed))
     step = build_step_fn(cfg, stages, dyn)
     final, series = jax.lax.scan(step, state0, inputs)

@@ -35,7 +35,8 @@ from .state import HostTable, TaskTable
 
 # dyn keys that may be per-region vectors (length R) in a fleet
 PER_REGION_KEYS = ("n_active_hosts", "batt_capacity_kwh", "batt_rate_kw",
-                   "cooling_setpoint", "dispatch_lambda", "seed")
+                   "cooling_setpoint", "dispatch_lambda", "pv_capacity_kw",
+                   "seed")
 
 POLICIES = ("greedy", "spill", "round_robin")
 
@@ -57,8 +58,11 @@ class FleetSpec:
     ci_traces:      f32[R, S]  per-region carbon intensity (required)
     wb_traces:      f32[R, S]  per-region wet-bulb weather (needs cooling)
     price_traces:   f32[R, S]  per-region electricity prices (needs pricing)
+    pv_traces:      f32[R, S]  per-region solar capacity factors (needs
+                               renewables, core/renewables.py)
     n_active_hosts: i32[R]     per-region host count (default: all hosts)
-    batt_capacity_kwh, batt_rate_kw, cooling_setpoint, seeds: f32/i32[R]
+    batt_capacity_kwh, batt_rate_kw, cooling_setpoint, pv_capacity_kw,
+    seeds:          f32/i32[R]
     capacity_frac:  float      aggregate core-hour cap per region, as a
                                multiple of its fair (host-count-weighted)
                                share of total work; None = uncapped
@@ -69,9 +73,9 @@ class FleetSpec:
     """
 
     def __init__(self, ci_traces, wb_traces=None, price_traces=None,
-                 n_active_hosts=None,
+                 pv_traces=None, n_active_hosts=None,
                  batt_capacity_kwh=None, batt_rate_kw=None,
-                 cooling_setpoint=None, seeds=None,
+                 cooling_setpoint=None, pv_capacity_kw=None, seeds=None,
                  capacity_frac: float | None = None, policy: str = "greedy",
                  forecast_h: float = 24.0):
         self.ci_traces = np.asarray(ci_traces, np.float32)
@@ -91,6 +95,11 @@ class FleetSpec:
             self.price_traces = np.asarray(price_traces, np.float32)
             assert self.price_traces.shape[0] == r, (
                 f"price_traces regions {self.price_traces.shape[0]} != {r}")
+        self.pv_traces = None
+        if pv_traces is not None:
+            self.pv_traces = np.asarray(pv_traces, np.float32)
+            assert self.pv_traces.shape[0] == r, (
+                f"pv_traces regions {self.pv_traces.shape[0]} != {r}")
 
         def per_region(x, dtype):
             if x is None:
@@ -102,6 +111,7 @@ class FleetSpec:
         self.batt_capacity_kwh = per_region(batt_capacity_kwh, np.float32)
         self.batt_rate_kw = per_region(batt_rate_kw, np.float32)
         self.cooling_setpoint = per_region(cooling_setpoint, np.float32)
+        self.pv_capacity_kw = per_region(pv_capacity_kw, np.float32)
         self.seeds = per_region(seeds, np.int32)
         self.capacity_frac = capacity_frac
         self.policy = policy
@@ -113,11 +123,12 @@ class FleetSpec:
 
     def replace(self, **kw) -> "FleetSpec":
         args = dict(ci_traces=self.ci_traces, wb_traces=self.wb_traces,
-                    price_traces=self.price_traces,
+                    price_traces=self.price_traces, pv_traces=self.pv_traces,
                     n_active_hosts=self.n_active_hosts,
                     batt_capacity_kwh=self.batt_capacity_kwh,
                     batt_rate_kw=self.batt_rate_kw,
-                    cooling_setpoint=self.cooling_setpoint, seeds=self.seeds,
+                    cooling_setpoint=self.cooling_setpoint,
+                    pv_capacity_kw=self.pv_capacity_kw, seeds=self.seeds,
                     capacity_frac=self.capacity_frac, policy=self.policy,
                     forecast_h=self.forecast_h)
         args.update(kw)
@@ -131,6 +142,7 @@ class FleetSpec:
                          ("batt_capacity_kwh", self.batt_capacity_kwh),
                          ("batt_rate_kw", self.batt_rate_kw),
                          ("cooling_setpoint", self.cooling_setpoint),
+                         ("pv_capacity_kw", self.pv_capacity_kw),
                          ("seed", self.seeds)):
             if val is not None:
                 dyn[key] = jnp.asarray(val)
@@ -182,14 +194,15 @@ def fleet_place(tasks: TaskTable, hosts: HostTable, fleet: FleetSpec,
 def fleet_cell(tasks_r: TaskTable, hosts: HostTable, cfg: SimConfig,
                ci_traces, wb_traces=None, scalar_dyn: dict | None = None,
                per_region_dyn: dict | None = None,
-               price_traces=None) -> FleetResult:
+               price_traces=None, pv_traces=None) -> FleetResult:
     """The jit/vmap-safe fleet program over PRE-PLACED stacked tables.
 
     tasks_r: TaskTable with leading region axis [R, W] (split_by_region).
     scalar_dyn: traced values shared by every region; per_region_dyn: dict
-    of length-R arrays, one value per region.  wb_traces/price_traces are
-    optional [R, S] per-region weather/tariff families.  This is the cell
-    the grid engine vmaps — `simulate_fleet` is its host-side front door.
+    of length-R arrays, one value per region.  wb_traces/price_traces/
+    pv_traces are optional [R, S] per-region weather/tariff/solar families.
+    This is the cell the grid engine vmaps — `simulate_fleet` is its
+    host-side front door.
     """
     scalar_dyn = dict(scalar_dyn or {})
     per_region_dyn = dict(per_region_dyn or {})
@@ -198,16 +211,22 @@ def fleet_cell(tasks_r: TaskTable, hosts: HostTable, cfg: SimConfig,
           else jnp.asarray(wb_traces, jnp.float32))
     pr = (None if price_traces is None
           else jnp.asarray(price_traces, jnp.float32))
+    pv = (None if pv_traces is None
+          else jnp.asarray(pv_traces, jnp.float32))
 
-    def one(tt, tr, per_r, wb_r, pr_r):
+    def one(tt, tr, per_r, wb_r, pr_r, pv_r):
         dyn = {**scalar_dyn, **per_r}
         if pr_r is not None:
             dyn["price_trace"] = pr_r
+        if pv_r is not None:
+            dyn["pv_cf_trace"] = pv_r
         final, _ = simulate(tt, hosts, tr, cfg, dyn=dyn, weather_trace=wb_r)
         return summarize(final, cfg)
 
-    in_axes = (0, 0, 0, None if wb is None else 0, None if pr is None else 0)
-    per = jax.vmap(one, in_axes=in_axes)(tasks_r, ci, per_region_dyn, wb, pr)
+    in_axes = (0, 0, 0, None if wb is None else 0, None if pr is None else 0,
+               None if pv is None else 0)
+    per = jax.vmap(one, in_axes=in_axes)(tasks_r, ci, per_region_dyn, wb, pr,
+                                         pv)
     return FleetResult(total=fleet_totals(per), per_region=per)
 
 
@@ -238,6 +257,10 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
         raise ValueError("the fleet carries price_traces but "
                          "cfg.pricing.enabled is False: the per-region "
                          "prices would be ignored")
+    if fleet.pv_traces is not None and not cfg.renewables.enabled:
+        raise ValueError("the fleet carries pv_traces but "
+                         "cfg.renewables.enabled is False: the per-region "
+                         "PV resource would be ignored")
     if region is None:
         region = fleet_place(tasks, hosts, fleet, cfg.dt_h,
                              n_steps=cfg.n_steps)
@@ -260,7 +283,9 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
               else jnp.asarray(fleet.wb_traces),
               scalar_dyn, per_region_dyn,
               None if fleet.price_traces is None
-              else jnp.asarray(fleet.price_traces))
+              else jnp.asarray(fleet.price_traces),
+              None if fleet.pv_traces is None
+              else jnp.asarray(fleet.pv_traces))
 
 
 # one shared jit cache across simulate_fleet calls: same (shapes, cfg, dyn

@@ -22,6 +22,11 @@ Axis kinds:
     (core/pricing.py): cost accumulation + the battery's price-aware
     dispatch; requires `cfg.pricing.enabled`.  A tariff dimension
     orthogonal to region and climate.
+  * `renewable_axis(traces)` — solar capacity-factor traces `f32[V, S]`
+    (renewabletraces/synthetic.py) driving the on-site generation
+    subsystem (core/renewables.py); requires `cfg.renewables.enabled`.
+    A solar-resource dimension orthogonal to region, climate and tariff —
+    pair it with `dyn_axis(pv_capacity_kw=...)` for sizing studies.
   * `dyn_axis(**named_values)` — traced scenario scalars fed to the engine as
     dyn ctx keys.  Several names in one call sweep *zipped* (one grid dim);
     separate calls sweep as a cross product (separate dims).  Understood keys:
@@ -32,6 +37,8 @@ Axis kinds:
       - `dispatch_lambda`                    (blended battery dispatch weight,
                                               core/battery.py: 1 = carbon,
                                               0 = price arbitrage)
+      - `pv_capacity_kw`                     (PV nameplate sizing,
+                                              core/renewables.py)
   * `seed_axis(seeds)` — PRNG seeds for the stochastic failure model.
   * `region_axis(fleet)` — a multi-datacenter FLEET (core/fleet.py): the
     FleetSpec's R regional datacenters (per-region carbon + weather traces,
@@ -94,10 +101,21 @@ The cost-carbon Pareto front in ONE program (battery policy 'blended',
     ], ci_trace=ci)
     # res.total_cost / res.total_carbon_kg have shape [L, P, C]
 
+A PV x battery sizing Pareto over tariffs in ONE program (the renewables
+acceptance grid; see examples/renewable_sizing.py)::
+
+    res = sweep_grid(tasks, hosts, cfg, [
+        renewable_axis(pv_cf_traces),                 # f32[V, S]
+        dyn_axis(pv_capacity_kw=pv_caps),             # f32[K]
+        dyn_axis(batt_capacity_kwh=caps),             # f32[C]
+        price_axis(tariffs),                          # f32[P, S]
+    ], ci_trace=ci)
+    # res.total_cost / res.total_carbon_kg have shape [V, K, C, P]
+
 Swept config knobs must be *enabled* statically (`cfg.battery.enabled`,
-`cfg.shifting.enabled`, `cfg.cooling.enabled`, `cfg.pricing.enabled`) — the
-dyn value modulates an enabled technique; the enable flag itself switches
-the compiled pipeline.
+`cfg.shifting.enabled`, `cfg.cooling.enabled`, `cfg.pricing.enabled`,
+`cfg.renewables.enabled`) — the dyn value modulates an enabled technique;
+the enable flag itself switches the compiled pipeline.
 """
 from __future__ import annotations
 
@@ -117,9 +135,11 @@ TRACE_KEY = "ci_trace"
 SEED_KEY = "seed"
 WEATHER_KEY = "wet_bulb_trace"
 PRICE_KEY = "price_trace"
+PV_KEY = "pv_cf_trace"
 FLEET_CI_KEY = "fleet_ci_traces"
 FLEET_WB_KEY = "fleet_wb_traces"
 FLEET_PRICE_KEY = "fleet_price_traces"
+FLEET_PV_KEY = "fleet_pv_traces"
 
 _REDUCERS = {"min": jnp.min, "max": jnp.max,
              "argmin": jnp.argmin, "argmax": jnp.argmax}
@@ -179,6 +199,19 @@ def price_axis(price_traces) -> Axis:
     return Axis("price", (PRICE_KEY,), (traces,))
 
 
+def renewable_axis(pv_cf_traces) -> Axis:
+    """Solar-resource axis: capacity-factor traces f32[V, S] in [0, 1]
+    (renewabletraces/synthetic.py) -> one grid dim of length V.  Drives the
+    on-site generation subsystem (core/renewables.py) — PV supply, surplus
+    export/curtailment and the battery's surplus-aware dispatch; requires
+    `cfg.renewables.enabled`.  Pair with `dyn_axis(pv_capacity_kw=...)` to
+    sweep plant sizing against the resource."""
+    traces = jnp.asarray(pv_cf_traces, jnp.float32)
+    assert traces.ndim == 2, (
+        f"renewable_axis wants f32[V, S], got {traces.shape}")
+    return Axis("renewable", (PV_KEY,), (traces,))
+
+
 def seed_axis(seeds) -> Axis:
     """PRNG-seed axis (stochastic failures replicate across seeds)."""
     return Axis("seed", (SEED_KEY,), (jnp.asarray(seeds, jnp.int32),))
@@ -197,6 +230,9 @@ def region_axis(fleet) -> Axis:
     if fleet.price_traces is not None:
         values += (jnp.asarray(fleet.price_traces, jnp.float32),)
         names += (FLEET_PRICE_KEY,)
+    if fleet.pv_traces is not None:
+        values += (jnp.asarray(fleet.pv_traces, jnp.float32),)
+        names += (FLEET_PV_KEY,)
     return Axis("region", names, values, meta=fleet)
 
 
@@ -273,11 +309,12 @@ class ScenarioGrid:
                     "region_axis cannot be the grid's leading axis: declare "
                     "it after the swept axes (chunking/sharding split the "
                     "leading axis, and a fleet must never be split)")
-            if any(ax.kind in ("trace", "weather", "price") for ax in axes):
+            if any(ax.kind in ("trace", "weather", "price", "renewable")
+                   for ax in axes):
                 raise ValueError(
                     "region_axis already carries per-region carbon/weather/"
-                    "price traces; drop the trace_axis/weather_axis/"
-                    "price_axis")
+                    "price/pv traces; drop the trace_axis/weather_axis/"
+                    "price_axis/renewable_axis")
             for ax in axes:
                 if ax.kind == "fleet":
                     for n, v in zip(ax.names, ax.values):
@@ -350,20 +387,21 @@ class ScenarioGrid:
             def base(*payloads):
                 dyn = dict(base_dyn)
                 per_region = dict(spec_dyn)
-                ci = wb = pr = None
+                ci = wb = pr = pv = None
                 for ax, vals in zip(axes, payloads):
                     if ax.kind == "region":
                         named = dict(zip(ax.names, vals))
                         ci = named[FLEET_CI_KEY]
                         wb = named.get(FLEET_WB_KEY)
                         pr = named.get(FLEET_PRICE_KEY)
+                        pv = named.get(FLEET_PV_KEY)
                     elif ax.kind == "fleet":
                         per_region.update(zip(ax.names, vals))
                     else:
                         dyn.update(zip(ax.names, vals))
                 return fleet_cell(stacked, hosts, cfg, ci, wb,
                                   scalar_dyn=dyn, per_region_dyn=per_region,
-                                  price_traces=pr)
+                                  price_traces=pr, pv_traces=pv)
 
         fn = base
         for i in reversed(range(len(axes))):
@@ -393,6 +431,16 @@ class ScenarioGrid:
             raise ValueError("the fleet carries price_traces but "
                              "cfg.pricing.enabled is False: the per-region "
                              "prices would be ignored")
+        if (not cfg.renewables.enabled
+                and any(ax.kind == "renewable" for ax in self.axes)):
+            raise ValueError("grid has a renewable_axis but "
+                             "cfg.renewables.enabled is False: the PV "
+                             "capacity-factor trace would be ignored")
+        if (self.fleet is not None and self.fleet.pv_traces is not None
+                and not cfg.renewables.enabled):
+            raise ValueError("the fleet carries pv_traces but "
+                             "cfg.renewables.enabled is False: the "
+                             "per-region PV resource would be ignored")
 
     def run(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
             ci_trace=None, *, chunk_size: int | None = None, mesh=None,
@@ -433,15 +481,25 @@ class ScenarioGrid:
                                  "region_axis: add a swept leading axis")
             fn = jax.jit(fn) if jit else fn
             return fn(*payloads)
-        if chunk_size is None:
+        auto_chunked = chunk_size is None
+        if auto_chunked:
             chunk_size = self._auto_chunk_size(tasks, hosts, cfg,
                                                memory_budget_bytes)
+        if mesh is not None:
+            chunk_size = _round_chunk_to_mesh(mesh, chunk_size)
         if (red is not None and red[1] == 0
                 and self.axes[0].length > chunk_size):
+            # guard the documented footgun up front: per-chunk reductions
+            # over the split axis cannot be stitched back together, and
+            # letting it run fails with a shape error deep inside the scan
+            cause = ("chunk size auto-derived from the memory budget"
+                     if auto_chunked else "explicit chunk_size")
             raise ValueError(
-                "cannot reduce over the leading axis of a chunked grid: "
-                "move the reduced axis off axis 0, raise the memory budget, "
-                "or pass an explicit chunk_size >= its length")
+                f"reduce=({red[0]!r}, 0) targets the leading axis of a "
+                f"chunked run (leading length {self.axes[0].length}, "
+                f"chunks of {chunk_size}: {cause}): move the reduced axis "
+                "off axis 0, raise the memory budget, or pass an explicit "
+                "chunk_size >= the leading length")
         if mesh is not None:
             return self._run_sharded(fn, payloads, mesh, chunk_size, red)
         if jit:
@@ -498,17 +556,9 @@ class ScenarioGrid:
         return in_sh, NamedSharding(mesh, out_spec), lead, repl
 
     def _run_sharded(self, fn, payloads, mesh, chunk_size, red=None):
-        spec = _mesh_spec(mesh)
-        if chunk_size is not None:
-            # NamedSharding requires each chunk's leading dim to divide evenly
-            # over the mesh devices; round the chunk up to a device multiple
-            # (the total leading length must divide too, as in any sharded
-            # sweep — then every chunk including the tail stays divisible).
-            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-            ndev = 1
-            for a in (spec[0] or ()):
-                ndev *= sizes[a]
-            chunk_size = max(ndev, -(-chunk_size // ndev) * ndev)
+        # chunk_size arrives already rounded to a device multiple
+        # (_round_chunk_to_mesh in `run`), so the leading-axis reduce guard
+        # and the actual chunking agree on what gets split
         in_sh, out_sh, lead, repl = self._shardings(mesh, red)
         jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
 
@@ -554,6 +604,18 @@ class ScenarioGrid:
 def _mesh_spec(mesh) -> P:
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]
     return P(tuple(axes))
+
+
+def _round_chunk_to_mesh(mesh, chunk_size: int) -> int:
+    """NamedSharding requires each chunk's leading dim to divide evenly over
+    the mesh devices; round the chunk up to a device multiple (the total
+    leading length must divide too, as in any sharded sweep — then every
+    chunk including the tail stays divisible)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ndev = 1
+    for a in (_mesh_spec(mesh)[0] or ()):
+        ndev *= sizes[a]
+    return max(ndev, -(-chunk_size // ndev) * ndev)
 
 
 def _concat_chunks(parts: list[SimResult]) -> SimResult:

@@ -31,7 +31,12 @@ class SimResult(NamedTuple):
     wue_l_per_kwh: jax.Array       # water_l / it_energy (0.0 w/o cooling)
     energy_cost: jax.Array         # currency; 0 unless cfg.pricing.enabled
     demand_cost: jax.Array         # billing-window peak charges (incl. final)
-    total_cost: jax.Array          # energy_cost + demand_cost
+    export_revenue: jax.Array      # export-tariff earnings (renewables)
+    total_cost: jax.Array          # energy_cost + demand_cost - export_revenue
+    pv_energy_kwh: jax.Array       # on-site generation; 0 unless renewables
+    grid_export_kwh: jax.Array     # surplus sold to the grid
+    curtailed_kwh: jax.Array       # surplus thrown away (export disallowed)
+    heat_reuse_kwh: jax.Array      # reclaimed chiller-path heat (district heat)
     peak_power_kw: jax.Array
     sla_violation_frac: jax.Array
     mean_delay_h: jax.Array        # mean(finish - arrival - duration) over done
@@ -91,7 +96,12 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
         wue_l_per_kwh=m.water_l / it_safe,
         energy_cost=m.energy_cost,
         demand_cost=demand_cost,
-        total_cost=m.energy_cost + demand_cost,
+        export_revenue=m.export_revenue,
+        total_cost=m.energy_cost + demand_cost - m.export_revenue,
+        pv_energy_kwh=m.pv_energy,
+        grid_export_kwh=m.export_energy,
+        curtailed_kwh=m.curtailed_energy,
+        heat_reuse_kwh=m.heat_reuse,
         peak_power_kw=m.peak_power,
         sla_violation_frac=n_viol / n_decided,
         mean_delay_h=jnp.sum(delay) / n_done,
@@ -146,7 +156,12 @@ def fleet_totals(per_region: SimResult, axis: int = 0) -> SimResult:
         wue_l_per_kwh=s(p.water_l) / it_safe,
         energy_cost=s(p.energy_cost),
         demand_cost=s(p.demand_cost),
+        export_revenue=s(p.export_revenue),
         total_cost=s(p.total_cost),
+        pv_energy_kwh=s(p.pv_energy_kwh),
+        grid_export_kwh=s(p.grid_export_kwh),
+        curtailed_kwh=s(p.curtailed_kwh),
+        heat_reuse_kwh=s(p.heat_reuse_kwh),
         peak_power_kw=s(p.peak_power_kw),
         sla_violation_frac=wmean(p.sla_violation_frac, p.n_decided),
         mean_delay_h=wmean(p.mean_delay_h, p.n_done),
@@ -180,12 +195,14 @@ class SustainabilityExtras(NamedTuple):
     legacy flat-intensity estimates when a subsystem did not run."""
     water_l: jax.Array        # on-site + upstream water, litres
     energy_cost: jax.Array    # electricity bill, currency units
+    heat_credit_kg: jax.Array # CO2 displaced by reclaimed district heat
 
 
 def sustainability_extras(res: SimResult, *, cfg: SimConfig | None = None,
                           wue_l_per_kwh: float = 1.8,
                           water_intensity_l_per_kwh: float = 1.6,
                           price_per_kwh: float = 0.12,
+                          displaced_heat_kg_per_kwh: float = 0.2,
                           simulated_water: bool | None = None,
                           simulated_cost: bool | None = None,
                           ) -> SustainabilityExtras:
@@ -203,10 +220,21 @@ def sustainability_extras(res: SimResult, *, cfg: SimConfig | None = None,
     inferred from `cooling_energy_kwh > 0` (which misfires in the
     degenerate zero-fan-overhead fully-economized case: cooling ran, used
     no energy, evaporated no water, and the flat estimate wrongly kicks
-    in) and cost from `total_cost > 0` (which misfires on an all-zero-price
-    trace).  Upstream water intensity of generation (~1.6 L/kWh grid
+    in) and cost from `total_cost != 0 or export_revenue > 0` (a simulated
+    bill may be zero or negative once the export tariff runs; the
+    inference still misfires on an all-zero-price trace, where the real
+    bill of exactly 0 is indistinguishable from pricing never running).
+    Upstream water intensity of generation (~1.6 L/kWh grid
     average) is always estimate-based.  Regionalized values can be passed
-    per sweep exactly like carbon traces."""
+    per sweep exactly like carbon traces.
+
+    `heat_credit_kg` is the district-heating credit for reclaimed
+    chiller-path heat (`cfg.cooling.heat_reuse_fraction`, core/thermal.py):
+    every reclaimed kWh displaces `displaced_heat_kg_per_kwh` of heating
+    emissions (~0.2 kg/kWh for a gas boiler).  Zero whenever heat reuse is
+    off — the credit composes onto any SimResult without touching the
+    simulated carbon totals (report it separately or subtract it
+    deliberately: avoided emissions are not operational carbon)."""
     if cfg is not None:
         if simulated_water is None:
             simulated_water = cfg.cooling.enabled
@@ -223,9 +251,16 @@ def sustainability_extras(res: SimResult, *, cfg: SimConfig | None = None,
     flat_cost = pricing_mod.flat_energy_cost(res.grid_energy_kwh,
                                              price_per_kwh)
     if simulated_cost is None:
-        cost = jnp.where(res.total_cost > 0.0, res.total_cost, flat_cost)
+        # a simulated bill may be zero or NEGATIVE once the export tariff
+        # runs (revenue can exceed the import charges), so the inference
+        # keys on any nonzero cost OR any export revenue — only the
+        # all-zero-price-trace degenerate case still misfires (documented)
+        simulated = (res.total_cost != 0.0) | (res.export_revenue > 0.0)
+        cost = jnp.where(simulated, res.total_cost, flat_cost)
     elif simulated_cost:
         cost = res.total_cost
     else:
         cost = flat_cost
-    return SustainabilityExtras(water_l=water, energy_cost=cost)
+    heat_credit = res.heat_reuse_kwh * displaced_heat_kg_per_kwh
+    return SustainabilityExtras(water_l=water, energy_cost=cost,
+                                heat_credit_kg=heat_credit)

@@ -80,6 +80,18 @@ def pricing_step(energy_cost, demand_cost, window_peak_kw, grid_kw, price,
     return energy_cost, demand_cost, window_peak_kw
 
 
+def export_revenue_step(export_revenue, grid_export_kw, price, dt_h: float,
+                        cfg: PricingConfig):
+    """One export-tariff update: exported surplus earns
+    `export_price_fraction` of the spot price per kWh (a time-of-use
+    feed-in tariff; 1.0 is classic 1:1 net metering).  Deliberately a
+    separate accumulator from the import charges: the meter runs both
+    ways, but the bill nets only at summary time
+    (`SimResult.total_cost = energy + demand - export_revenue`)."""
+    return export_revenue + (grid_export_kw * price * dt_h
+                             * jnp.float32(cfg.export_price_fraction))
+
+
 def settle_demand_charge(demand_cost, window_peak_kw, cfg: PricingConfig):
     """Total demand cost incl. the final open billing window's peak."""
     return demand_cost + window_peak_kw * jnp.float32(cfg.demand_charge_per_kw)

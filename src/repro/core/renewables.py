@@ -1,0 +1,63 @@
+"""On-site renewable generation: PV supply for the energy-flow ledger.
+
+The paper's battery and temporal-shifting techniques exist to align demand
+with low-carbon supply; this module adds the supply side itself.  Per step,
+a PV plant of `pv_capacity_kw` nameplate capacity produces
+
+    pv_kw = pv_capacity_kw * cf(t)
+
+from a capacity-factor trace cf(t) in [0, 1] (renewabletraces/synthetic.py,
+dyn key `pv_cf_trace` / grid axis `renewable_axis`).  Generation enters the
+engine's `EnergyFlow` ledger (core/engine.py) where it is netted against
+the facility load:
+
+  * load first — PV serves IT + cooling power directly;
+  * battery second — surplus preferentially charges the battery
+    (core/battery.surplus_aware_dispatch: free energy beats any dispatch
+    policy, and the battery never discharges into its own surplus);
+  * grid last — the remainder is exported when
+    `cfg.renewables.export_allowed` (earning the pricing subsystem's export
+    tariff) or curtailed when the site may not back-feed.
+
+`pv_capacity_kw` may be a traced dyn value (`dyn_axis(pv_capacity_kw=...)`)
+so PV-sizing studies sweep inside one compiled program, and fleets carry
+per-region capacity factors (`FleetSpec(pv_traces=...)`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import RenewableConfig
+
+
+def pv_power_kw(capacity_kw, capacity_factor):
+    """Instantaneous PV output.  Both arguments may be traced scalars."""
+    return jnp.maximum(capacity_kw * capacity_factor, 0.0)
+
+
+def net_load_split(load_kw, pv_kw):
+    """(net_load_kw, surplus_kw): generation netted against facility load.
+
+    Exactly one of the two is nonzero — PV either falls short of the load
+    (net import remains) or overshoots it (surplus to store/export/curtail).
+    """
+    net_load = jnp.maximum(load_kw - pv_kw, 0.0)
+    surplus = jnp.maximum(pv_kw - load_kw, 0.0)
+    return net_load, surplus
+
+
+def split_surplus(surplus_kw, charge_kw, cfg: RenewableConfig):
+    """Route a PV surplus.  Returns (pv_to_batt_kw, grid_export_kw,
+    curtailed_kw).
+
+    The battery's charge decision (which may exceed the surplus: grid
+    top-up when the dispatch policy asks for it) absorbs surplus first;
+    the remainder is exported when the site may back-feed, else curtailed.
+    `export_allowed` is static config: it selects the compiled routing.
+    """
+    pv_to_batt = jnp.minimum(charge_kw, surplus_kw)
+    remainder = surplus_kw - pv_to_batt
+    zero = jnp.zeros_like(remainder)
+    if cfg.export_allowed:
+        return pv_to_batt, remainder, zero
+    return pv_to_batt, zero, remainder

@@ -96,6 +96,11 @@ class MetricsAcc(NamedTuple):
     energy_cost: jax.Array     # f32[] currency; 0 unless cfg.pricing.enabled
     demand_cost: jax.Array     # f32[] currency from CLOSED billing windows
     window_peak_kw: jax.Array  # f32[] running peak of the open billing window
+    pv_energy: jax.Array       # f32[] kWh generated on-site (renewables)
+    export_energy: jax.Array   # f32[] kWh of surplus exported to the grid
+    curtailed_energy: jax.Array  # f32[] kWh of surplus thrown away
+    export_revenue: jax.Array  # f32[] currency earned by the export tariff
+    heat_reuse: jax.Array      # f32[] kWh of chiller-path heat reclaimed
 
 
 class SimState(NamedTuple):
@@ -205,7 +210,8 @@ def init_metrics() -> MetricsAcc:
                       it_energy=z, cooling_energy=z, water_l=z,
                       peak_power=z, batt_discharged=z, n_interrupts=z,
                       n_shift_delays=z, energy_cost=z, demand_cost=z,
-                      window_peak_kw=z)
+                      window_peak_kw=z, pv_energy=z, export_energy=z,
+                      curtailed_energy=z, export_revenue=z, heat_reuse=z)
 
 
 def init_sim_state(tasks: TaskTable, hosts: HostTable, seed: int = 0) -> SimState:

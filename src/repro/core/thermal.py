@@ -78,6 +78,23 @@ def cooling_step(it_power_kw, wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
     return fan_kw + chiller_kw, water_l_per_h
 
 
+def reclaimable_heat_kw(it_power_kw, cooling_kw, wet_bulb_c,
+                        cfg: CoolingConfig, setpoint_c=None):
+    """Chiller-path heat flow (load + compressor work) available for reuse.
+
+    District-heating reclaim taps the condenser loop, so only the
+    chiller-path heat counts — economized heat rejects at near-ambient
+    temperature through dry coils and is useless to a heat network.
+    Recomputed from the already-known cooling power (works for both the
+    fused-kernel and the elementwise cooling paths): chiller power is the
+    cooling power minus the weather-independent fan/pump overhead, and the
+    chiller-path load is `economizer_fraction * IT`.
+    """
+    frac = economizer_fraction(wet_bulb_c, cfg, setpoint_c)
+    chiller_kw = cooling_kw - cfg.fan_pump_overhead * it_power_kw
+    return frac * it_power_kw + chiller_kw
+
+
 def dynamic_pue(it_power_kw, wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
     """Instantaneous PUE = facility/IT power (>= 1; load-independent here
     because both cooling terms scale linearly with IT power)."""

@@ -96,8 +96,18 @@ def _tou_base(t_h: np.ndarray, phase_d: np.ndarray) -> np.ndarray:
 
 
 def make_price_traces(n_steps: int, dt_h: float = 0.25,
-                      n_regions: int = N_REGIONS, seed: int = 0) -> np.ndarray:
-    """f32[n_regions, n_steps] electricity price traces ($/kWh)."""
+                      n_regions: int = N_REGIONS, seed: int = 0,
+                      carbon_tax_per_kg: float = 0.0) -> np.ndarray:
+    """f32[n_regions, n_steps] electricity price traces ($/kWh).
+
+    `carbon_tax_per_kg` > 0 folds a carbon tax into the tariff host-side:
+    each region's price gains `tax * ci(t) / 1000` $/kWh from the carbon
+    trace of the SAME `(n_regions, seed)` (carbontraces/synthetic.py) — the
+    one-line way to study carbon pricing without touching the engine, since
+    a taxed tariff makes the battery's 'price' policy partially
+    carbon-aware by construction.  The default 0.0 leaves the trace
+    bitwise unchanged.
+    """
     p = sample_price_params(n_regions, seed)
     rng = np.random.default_rng(seed + 17)
     t = np.arange(n_steps) * dt_h                                   # [S]
@@ -133,6 +143,10 @@ def make_price_traces(n_steps: int, dt_h: float = 0.25,
         sacc = srho * sacc + jump_mag[:, s:s + 1]
         spike[:, s:s + 1] = sacc
     price = p.mean[:, None] * np.maximum(base + noise + spike, 0.02)
+    if carbon_tax_per_kg:
+        from repro.carbontraces.synthetic import make_region_traces
+        ci = make_region_traces(n_steps, dt_h, n_regions, seed)  # gCO2/kWh
+        price = price + carbon_tax_per_kg * ci / 1000.0
     return price.astype(np.float32)
 
 

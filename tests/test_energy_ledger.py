@@ -1,0 +1,179 @@
+"""Property-based tests (hypothesis) for the energy-flow ledger.
+
+The engine's conservation law (core/engine.py module docstring)
+
+    grid_import + pv + batt_discharge
+        == it + cooling + batt_charge + grid_export + curtailed
+
+must hold at EVERY step, for EVERY subsystem combination — all 2^3
+cooling x pricing x renewables on/off combos — under every battery
+dispatch policy ('carbon' always; 'price'/'blended' whenever pricing is
+on), with and without storage, export allowed or curtailed.  The law is
+deliberately checked here rather than at runtime (a runtime assert would
+poison XLA fusion), so this tier is the ledger's only guard.
+
+Alongside conservation: sign/exclusivity invariants (no negative flows,
+import and export never simultaneous) and the integral consistency between
+the per-step ledger and the accumulated SimResult energies.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:  # optional dependency: the fuzz tier below needs it, the
+    # deterministic all-combos sweep does not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (BatteryConfig, CoolingConfig, PricingConfig,
+                        RenewableConfig, SimConfig, make_host_table,
+                        make_task_table, simulate, summarize)
+
+S = 96
+DT = 0.25
+
+rng0 = np.random.default_rng(21)
+N = 12
+TASKS = make_task_table(np.sort(rng0.uniform(0.0, 8.0, N)),
+                        rng0.uniform(0.5, 4.0, N),
+                        rng0.integers(1, 3, N).astype(float))
+HOSTS = make_host_table(3, 4)
+
+COMBOS = [(cool, price, renew)
+          for cool in (False, True)
+          for price in (False, True)
+          for renew in (False, True)]
+POLICIES = ("carbon", "price", "blended")
+
+
+def _traces(seed: int):
+    rng = np.random.default_rng(seed)
+    t = np.arange(S) * DT
+    ci = (rng.uniform(50, 600)
+          * (1 + rng.uniform(0, 0.8) * np.sin(2 * np.pi * t / 24
+                                              + rng.uniform(0, 6)))
+          + rng.normal(0, 10, S)).clip(5.0).astype(np.float32)
+    price = (rng.uniform(0.05, 0.2)
+             * (1 + rng.uniform(0, 0.9) * np.sin(2 * np.pi * t / 24
+                                                 + rng.uniform(0, 6)))
+             + rng.exponential(0.01, S)).clip(0.005).astype(np.float32)
+    wb = (rng.uniform(5, 25)
+          + 6.0 * np.sin(2 * np.pi * t / 24)).astype(np.float32)
+    day = np.clip(np.sin(2 * np.pi * (t - 6.0) / 24.0), 0.0, 1.0)
+    cf = (day * rng.uniform(0.3, 0.9)).astype(np.float32)
+    return ci, price, wb, cf
+
+
+def _cfg(cool, price, renew, policy, batt, export):
+    return SimConfig(
+        n_steps=S, collect_series=True,
+        cooling=CoolingConfig(enabled=cool),
+        pricing=PricingConfig(enabled=price, billing_window_h=12.0),
+        renewables=RenewableConfig(enabled=renew, export_allowed=export),
+        battery=BatteryConfig(enabled=batt, capacity_kwh=6.0, policy=policy,
+                              price_window_h=24.0))
+
+
+def _check_ledger(cfg, res, series):
+    flow = series["flow"]
+    f = {k: np.asarray(getattr(flow, k)) for k in flow._fields}
+    lhs = f["grid_import_kw"] + f["pv_kw"] + f["batt_discharge_kw"]
+    rhs = (f["it_kw"] + f["cooling_kw"] + f["batt_charge_kw"]
+           + f["grid_export_kw"] + f["curtailed_kw"])
+    scale = max(float(np.abs(rhs).max()), 1.0)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-4 * scale,
+                               err_msg="ledger conservation violated")
+    for k, v in f.items():
+        assert (v >= -1e-5 * scale).all(), f"negative flow {k}"
+    # the meter runs one way at a time
+    assert (np.minimum(f["grid_import_kw"], f["grid_export_kw"])
+            <= 1e-5 * scale).all()
+    if not cfg.renewables.enabled:
+        for k in ("pv_kw", "grid_export_kw", "curtailed_kw"):
+            assert (f[k] == 0.0).all(), f"{k} nonzero with renewables off"
+    if cfg.renewables.export_allowed:
+        assert (f["curtailed_kw"] == 0.0).all()
+    if not cfg.cooling.enabled:
+        assert (f["cooling_kw"] == 0.0).all()
+    # ledger integrals == accumulated SimResult energies
+    np.testing.assert_allclose(float(res.grid_energy_kwh),
+                               f["grid_import_kw"].sum() * DT,
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(float(res.it_energy_kwh),
+                               f["it_kw"].sum() * DT, rtol=1e-4, atol=1e-3)
+    if cfg.renewables.enabled:
+        np.testing.assert_allclose(float(res.pv_energy_kwh),
+                                   f["pv_kw"].sum() * DT,
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(float(res.grid_export_kwh),
+                                   f["grid_export_kw"].sum() * DT,
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(float(res.curtailed_kwh),
+                                   f["curtailed_kw"].sum() * DT,
+                                   rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(float(res.batt_discharged_kwh),
+                               f["batt_discharge_kw"].sum() * DT,
+                               rtol=1e-4, atol=1e-3)
+
+
+def _run_and_check(cool, price, renew, seed, policy_id, lam, pv_kw,
+                   export, batt):
+    # price-aware policies need the pricing subsystem; without it the
+    # config is invalid by contract, so exercise 'carbon' there
+    policy = POLICIES[policy_id] if (price and batt) else "carbon"
+    cfg = _cfg(cool, price, renew, policy, batt, export)
+    ci, pr, wb, cf = _traces(seed)
+    dyn = {}
+    if policy == "blended":
+        dyn["dispatch_lambda"] = np.float32(lam)  # traced: one compile
+    if price:
+        dyn["price_trace"] = pr
+    if renew:
+        dyn["pv_cf_trace"] = cf
+        dyn["pv_capacity_kw"] = np.float32(pv_kw)
+    final, series = simulate(TASKS, HOSTS, ci, cfg, dyn=dyn,
+                             weather_trace=wb if cool else None)
+    res = summarize(final, cfg)
+    _check_ledger(cfg, res, series)
+
+
+@pytest.mark.parametrize("cool,price,renew", COMBOS)
+class TestConservationSweep:
+    """Deterministic tier: every 2^3 subsystem combo x every valid dispatch
+    policy x storage on/off x export on/off, fixed seeds.  Runs even
+    without hypothesis (the fuzz tier below widens the input space)."""
+
+    @pytest.mark.parametrize("policy_id", [0, 1, 2])
+    def test_every_step_conserves_energy(self, cool, price, renew,
+                                         policy_id):
+        if policy_id > 0 and not price:
+            pytest.skip("price-aware policies need the pricing subsystem")
+        _run_and_check(cool, price, renew, seed=7 + policy_id,
+                       policy_id=policy_id, lam=0.5, pv_kw=40.0,
+                       export=True, batt=True)
+
+    def test_no_battery_and_curtailment(self, cool, price, renew):
+        _run_and_check(cool, price, renew, seed=13, policy_id=0, lam=1.0,
+                       pv_kw=60.0, export=False, batt=False)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("cool,price,renew", COMBOS)
+    class TestConservationFuzz:
+        @settings(max_examples=6, deadline=None)
+        @given(seed=st.integers(0, 2**16),
+               policy_id=st.integers(0, 2),
+               lam=st.floats(0.0, 1.0),
+               pv_kw=st.floats(0.0, 80.0),
+               export=st.booleans(),
+               batt=st.booleans())
+        def test_every_step_conserves_energy(self, cool, price, renew, seed,
+                                             policy_id, lam, pv_kw, export,
+                                             batt):
+            """Conservation + sign/exclusivity + integral consistency across
+            the full cross product of subsystems and dispatch policies."""
+            _run_and_check(cool, price, renew, seed, policy_id, lam, pv_kw,
+                           export, batt)

@@ -79,6 +79,27 @@ def test_golden_pricing(golden, workload, traces):
     golden("pricing", res)
 
 
+def test_golden_renewables(golden, workload, traces):
+    """Pin the renewables subsystem: on-site PV netting against facility
+    load, surplus-charging battery, export-tariff revenue in the bill and
+    net-import carbon accounting."""
+    from repro.core import RenewableConfig
+    from repro.renewabletraces.synthetic import make_pv_traces
+    tasks, hosts = workload
+    pv = make_pv_traces(S, 0.25, 2, seed=5)
+    cfg = SimConfig(n_steps=S,
+                    renewables=RenewableConfig(enabled=True,
+                                               pv_capacity_kw=30.0),
+                    pricing=PricingConfig(enabled=True,
+                                          export_price_fraction=0.4),
+                    battery=BatteryConfig(enabled=True, capacity_kwh=4.0))
+    res = summarize(simulate(tasks, hosts, traces[0], cfg,
+                             dyn={"pv_cf_trace": pv[0]})[0], cfg)
+    assert float(res.pv_energy_kwh) > 0.0
+    assert float(res.grid_export_kwh) > 0.0
+    golden("renewables", res)
+
+
 def test_golden_fleet(golden, workload, traces):
     tasks, hosts = workload
     fleet = FleetSpec(ci_traces=traces, n_active_hosts=[2, 4, 3],

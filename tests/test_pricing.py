@@ -88,6 +88,29 @@ class TestPriceTraces:
         assert (ratio > 1.05).all()
 
 
+class TestCarbonTax:
+    def test_zero_tax_bitwise_unchanged(self):
+        """carbon_tax_per_kg=0 (the default) leaves the tariff bitwise
+        identical: the tax fold is statically skipped."""
+        a = make_price_traces(192, 0.25, 4, seed=6)
+        b = make_price_traces(192, 0.25, 4, seed=6, carbon_tax_per_kg=0.0)
+        np.testing.assert_array_equal(a, b)
+
+    def test_tax_folds_carbon_into_price(self):
+        """tax > 0 adds exactly tax * ci / 1000 $/kWh from the carbon trace
+        of the SAME (n_regions, seed) — so a price-arbitrage battery under
+        a taxed tariff becomes partially carbon-aware for free."""
+        from repro.carbontraces.synthetic import make_region_traces
+        tax = 0.08   # $/kgCO2
+        base = make_price_traces(192, 0.25, 4, seed=6)
+        taxed = make_price_traces(192, 0.25, 4, seed=6,
+                                  carbon_tax_per_kg=tax)
+        ci = make_region_traces(192, 0.25, 4, seed=6)
+        np.testing.assert_allclose(taxed, base + tax * ci / 1000.0,
+                                   rtol=1e-5, atol=1e-7)
+        assert (taxed > base).all()   # ci > 0 everywhere, so the tax bites
+
+
 class TestDisabledBitForBit:
     def test_disabled_pipeline_identical_to_seed(self, workload, ci_traces):
         """pricing.enabled=False reproduces the pre-pricing engine exactly:

@@ -1,0 +1,422 @@
+"""Renewables subsystem (renewabletraces/ + core/renewables.py + ledger).
+
+The differential layer, mirroring tests/test_thermal.py and
+tests/test_pricing.py: renewables.enabled=False reproduces the supply-free
+pipeline bit-for-bit, netting/export/curtailment behave physically, the
+battery charges preferentially from surplus, the export tariff flows into
+the bill, carbon meters the net import — and the acceptance grid
+(renewable_axis x pv_capacity_kw x batt_capacity_kwh x price_axis) equals
+the per-scenario Python loop in plain/chunked/sharded/reduced modes.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (BatteryConfig, FleetSpec, PricingConfig,
+                        RenewableConfig, SimConfig, default_pipeline,
+                        dyn_axis, make_host_table, make_task_table,
+                        price_axis, region_axis, renewable_axis, simulate,
+                        simulate_fleet, summarize, sweep_grid)
+from repro.pricetraces.synthetic import make_price_traces
+from repro.renewabletraces.synthetic import (make_pv_traces, pv_stats,
+                                             sample_solar_params)
+
+S = 192  # 2 days at dt=0.25
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(11)
+    n = 16
+    tasks = make_task_table(np.sort(rng.uniform(0.0, 12.0, n)),
+                            rng.uniform(0.5, 4.0, n),
+                            rng.integers(1, 3, n).astype(float))
+    hosts = make_host_table(4, 4)
+    return tasks, hosts
+
+
+@pytest.fixture(scope="module")
+def ci_traces():
+    t = np.arange(S) * 0.25
+    return np.stack([300.0 + 200.0 * np.sin(2 * np.pi * t / 24.0 + p)
+                     for p in (0.0, 1.7)]).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def pv_traces():
+    return make_pv_traces(S, 0.25, 2, seed=3)
+
+
+class TestPVTraces:
+    def test_shapes_determinism_and_range(self):
+        a = make_pv_traces(192, 0.25, 6, seed=4)
+        b = make_pv_traces(192, 0.25, 6, seed=4)
+        assert a.shape == (6, 192) and a.dtype == np.float32
+        np.testing.assert_array_equal(a, b)
+        assert not np.allclose(a, make_pv_traces(192, 0.25, 6, seed=5))
+        assert (a >= 0.0).all() and (a <= 1.0).all()
+
+    def test_diurnal_envelope_dark_at_night(self):
+        """The clear-sky envelope is astronomical: every region's trace is
+        exactly zero for a contiguous nightly block (at least ~4 h/day even
+        at the longest daylength) and positive around solar noon."""
+        n = 8
+        tr = make_pv_traces(96 * 7, 0.25, n, seed=2)
+        days = tr.reshape(n, 7, 96)
+        dark_frac = (days == 0.0).mean(axis=2)          # [R, 7]
+        assert (dark_frac >= 4.0 / 24.0 - 1e-6).all()
+        assert (days.max(axis=2) > 0.0).all()
+        mean_cf, daylight = pv_stats(tr)
+        assert (mean_cf > 0.0).all() and (daylight < 1.0).all()
+
+    def test_sunny_sites_correlate_with_hot_climates(self):
+        """Insolation rides the climate's heat propensity of the same seed
+        (deserts): mean capacity factor correlates with mean wet-bulb."""
+        from repro.weathertraces.synthetic import sample_climate_params
+        n = 158
+        climate = sample_climate_params(n, seed=0)
+        p = sample_solar_params(n, seed=0)
+        r = np.corrcoef(climate.mean_c, p.peak_cf)[0, 1]
+        assert r > 0.3, f"climate-solar correlation too weak: {r:.2f}"
+        assert p.peak_cf.min() >= 0.55 and p.peak_cf.max() <= 0.9
+
+
+class TestDisabledBitForBit:
+    def test_disabled_pipeline_identical_to_seed(self, workload, ci_traces):
+        """renewables.enabled=False reproduces the supply-free engine
+        exactly: no renewables stage in the pipeline, zero ledger supply
+        fields, and every legacy metric bitwise-stable against a config
+        that merely carries a (disabled) RenewableConfig with non-default
+        knobs."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=S,
+                        battery=BatteryConfig(enabled=True, capacity_kwh=5.0))
+        n_stages = len(default_pipeline(cfg))
+        cfg_r = cfg.replace(renewables=RenewableConfig(enabled=False,
+                                                       pv_capacity_kw=999.0,
+                                                       export_allowed=False))
+        assert len(default_pipeline(cfg_r)) == n_stages
+        a = summarize(simulate(tasks, hosts, ci_traces[0], cfg)[0], cfg)
+        b = summarize(simulate(tasks, hosts, ci_traces[0], cfg_r)[0], cfg_r)
+        for field in a._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                          np.asarray(getattr(b, field)), field)
+        assert float(a.pv_energy_kwh) == 0.0
+        assert float(a.grid_export_kwh) == 0.0
+        assert float(a.curtailed_kwh) == 0.0
+        assert float(a.export_revenue) == 0.0
+
+    def test_pv_trace_without_renewables_rejected(self, workload, ci_traces,
+                                                  pv_traces):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="renewables.enabled"):
+            simulate(tasks, hosts, ci_traces[0], SimConfig(n_steps=S),
+                     dyn={"pv_cf_trace": pv_traces[0]})
+
+    def test_renewable_axis_without_renewables_rejected(self, workload,
+                                                        ci_traces, pv_traces):
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="renewables.enabled"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=S),
+                       [renewable_axis(pv_traces)], ci_trace=ci_traces[0])
+
+
+def _renew_cfg(pv_kw, export=True, batt=None, pricing=False, **kw):
+    return SimConfig(
+        n_steps=S,
+        renewables=RenewableConfig(enabled=True, pv_capacity_kw=pv_kw,
+                                   export_allowed=export),
+        battery=batt or BatteryConfig(),
+        pricing=PricingConfig(enabled=True) if pricing else PricingConfig(),
+        **kw)
+
+
+class TestNetting:
+    def test_pv_displaces_import_and_carbon(self, workload, ci_traces,
+                                            pv_traces):
+        tasks, hosts = workload
+        base_cfg = SimConfig(n_steps=S)
+        base = summarize(simulate(tasks, hosts, ci_traces[0], base_cfg)[0],
+                         base_cfg)
+        cfg = _renew_cfg(2.0)
+        res = summarize(simulate(tasks, hosts, ci_traces[0], cfg,
+                                 dyn={"pv_cf_trace": pv_traces[0]})[0], cfg)
+        assert float(res.pv_energy_kwh) > 0.0
+        assert float(res.grid_energy_kwh) < float(base.grid_energy_kwh)
+        assert float(res.op_carbon_kg) < float(base.op_carbon_kg)
+        # demand-side metrics are untouched: PV is supply, not load
+        np.testing.assert_array_equal(np.asarray(res.it_energy_kwh),
+                                      np.asarray(base.it_energy_kwh))
+        np.testing.assert_array_equal(np.asarray(res.done_frac),
+                                      np.asarray(base.done_frac))
+
+    def test_surplus_exports_or_curtails(self, workload, ci_traces,
+                                         pv_traces):
+        """An oversized plant overshoots the load: with export allowed the
+        surplus is sold (no curtailment), with export forbidden it is
+        curtailed (no export) — and the two runs agree on everything else."""
+        tasks, hosts = workload
+        big = 200.0
+        exp_cfg = _renew_cfg(big, export=True)
+        exp = summarize(simulate(tasks, hosts, ci_traces[0], exp_cfg,
+                                 dyn={"pv_cf_trace": pv_traces[0]})[0],
+                        exp_cfg)
+        cur_cfg = _renew_cfg(big, export=False)
+        cur = summarize(simulate(tasks, hosts, ci_traces[0], cur_cfg,
+                                 dyn={"pv_cf_trace": pv_traces[0]})[0],
+                        cur_cfg)
+        assert float(exp.grid_export_kwh) > 0.0
+        assert float(exp.curtailed_kwh) == 0.0
+        assert float(cur.curtailed_kwh) > 0.0
+        assert float(cur.grid_export_kwh) == 0.0
+        np.testing.assert_allclose(float(exp.grid_export_kwh),
+                                   float(cur.curtailed_kwh), rtol=1e-6)
+        for field in ("grid_energy_kwh", "op_carbon_kg", "pv_energy_kwh",
+                      "peak_power_kw"):
+            np.testing.assert_array_equal(np.asarray(getattr(exp, field)),
+                                          np.asarray(getattr(cur, field)),
+                                          field)
+
+    def test_import_and_export_never_simultaneous(self, workload, ci_traces,
+                                                  pv_traces):
+        tasks, hosts = workload
+        cfg = _renew_cfg(50.0, batt=BatteryConfig(enabled=True,
+                                                  capacity_kwh=5.0),
+                         collect_series=True)
+        _, series = simulate(tasks, hosts, ci_traces[0], cfg,
+                             dyn={"pv_cf_trace": pv_traces[0]})
+        flow = series["flow"]
+        imp = np.asarray(flow.grid_import_kw)
+        exp = np.asarray(flow.grid_export_kw)
+        assert (imp >= -1e-6).all() and (exp >= -1e-6).all()
+        assert (np.minimum(imp, exp) <= 1e-6).all()
+
+
+class TestSurplusDispatch:
+    def test_battery_absorbs_surplus_before_export(self, workload, ci_traces,
+                                                   pv_traces):
+        """With a flat carbon trace the carbon policy never charges from the
+        grid (ci == its own rolling mean), so any stored energy can only
+        have come from PV surplus — and that storage shrinks the export."""
+        tasks, hosts = workload
+        ci = np.full(S, 300.0, np.float32)
+        nobatt_cfg = _renew_cfg(60.0)
+        nobatt = summarize(simulate(tasks, hosts, ci, nobatt_cfg,
+                                    dyn={"pv_cf_trace": pv_traces[0]})[0],
+                           nobatt_cfg)
+        batt_cfg = _renew_cfg(
+            60.0, batt=BatteryConfig(enabled=True, capacity_kwh=8.0),
+            collect_series=True)
+        final, series = simulate(tasks, hosts, ci, batt_cfg,
+                                 dyn={"pv_cf_trace": pv_traces[0]})
+        batt = summarize(final, batt_cfg)
+        charged = np.asarray(series["flow"].batt_charge_kw)
+        assert charged.sum() > 0.0                 # surplus-only charging
+        assert float(batt.grid_export_kwh) < float(nobatt.grid_export_kwh)
+        # a surplus-only charge never draws from the grid: whenever the
+        # battery charges there is surplus at least as large (flat ci =>
+        # the policy itself never asks)
+        surplus = np.maximum(
+            np.asarray(series["flow"].pv_kw)
+            - (np.asarray(series["flow"].it_kw)
+               + np.asarray(series["flow"].cooling_kw)), 0.0)
+        assert (charged <= surplus + 1e-4).all()
+
+    def test_no_discharge_into_surplus(self, workload, ci_traces, pv_traces):
+        tasks, hosts = workload
+        cfg = _renew_cfg(60.0,
+                         batt=BatteryConfig(enabled=True, capacity_kwh=8.0),
+                         collect_series=True)
+        _, series = simulate(tasks, hosts, ci_traces[0], cfg,
+                             dyn={"pv_cf_trace": pv_traces[0]})
+        flow = series["flow"]
+        surplus_now = (np.asarray(flow.pv_kw)
+                       > np.asarray(flow.it_kw) + np.asarray(flow.cooling_kw)
+                       + 1e-6)
+        assert (np.asarray(flow.batt_discharge_kw)[surplus_now] == 0.0).all()
+
+
+class TestExportTariff:
+    def test_export_revenue_in_bill(self, workload, ci_traces, pv_traces):
+        tasks, hosts = workload
+        cfg = _renew_cfg(100.0, pricing=True)
+        res = summarize(simulate(tasks, hosts, ci_traces[0], cfg,
+                                 dyn={"pv_cf_trace": pv_traces[0]})[0], cfg)
+        assert float(res.grid_export_kwh) > 0.0
+        assert float(res.export_revenue) > 0.0
+        np.testing.assert_allclose(
+            float(res.total_cost),
+            float(res.energy_cost) + float(res.demand_cost)
+            - float(res.export_revenue), rtol=1e-6)
+
+    def test_export_revenue_matches_hand_computed_series(self, workload,
+                                                         ci_traces,
+                                                         pv_traces):
+        tasks, hosts = workload
+        frac = 0.37
+        cfg = _renew_cfg(100.0, collect_series=True).replace(
+            pricing=PricingConfig(enabled=True, export_price_fraction=frac))
+        prices = make_price_traces(S, 0.25, 1, seed=6)
+        final, series = simulate(tasks, hosts, ci_traces[0], cfg,
+                                 dyn={"pv_cf_trace": pv_traces[0],
+                                      "price_trace": prices[0]})
+        res = summarize(final, cfg)
+        export_kw = np.asarray(series["flow"].grid_export_kw)
+        price = np.asarray(series["price_per_kwh"])
+        want = float((export_kw * price * 0.25).sum() * frac)
+        np.testing.assert_allclose(float(res.export_revenue), want, rtol=1e-5)
+        # the import charges meter the import, not an import-export net
+        imp = np.asarray(series["flow"].grid_import_kw)
+        np.testing.assert_allclose(float(res.energy_cost),
+                                   float((imp * price * 0.25).sum()),
+                                   rtol=1e-5)
+
+    def test_extras_inference_survives_negative_bill(self, workload,
+                                                     ci_traces, pv_traces):
+        """Regression: a simulated bill can be zero or NEGATIVE once export
+        revenue exceeds the import charges.  The cfg-less inference in
+        sustainability_extras must still recognize it as simulated instead
+        of silently substituting the positive flat-tariff estimate (the
+        cost analogue of the PR-4 water-inference misfire)."""
+        from repro.core.metrics import sustainability_extras
+        tasks, hosts = workload
+        cfg = _renew_cfg(400.0).replace(
+            pricing=PricingConfig(enabled=True, demand_charge_per_kw=0.0,
+                                  export_price_fraction=1.0))
+        res = summarize(simulate(tasks, hosts, ci_traces[0], cfg,
+                                 dyn={"pv_cf_trace": pv_traces[0]})[0], cfg)
+        assert float(res.total_cost) < 0.0
+        inferred = sustainability_extras(res)
+        np.testing.assert_allclose(float(inferred.energy_cost),
+                                   float(res.total_cost), rtol=1e-6)
+        threaded = sustainability_extras(res, cfg=cfg)
+        np.testing.assert_allclose(float(threaded.energy_cost),
+                                   float(res.total_cost), rtol=1e-6)
+
+    def test_curtailment_earns_nothing(self, workload, ci_traces, pv_traces):
+        tasks, hosts = workload
+        cfg = _renew_cfg(100.0, export=False, pricing=True)
+        res = summarize(simulate(tasks, hosts, ci_traces[0], cfg,
+                                 dyn={"pv_cf_trace": pv_traces[0]})[0], cfg)
+        assert float(res.curtailed_kwh) > 0.0
+        assert float(res.export_revenue) == 0.0
+
+
+class TestGridEquivalence:
+    def _grid(self, workload, ci_traces, pv_traces, prices, **run_kw):
+        tasks, hosts = workload
+        pv_caps = np.array([0.0, 40.0], np.float32)
+        caps = np.array([2.0, 6.0], np.float32)
+        cfg = SimConfig(
+            n_steps=S,
+            renewables=RenewableConfig(enabled=True),
+            pricing=PricingConfig(enabled=True, billing_window_h=24.0),
+            battery=BatteryConfig(enabled=True, capacity_kwh=5.0))
+        axes = [renewable_axis(pv_traces), dyn_axis(pv_capacity_kw=pv_caps),
+                dyn_axis(batt_capacity_kwh=caps), price_axis(prices)]
+        res = sweep_grid(tasks, hosts, cfg, axes, ci_trace=ci_traces[0],
+                         **run_kw)
+        return cfg, pv_caps, caps, res
+
+    def test_acceptance_grid_matches_loop(self, workload, ci_traces,
+                                          pv_traces):
+        """The acceptance grid: renewable_axis x pv_capacity_kw x
+        batt_capacity_kwh x price_axis compiles to ONE program whose cells
+        match the per-scenario Python loop of simulate() calls."""
+        tasks, hosts = workload
+        prices = make_price_traces(S, 0.25, 2, seed=3)
+        cfg, pv_caps, caps, res = self._grid(workload, ci_traces, pv_traces,
+                                             prices)
+        assert res.total_cost.shape == (2, 2, 2, 2)
+        for v in range(2):
+            for k, pvc in enumerate(pv_caps):
+                for c, cap in enumerate(caps):
+                    for p in range(2):
+                        final, _ = simulate(
+                            tasks, hosts, ci_traces[0], cfg,
+                            dyn={"pv_cf_trace": pv_traces[v],
+                                 "pv_capacity_kw": pvc,
+                                 "batt_capacity_kwh": cap,
+                                 "price_trace": prices[p]})
+                        ref = summarize(final, cfg)
+                        for field in res._fields:
+                            np.testing.assert_allclose(
+                                np.asarray(getattr(res, field))[v, k, c, p],
+                                np.asarray(getattr(ref, field)), rtol=1e-5,
+                                atol=1e-6, err_msg=f"{field} at {(v, k, c, p)}")
+
+    def test_chunked_sharded_reduced_match_plain(self, workload, ci_traces,
+                                                 pv_traces):
+        prices = make_price_traces(S, 0.25, 2, seed=3)
+        _, _, _, full = self._grid(workload, ci_traces, pv_traces, prices)
+        _, _, _, chunked = self._grid(workload, ci_traces, pv_traces, prices,
+                                      chunk_size=1)
+        mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+        _, _, _, sharded = self._grid(workload, ci_traces, pv_traces, prices,
+                                      mesh=mesh)
+        _, _, _, red = self._grid(workload, ci_traces, pv_traces, prices,
+                                  reduce=("min", 1))
+        for field in full._fields:
+            want = np.asarray(getattr(full, field))
+            np.testing.assert_allclose(np.asarray(getattr(chunked, field)),
+                                       want, rtol=1e-6, err_msg=field)
+            np.testing.assert_allclose(np.asarray(getattr(sharded, field)),
+                                       want, rtol=1e-6, err_msg=field)
+            np.testing.assert_allclose(np.asarray(getattr(red, field)),
+                                       want.min(axis=1), rtol=1e-6,
+                                       err_msg=field)
+
+
+class TestFleetPV:
+    def test_per_region_pv_and_totals(self, workload, ci_traces, pv_traces):
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=ci_traces, pv_traces=pv_traces,
+                          pv_capacity_kw=[20.0, 60.0])
+        cfg = SimConfig(n_steps=S,
+                        renewables=RenewableConfig(enabled=True),
+                        battery=BatteryConfig(enabled=True, capacity_kwh=4.0))
+        res = simulate_fleet(tasks, hosts, cfg, fleet)
+        per = np.asarray(res.per_region.pv_energy_kwh)
+        assert per.shape == (2,) and (per > 0).all()
+        np.testing.assert_allclose(float(res.total.pv_energy_kwh), per.sum(),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(
+            float(res.total.grid_export_kwh),
+            np.asarray(res.per_region.grid_export_kwh).sum(), rtol=1e-6)
+
+    def test_region_axis_carries_pv_into_grid(self, workload, ci_traces,
+                                              pv_traces):
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=ci_traces, pv_traces=pv_traces,
+                          pv_capacity_kw=30.0)
+        caps = np.array([2.0, 5.0], np.float32)
+        cfg = SimConfig(n_steps=S,
+                        renewables=RenewableConfig(enabled=True),
+                        battery=BatteryConfig(enabled=True))
+        res = sweep_grid(tasks, hosts, cfg,
+                         [dyn_axis(batt_capacity_kwh=caps),
+                          region_axis(fleet)])
+        assert res.total.pv_energy_kwh.shape == (2,)
+        for c, cap in enumerate(caps):
+            ref = simulate_fleet(tasks, hosts, cfg, fleet,
+                                 dyn={"batt_capacity_kwh": float(cap)})
+            np.testing.assert_allclose(
+                np.asarray(res.total.total_carbon_kg)[c],
+                float(ref.total.total_carbon_kg), rtol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(res.per_region.pv_energy_kwh)[c],
+                np.asarray(ref.per_region.pv_energy_kwh), rtol=1e-5)
+
+    def test_fleet_pv_without_renewables_rejected(self, workload, ci_traces,
+                                                  pv_traces):
+        tasks, hosts = workload
+        fleet = FleetSpec(ci_traces=ci_traces, pv_traces=pv_traces)
+        with pytest.raises(ValueError, match="pv_traces"):
+            simulate_fleet(tasks, hosts, SimConfig(n_steps=S), fleet)
+        with pytest.raises(ValueError, match="pv_traces"):
+            sweep_grid(tasks, hosts, SimConfig(n_steps=S),
+                       [dyn_axis(batt_capacity_kwh=np.ones(2, np.float32)),
+                        region_axis(fleet)])

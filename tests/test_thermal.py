@@ -158,6 +158,72 @@ class TestEngineIntegration:
                                    1.8 * float(res0.dc_energy_kwh), rtol=1e-6)
 
 
+class TestHeatReuse:
+    def test_zero_fraction_bitwise_identical(self, workload):
+        """heat_reuse_fraction=0 (the default) reproduces the no-reuse
+        pipeline bit-for-bit: the reuse arithmetic is statically compiled
+        out."""
+        tasks, hosts = workload
+        S = 96
+        ci = np.full(S, 300.0, np.float32)
+        wb = np.full(S, 30.0, np.float32)
+        cfg = SimConfig(n_steps=S, cooling=CoolingConfig(enabled=True))
+        cfg_z = SimConfig(n_steps=S, cooling=CoolingConfig(
+            enabled=True, heat_reuse_fraction=0.0))
+        a = summarize(simulate(tasks, hosts, ci, cfg,
+                               weather_trace=wb)[0], cfg)
+        b = summarize(simulate(tasks, hosts, ci, cfg_z,
+                               weather_trace=wb)[0], cfg_z)
+        for field in a._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                          np.asarray(getattr(b, field)), field)
+        assert float(a.heat_reuse_kwh) == 0.0
+
+    def test_reuse_reclaims_heat_and_saves_water(self, workload):
+        """Reclaimed chiller-path heat stops evaporating in the tower: water
+        scales by (1 - fraction), reclaimed energy accumulates, and the
+        electrical side (cooling energy, grid, carbon) is untouched —
+        reuse taps rejected heat, it does not change the chiller's duty."""
+        from repro.core.metrics import sustainability_extras
+        tasks, hosts = workload
+        S = 96
+        ci = np.full(S, 300.0, np.float32)
+        wb = np.full(S, 30.0, np.float32)   # hot: full chiller duty
+        frac = 0.6
+        base_cfg = SimConfig(n_steps=S, cooling=CoolingConfig(enabled=True))
+        base = summarize(simulate(tasks, hosts, ci, base_cfg,
+                                  weather_trace=wb)[0], base_cfg)
+        cfg = SimConfig(n_steps=S, cooling=CoolingConfig(
+            enabled=True, heat_reuse_fraction=frac))
+        res = summarize(simulate(tasks, hosts, ci, cfg,
+                                 weather_trace=wb)[0], cfg)
+        assert float(res.heat_reuse_kwh) > 0.0
+        np.testing.assert_allclose(float(res.water_l),
+                                   (1.0 - frac) * float(base.water_l),
+                                   rtol=1e-5)
+        for field in ("cooling_energy_kwh", "grid_energy_kwh",
+                      "op_carbon_kg", "pue"):
+            np.testing.assert_array_equal(np.asarray(getattr(res, field)),
+                                          np.asarray(getattr(base, field)),
+                                          field)
+        # fully on the chiller path: reclaimed == fraction * (heat rejected)
+        # where heat rejected = IT load + compressor work - fan overhead
+        c = cfg.cooling
+        heat = (float(res.it_energy_kwh)
+                + float(res.cooling_energy_kwh)
+                - c.fan_pump_overhead * float(res.it_energy_kwh))
+        np.testing.assert_allclose(float(res.heat_reuse_kwh), frac * heat,
+                                   rtol=1e-5)
+        # the district-heating credit composes via sustainability_extras
+        ex = sustainability_extras(res, cfg=cfg,
+                                   displaced_heat_kg_per_kwh=0.25)
+        np.testing.assert_allclose(float(ex.heat_credit_kg),
+                                   0.25 * float(res.heat_reuse_kwh),
+                                   rtol=1e-6)
+        ex0 = sustainability_extras(base, cfg=base_cfg)
+        assert float(ex0.heat_credit_kg) == 0.0
+
+
 class TestWeatherTraces:
     def test_shapes_and_determinism(self):
         a = make_weather_traces(192, 0.25, 6, seed=4)
