@@ -5,9 +5,9 @@ from .config import (BatteryConfig, CoolingConfig, EmbodiedConfig,
                      FailureConfig, PowerModelConfig, PricingConfig,
                      RenewableConfig, SchedulerConfig, ShiftingConfig,
                      SimConfig, techniques)
-from .engine import (EnergyFlow, StepInputs, build_step_fn,
-                     build_step_inputs, default_pipeline, init_energy_flow,
-                     simulate)
+from .engine import (BACKENDS, EnergyFlow, StepInputs, build_step_fn,
+                     build_step_inputs, default_pipeline,
+                     facility_totals_from_flows, init_energy_flow, simulate)
 from .fleet import FleetResult, FleetSpec, fleet_place, simulate_fleet
 from .grid import (Axis, ScenarioGrid, dyn_axis, fleet_axis, price_axis,
                    region_axis, renewable_axis, seed_axis, sweep_grid,
@@ -15,7 +15,10 @@ from .grid import (Axis, ScenarioGrid, dyn_axis, fleet_axis, price_axis,
 from .pricing import (export_revenue_step, flat_energy_cost,
                       precompute_price_signals, pricing_step,
                       settle_demand_charge)
+from .quant import (STORES, QuantizedTrace, dequantize_trace,
+                    maybe_dequantize, quantize_trace)
 from .renewables import net_load_split, pv_power_kw, split_surplus
+from .shifting import forward_window_quantile, forward_window_quantiles
 from .metrics import (SimResult, carbon_reduction_pct, fleet_totals,
                       summarize)
 from .spatial import (spatial_assign, spatial_assign_online,
@@ -34,8 +37,11 @@ __all__ = [
     "BatteryConfig", "CoolingConfig", "EmbodiedConfig", "FailureConfig",
     "PowerModelConfig", "PricingConfig", "RenewableConfig",
     "SchedulerConfig", "ShiftingConfig", "SimConfig",
-    "techniques", "EnergyFlow", "StepInputs", "build_step_fn",
-    "build_step_inputs", "default_pipeline", "init_energy_flow", "simulate",
+    "techniques", "BACKENDS", "EnergyFlow", "StepInputs", "build_step_fn",
+    "build_step_inputs", "default_pipeline", "facility_totals_from_flows",
+    "init_energy_flow", "simulate",
+    "STORES", "QuantizedTrace", "dequantize_trace", "maybe_dequantize",
+    "quantize_trace", "forward_window_quantile", "forward_window_quantiles",
     "FleetResult", "FleetSpec",
     "fleet_place", "simulate_fleet", "Axis", "ScenarioGrid", "dyn_axis",
     "fleet_axis", "price_axis", "region_axis", "renewable_axis",

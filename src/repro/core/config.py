@@ -191,6 +191,20 @@ class SimConfig:
     sla_grace_h: float = 24.0       # task meets SLA if done within 24h of expected
     collect_series: bool = False    # emit per-step (power, ci, running) series
     use_pallas: bool = False        # fused power/carbon Pallas kernel path
+    # step executor (core/engine.py "Kernel backends"):
+    #   'stage-pipeline' : the composable per-step stage scan (default)
+    #   'megakernel'     : demand scan + fused facility chain — numerically
+    #                      equivalent within float tolerance, much faster
+    #                      under vmap (the facility math vectorizes over the
+    #                      whole horizon; with use_pallas it runs as ONE
+    #                      time-blocked Pallas kernel, kernels/fused_step.py)
+    backend: str = "stage-pipeline"
+    # HBM storage of the exogenous traces inside the fused Pallas kernel
+    # (core/quant.py): 'f32' exact, 'bf16' half the bytes (rel err <= 2^-8),
+    # 'int8' a quarter (abs err <= trace_range/510).  Only read by the
+    # megakernel+use_pallas path; scenario-grid storage is chosen per axis
+    # (core/grid.py `store=`).
+    trace_store: str = "f32"
 
     def replace(self, **kw) -> "SimConfig":
         return dataclasses.replace(self, **kw)

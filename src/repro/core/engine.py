@@ -49,6 +49,48 @@ energy charge plus billing-window demand charge, minus export revenue
 always meters `grid_import_kw`, which with renewables on is the NET import:
 on-site generation displaces operational carbon one-for-one, exports earn
 money but no carbon credit (location-based accounting).
+
+Kernel backends
+---------------
+`cfg.backend` selects the step executor:
+
+  * ``stage-pipeline`` (default) — the scan above: one `lax.scan` whose
+    step runs every stage, dragging the full task/host tables through all
+    S steps.  Maximum composability (custom `stages` land here).
+  * ``megakernel`` — the same simulation split at its one true sequential
+    boundary.  The DEMAND phase (failures -> stopper -> scheduler ->
+    progress -> IT power) still scans, because placement is genuinely
+    recurrent; it emits only `it_kw[S]`.  The FACILITY phase (cooling ->
+    renewables -> battery -> pricing -> carbon) is elementwise in t except
+    for two scalar recurrences (battery SoC, billing-window peak), so it
+    runs as [S]-wide vector math with a scalar-carry scan
+    (kernels/ref.fused_facility_chain) — and, with `cfg.use_pallas`, as ONE
+    time-blocked Pallas kernel (kernels/fused_step.py) that keeps the
+    SoC/window-peak carries in VMEM across time blocks and emits only
+    per-block metric partial sums to HBM.  Two wins: the facility math
+    vectorizes over the horizon, and under `vmap` over trace/price/PV axes
+    the demand scan has no batched inputs (the shifting gate reads the CI
+    trace only when `cfg.shifting.enabled`), so XLA hoists it and computes
+    demand ONCE per batch instead of per scenario.
+
+    Equivalence contract: megakernel == stage-pipeline within float
+    tolerance (sums reassociate: rtol ~1e-5; the per-step flow SERIES
+    are the same arithmetic scheduled differently, so they agree to ULP-
+    level rounding and the EnergyFlow conservation law holds on the fused
+    path to the same tolerance as on the stage path).  Differentially
+    tested over all 2^3 cooling x pricing x renewables combos x dispatch
+    policies in tests/test_megakernel.py.
+
+    Quantized-trace accuracy: the Pallas path stores the four exogenous
+    traces (CI, wet-bulb, price, PV-cf) as bf16 or int8 with
+    dequant-on-read (core/quant.py).  bf16 keeps relative error <= 2^-8
+    (~0.4%); int8 affine quantization bounds absolute error by
+    trace_range/510.  Both are below trace calibration uncertainty; pass
+    trace_store='f32' to the kernel for exact inputs.
+
+  Pallas kernels themselves run in interpret mode iff the backend is CPU
+  (kernels/ops.resolved_interpret; `STEAM_PALLAS_INTERPRET` overrides),
+  resolved per call — never pinned at import.
 """
 from __future__ import annotations
 
@@ -68,8 +110,10 @@ from . import shifting as shifting_mod
 from . import thermal as thermal_mod
 from .config import SimConfig
 from .power import host_power_kw
-from .state import (DONE, PENDING, RUNNING, HostTable, MetricsAcc, SimState,
-                    TaskTable, init_sim_state)
+from .state import (DONE, PENDING, RUNNING, BatteryState, HostTable,
+                    MetricsAcc, SimState, TaskTable, init_sim_state)
+
+BACKENDS = ("stage-pipeline", "megakernel")
 
 Stage = Callable[[SimState, dict], tuple[SimState, dict]]
 
@@ -220,7 +264,8 @@ def stage_scheduler(cfg: SimConfig) -> Stage:
             ((state.tasks.status == PENDING) & (state.tasks.arrival <= state.t)
              & ~shift_ok).astype(jnp.float32))
         tasks = scheduler_mod.schedule_step(state.tasks, state.hosts, state.t,
-                                            shift_ok, cfg.scheduler)
+                                            shift_ok, cfg.scheduler,
+                                            slots=ctx.get("slots_per_step"))
         metrics = state.metrics._replace(
             n_shift_delays=state.metrics.n_shift_delays + n_delayed)
         return state._replace(tasks=tasks, metrics=metrics), ctx
@@ -545,6 +590,211 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
     return step
 
 
+# --------------------------------------------------------------------------
+# megakernel backend (docstring: "Kernel backends")
+# --------------------------------------------------------------------------
+
+def _build_demand_step(cfg: SimConfig, dyn: dict):
+    """Scan step for the megakernel DEMAND phase: the genuinely recurrent
+    stages (failures -> stopper -> scheduler -> progress) plus an IT-power
+    probe.  Emits per-step `it_kw` — the only demand->facility coupling —
+    and, under `collect_series`, the capacity/occupancy probes the
+    stage-pipeline series carry."""
+    stages: list[Stage] = []
+    if cfg.failures.enabled:
+        stages.append(stage_failures(cfg))
+        if cfg.failures.checkpointing:
+            stages.append(stage_checkpoint(cfg))
+    if cfg.shifting.enabled and cfg.shifting.stop_running:
+        stages.append(stage_task_stopper(cfg))
+    stages += [stage_scheduler(cfg), stage_progress(cfg)]
+
+    def step(state: SimState, xs):
+        if xs is None:  # shifting off: the gate never reads ci/threshold
+            ci = st = jnp.float32(0.0)
+        else:
+            ci, st = xs
+        ctx = {"ci": ci, "shift_threshold": st, **dyn}
+        for stage in stages:
+            state, ctx = stage(state, ctx)
+        cpu_u, gpu_u = scheduler_mod.host_utilization(state.tasks, state.hosts)
+        on = (state.hosts.active & state.hosts.up).astype(jnp.float32)
+        if cfg.use_pallas:
+            from repro.kernels import ops as pc_ops
+            p = pc_ops.host_power(cpu_u, gpu_u, state.hosts.n_gpus, on,
+                                  cfg.cpu_power, cfg.gpu_power)
+        else:
+            p = host_power_kw(cpu_u, gpu_u, state.hosts.n_gpus, on,
+                              cfg.cpu_power, cfg.gpu_power)
+        state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
+        ys = {"it_kw": jnp.sum(p)}
+        if cfg.collect_series:
+            free_c, free_g = scheduler_mod.free_capacity(state.tasks,
+                                                         state.hosts)
+            ys["max_overcommit"] = jnp.maximum(jnp.max(-free_c),
+                                               jnp.max(-free_g))
+            ys["n_running"] = jnp.sum((state.tasks.status == RUNNING)
+                                      .astype(jnp.int32))
+        return state, ys
+
+    return step
+
+
+def facility_totals_from_flows(flows: dict, inputs: StepInputs,
+                               cfg: SimConfig) -> dict:
+    """Reduce the [S] flow series of `ref.fused_facility_chain` to the
+    per-run totals the metrics accumulator needs.  The Pallas megakernel
+    (kernels/fused_step.py) produces this SAME dict from per-block partial
+    sums, which is what makes the two facility paths interchangeable."""
+    dt = jnp.float32(cfg.dt_h)
+    grid = flows["grid_import_kw"]
+    load = flows["it_kw"] + flows["cooling_kw"]
+    totals = {
+        "op_carbon": jnp.sum(grid * inputs.ci) * dt / 1000.0,
+        "grid_energy": jnp.sum(grid) * dt,
+        "dc_energy": jnp.sum(load) * dt,
+        "it_energy": jnp.sum(flows["it_kw"]) * dt,
+        "peak_power": jnp.max(grid),
+        "batt_discharged": jnp.sum(flows["batt_discharge_kw"]) * dt,
+        "cooling_energy": jnp.sum(flows["cooling_kw"]) * dt,
+        "water_l": jnp.sum(flows["water_l_per_h"]) * dt,
+        "heat_reuse": jnp.sum(flows["heat_reuse_kw"]) * dt,
+        "pv_energy": jnp.sum(flows["pv_kw"]) * dt,
+        "export_energy": jnp.sum(flows["grid_export_kw"]) * dt,
+        "curtailed_energy": jnp.sum(flows["curtailed_kw"]) * dt,
+        "soc_final": flows["soc"][-1],
+        "was_charging": flows["want_charge"][-1],
+    }
+    if cfg.pricing.enabled:
+        wsteps = pricing_mod.billing_window_steps(cfg.pricing, cfg.dt_h)
+        s = grid.shape[0]
+        n_win = -(-s // wsteps)
+        padded = jnp.concatenate(
+            [grid, jnp.zeros(n_win * wsteps - s, grid.dtype)])
+        # windows [0,w), [w,2w), ...: the stage pipeline closes a window at
+        # step i = w, 2w, ... and `summarize` settles the final OPEN one —
+        # so closed-window peaks bill here, the last peak stays running
+        peaks = jnp.max(padded.reshape(n_win, wsteps), axis=1)
+        totals["energy_cost"] = jnp.sum(grid * inputs.price) * dt
+        totals["demand_cost"] = (jnp.sum(peaks[:-1])
+                                 * jnp.float32(cfg.pricing.demand_charge_per_kw))
+        totals["window_peak_kw"] = peaks[-1]
+        if cfg.renewables.enabled:
+            totals["export_revenue"] = (
+                jnp.sum(flows["grid_export_kw"] * inputs.price) * dt
+                * jnp.float32(cfg.pricing.export_price_fraction))
+    return totals
+
+
+def _merge_facility_totals(state: SimState, totals: dict, cfg: SimConfig,
+                           dyn: dict) -> SimState:
+    """Fold facility-phase totals (+ the closed-form embodied integral) into
+    the demand-phase final state."""
+    m = state.metrics
+    dt = cfg.dt_h
+    # embodied carbon is load-independent and `hosts.active` never changes
+    # during a run (failures toggle `up`), so the per-step accumulation is a
+    # closed-form product — the one stage_carbon term with no flow input
+    n_active = jnp.sum(state.hosts.active.astype(jnp.float32))
+    cap = dyn.get("batt_capacity_kwh")
+    if cap is not None and cfg.battery.enabled:
+        from .config import HOURS_PER_YEAR
+        batt_rate = (cap * cfg.battery.embodied_kg_per_kwh
+                     / (cfg.battery.lifetime_years * HOURS_PER_YEAR))
+    else:
+        batt_rate = battery_mod.battery_embodied_rate_kg_per_h(cfg.battery)
+    host_rate = carbon_mod.host_embodied_rate_kg_per_h(cfg.embodied)
+    emb = (n_active * host_rate + batt_rate) * dt * cfg.n_steps
+    m = m._replace(
+        op_carbon=m.op_carbon + totals["op_carbon"],
+        emb_carbon=m.emb_carbon + jnp.float32(emb),
+        grid_energy=m.grid_energy + totals["grid_energy"],
+        dc_energy=m.dc_energy + totals["dc_energy"],
+        it_energy=m.it_energy + totals["it_energy"],
+        peak_power=jnp.maximum(m.peak_power, totals["peak_power"]),
+        batt_discharged=m.batt_discharged + totals["batt_discharged"])
+    if cfg.cooling.enabled:
+        m = m._replace(
+            cooling_energy=m.cooling_energy + totals["cooling_energy"],
+            water_l=m.water_l + totals["water_l"],
+            heat_reuse=m.heat_reuse + totals["heat_reuse"])
+    if cfg.renewables.enabled:
+        m = m._replace(
+            pv_energy=m.pv_energy + totals["pv_energy"],
+            export_energy=m.export_energy + totals["export_energy"],
+            curtailed_energy=m.curtailed_energy + totals["curtailed_energy"])
+    if cfg.pricing.enabled:
+        m = m._replace(
+            energy_cost=m.energy_cost + totals["energy_cost"],
+            demand_cost=m.demand_cost + totals["demand_cost"],
+            window_peak_kw=jnp.maximum(m.window_peak_kw,
+                                       totals["window_peak_kw"]))
+        if cfg.renewables.enabled:
+            m = m._replace(export_revenue=m.export_revenue
+                           + totals["export_revenue"])
+    battery = BatteryState(charge=totals["soc_final"],
+                           was_charging=totals["was_charging"])
+    return state._replace(metrics=m, battery=battery)
+
+
+def _simulate_megakernel(state0: SimState, inputs: StepInputs,
+                         cfg: SimConfig, dyn: dict):
+    from repro.kernels import ref as ref_mod  # lazy: kernels import core
+
+    step = _build_demand_step(cfg, dyn)
+    xs = ((inputs.ci, inputs.shift_threshold) if cfg.shifting.enabled
+          else None)
+    final, demand_ys = jax.lax.scan(step, state0, xs, length=cfg.n_steps)
+    it_series = demand_ys["it_kw"]
+
+    chain_kwargs = dict(
+        soc0=0.0, setpoint_c=dyn.get("cooling_setpoint"),
+        batt_capacity_kwh=dyn.get("batt_capacity_kwh"),
+        batt_rate_kw=dyn.get("batt_rate_kw"),
+        dispatch_lambda=dyn.get("dispatch_lambda"),
+        pv_capacity_kw=dyn.get("pv_capacity_kw"))
+    if cfg.use_pallas and not cfg.collect_series:
+        from repro.kernels import fused_step as fused_mod
+        from repro.kernels.ops import resolved_interpret
+        totals = fused_mod.fused_facility_totals(
+            it_series, inputs.ci, inputs.wet_bulb_c, inputs.price,
+            inputs.price_lo, inputs.price_hi, inputs.pv_cf,
+            inputs.batt_threshold, inputs.ci_rising, cfg,
+            trace_store=cfg.trace_store, interpret=resolved_interpret(),
+            **chain_kwargs)
+        final = _merge_facility_totals(final, totals, cfg, dyn)
+        return final, None
+    flows = ref_mod.fused_facility_chain(
+        it_series, inputs.ci, inputs.wet_bulb_c, inputs.price,
+        inputs.price_lo, inputs.price_hi, inputs.pv_cf,
+        inputs.batt_threshold, inputs.ci_rising, cfg.dt_h, cfg,
+        **chain_kwargs)
+    totals = facility_totals_from_flows(flows, inputs, cfg)
+    final = _merge_facility_totals(final, totals, cfg, dyn)
+    if not cfg.collect_series:
+        return final, None
+    flow = EnergyFlow(
+        it_kw=flows["it_kw"], cooling_kw=flows["cooling_kw"],
+        pv_kw=flows["pv_kw"], batt_charge_kw=flows["batt_charge_kw"],
+        batt_discharge_kw=flows["batt_discharge_kw"],
+        grid_import_kw=flows["grid_import_kw"],
+        grid_export_kw=flows["grid_export_kw"],
+        curtailed_kw=flows["curtailed_kw"])
+    ys = {"grid_power_kw": flow.grid_import_kw,
+          "dc_power_kw": flow.it_kw + flow.cooling_kw,
+          "ci": inputs.ci,
+          "n_running": demand_ys["n_running"],
+          "battery_charge": flows["soc"],
+          "max_overcommit": demand_ys["max_overcommit"],
+          "flow": flow}
+    if cfg.cooling.enabled:
+        ys["cooling_power_kw"] = flow.cooling_kw
+        ys["wet_bulb_c"] = inputs.wet_bulb_c
+    if cfg.pricing.enabled:
+        ys["price_per_kwh"] = inputs.price
+    return final, ys
+
+
 def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
              stages: Sequence[Stage] | None = None, dyn: dict | None = None,
              weather_trace=None):
@@ -564,9 +814,22 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     `weather_trace` argument), `price_trace` (f32[S] electricity prices,
     core/pricing.py), `dispatch_lambda` (blended battery-dispatch weight),
     `pv_cf_trace` (f32[S] solar capacity factors, renewabletraces/) and
-    `pv_capacity_kw` (PV nameplate sizing, core/renewables.py) and `seed`
+    `pv_capacity_kw` (PV nameplate sizing, core/renewables.py),
+    `slots_per_step` (traced scheduler placement-slot count, masked against
+    the static `cfg.scheduler.slots_per_step` bound) and `seed`
     (failure-model PRNG).
+
+    `cfg.backend` picks the executor (module docstring, "Kernel
+    backends"); custom `stages` require the stage-pipeline backend.
     """
+    if cfg.backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend '{cfg.backend}'; pick one of {BACKENDS}")
+    if stages is not None and cfg.backend != "stage-pipeline":
+        raise ValueError(
+            "custom stages compose only with backend='stage-pipeline'; the "
+            "megakernel fuses the default facility chain and cannot honour "
+            "a replacement pipeline")
     dyn = dict(dyn) if dyn else {}
     if weather_trace is not None:
         dyn["wet_bulb_trace"] = weather_trace
@@ -577,6 +840,8 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     dyn.pop("price_trace", None)
     dyn.pop("pv_cf_trace", None)
     state0 = init_sim_state(tasks, hosts, dyn.get("seed", cfg.seed))
+    if cfg.backend == "megakernel":
+        return _simulate_megakernel(state0, inputs, cfg, dyn)
     step = build_step_fn(cfg, stages, dyn)
     final, series = jax.lax.scan(step, state0, inputs)
     return final, series

@@ -39,6 +39,12 @@ Axis kinds:
                                               0 = price arbitrage)
       - `pv_capacity_kw`                     (PV nameplate sizing,
                                               core/renewables.py)
+      - `slots_per_step`                     (scheduler placement-slot count,
+                                              core/scheduler.py: masked
+                                              against the static
+                                              cfg.scheduler.slots_per_step
+                                              bound, so a slot sweep stays
+                                              one compiled program)
   * `seed_axis(seeds)` — PRNG seeds for the stochastic failure model.
   * `region_axis(fleet)` — a multi-datacenter FLEET (core/fleet.py): the
     FleetSpec's R regional datacenters (per-region carbon + weather traces,
@@ -89,7 +95,13 @@ When `chunk_size` is omitted, it is derived automatically from a
 device-memory budget (`memory_budget_bytes`, default from
 `$STEAM_SWEEP_MEMORY_BUDGET_MB` or 4 GiB): grids whose estimated working set
 fits the budget run unchunked — exactly the old behaviour — while larger
-grids chunk instead of OOMing.
+grids chunk instead of OOMing.  The estimate reads the ACTUAL dtypes of the
+supplied trace payloads, and every trace-carrying axis accepts
+`store='bf16'|'int8'` (core/quant.py) to hold its series quantized in HBM —
+half/quarter the bytes, dequantized on read inside each grid cell — which
+multiplies the auto-chunk budget accordingly.  Chunked runs donate each
+payload slice to the compiled program, so a chunk's input buffers are
+reused instead of living alongside its outputs.
 
 The cost-carbon Pareto front in ONE program (battery policy 'blended',
 `cfg.pricing.enabled`; see examples/cost_carbon_pareto.py)::
@@ -120,6 +132,7 @@ the enable flag itself switches the compiled pipeline.
 from __future__ import annotations
 
 import os
+import warnings
 from typing import NamedTuple, Sequence
 
 import jax
@@ -129,6 +142,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .config import SimConfig
 from .engine import StepInputs, simulate
 from .metrics import SimResult, summarize
+from .quant import STORES, maybe_dequantize, quantize_trace
 from .state import HostTable, TaskTable
 
 TRACE_KEY = "ci_trace"
@@ -146,23 +160,41 @@ _REDUCERS = {"min": jnp.min, "max": jnp.max,
 
 
 class Axis(NamedTuple):
-    """One grid dimension: `names[j]` is swept with `values[j]` (zipped)."""
+    """One grid dimension: `names[j]` is swept with `values[j]` (zipped).
+
+    A value is either a raw array (leading dim = axis length) or a
+    `QuantizedTrace` pytree (core/quant.py, trace-carrying axes declared
+    with `store=`) whose every leaf shares the leading dim."""
 
     kind: str                      # 'trace'|'weather'|'price'|'dyn'|'seed'|'fleet'|'region'
     names: tuple[str, ...]         # dyn ctx keys (TRACE_KEY / SEED_KEY special)
-    values: tuple[jax.Array, ...]  # equal leading dims = the axis length
+    values: tuple                  # arrays / QuantizedTraces, equal leading dims
     meta: object = None            # kind-specific payload (region: FleetSpec)
 
     @property
     def length(self) -> int:
-        return self.values[0].shape[0]
+        return jax.tree.leaves(self.values[0])[0].shape[0]
 
 
-def trace_axis(ci_traces) -> Axis:
-    """Carbon-region axis: ci_traces f32[R, S] -> one grid dim of length R."""
+def _stored(traces, store: str):
+    """Apply an axis' `store=` choice: raw f32 or a QuantizedTrace pytree."""
+    if store == "f32":
+        return traces
+    if store not in STORES:
+        raise ValueError(f"unknown trace store '{store}'; "
+                         f"pick one of {STORES}")
+    return quantize_trace(traces, store)
+
+
+def trace_axis(ci_traces, store: str = "f32") -> Axis:
+    """Carbon-region axis: ci_traces f32[R, S] -> one grid dim of length R.
+
+    `store='bf16'|'int8'` keeps the series quantized in HBM and dequantizes
+    inside each grid cell (core/quant.py) — same for every trace axis below.
+    """
     traces = jnp.asarray(ci_traces, jnp.float32)
     assert traces.ndim == 2, f"trace_axis wants f32[R, S], got {traces.shape}"
-    return Axis("trace", (TRACE_KEY,), (traces,))
+    return Axis("trace", (TRACE_KEY,), (_stored(traces, store),))
 
 
 def dyn_axis(**named_values) -> Axis:
@@ -180,15 +212,15 @@ def dyn_axis(**named_values) -> Axis:
     return Axis("dyn", names, values)
 
 
-def weather_axis(wb_traces) -> Axis:
+def weather_axis(wb_traces, store: str = "f32") -> Axis:
     """Climate axis: wet-bulb traces f32[W, S] -> one grid dim of length W.
     Drives the thermal subsystem; requires `cfg.cooling.enabled`."""
     traces = jnp.asarray(wb_traces, jnp.float32)
     assert traces.ndim == 2, f"weather_axis wants f32[W, S], got {traces.shape}"
-    return Axis("weather", (WEATHER_KEY,), (traces,))
+    return Axis("weather", (WEATHER_KEY,), (_stored(traces, store),))
 
 
-def price_axis(price_traces) -> Axis:
+def price_axis(price_traces, store: str = "f32") -> Axis:
     """Tariff axis: electricity-price traces f32[P, S] -> one grid dim of
     length P (pricetraces/synthetic.py).  Drives the pricing subsystem
     (core/pricing.py) — cost accumulation and the battery's price-aware
@@ -196,10 +228,10 @@ def price_axis(price_traces) -> Axis:
     dimension orthogonal to carbon region and climate."""
     traces = jnp.asarray(price_traces, jnp.float32)
     assert traces.ndim == 2, f"price_axis wants f32[P, S], got {traces.shape}"
-    return Axis("price", (PRICE_KEY,), (traces,))
+    return Axis("price", (PRICE_KEY,), (_stored(traces, store),))
 
 
-def renewable_axis(pv_cf_traces) -> Axis:
+def renewable_axis(pv_cf_traces, store: str = "f32") -> Axis:
     """Solar-resource axis: capacity-factor traces f32[V, S] in [0, 1]
     (renewabletraces/synthetic.py) -> one grid dim of length V.  Drives the
     on-site generation subsystem (core/renewables.py) — PV supply, surplus
@@ -209,7 +241,7 @@ def renewable_axis(pv_cf_traces) -> Axis:
     traces = jnp.asarray(pv_cf_traces, jnp.float32)
     assert traces.ndim == 2, (
         f"renewable_axis wants f32[V, S], got {traces.shape}")
-    return Axis("renewable", (PV_KEY,), (traces,))
+    return Axis("renewable", (PV_KEY,), (_stored(traces, store),))
 
 
 def seed_axis(seeds) -> Axis:
@@ -368,9 +400,10 @@ class ScenarioGrid:
                 dyn = dict(base_dyn)
                 for ax, vals in zip(axes, payloads):
                     if ax.kind == "trace":
-                        ci = vals[0]
+                        ci = maybe_dequantize(vals[0])
                     else:
-                        dyn.update(zip(ax.names, vals))
+                        dyn.update((n, maybe_dequantize(v))
+                                   for n, v in zip(ax.names, vals))
                 final, _ = simulate(tasks, hosts, ci, cfg, dyn=dyn)
                 return summarize(final, cfg)
         else:
@@ -502,13 +535,20 @@ class ScenarioGrid:
                 "chunk_size >= the leading length")
         if mesh is not None:
             return self._run_sharded(fn, payloads, mesh, chunk_size, red)
-        if jit:
-            fn = jax.jit(fn)
         if self.axes[0].length <= chunk_size:
-            return fn(*payloads)
-        return _concat_chunks(
-            [fn(tuple(v[s:s + chunk_size] for v in payloads[0]), *payloads[1:])
-             for s in range(0, self.axes[0].length, chunk_size)])
+            return (jax.jit(fn) if jit else fn)(*payloads)
+        # donate each chunk's payload slice: the slices are temporaries, so
+        # XLA may reuse their buffers for the chunk's outputs instead of
+        # holding both live — the chunked path exists to bound memory.
+        # Donation is best-effort (a bf16/int8 chunk has no f32 output to
+        # fold into), so the unusable-buffer warning is suppressed.
+        cfn = jax.jit(fn, donate_argnums=(0,)) if jit else fn
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return _concat_chunks(
+                [cfn(_slice_lead(payloads[0], s, chunk_size), *payloads[1:])
+                 for s in range(0, self.axes[0].length, chunk_size)])
 
     def _auto_chunk_size(self, tasks, hosts, cfg: SimConfig,
                          budget_bytes: float | None) -> int:
@@ -528,7 +568,22 @@ class ScenarioGrid:
         carry_bytes = sum(jnp.asarray(x).size * jnp.asarray(x).dtype.itemsize
                           for x in (*jax.tree.leaves(tasks),
                                     *jax.tree.leaves(hosts)))
-        inputs_bytes = len(StepInputs._fields) * cfg.n_steps * 4  # f32[S] each
+        # per-point bytes of the SUPPLIED series come from the payloads'
+        # actual dtypes (a store='bf16'/'int8' axis is cheaper than f32, and
+        # seed/dyn scalars cost ~nothing — the old estimate priced every
+        # StepInputs field at f32[S] regardless of what was supplied);
+        # unsupplied StepInputs fields are derived f32[S] series
+        supplied = 0
+        supplied_bytes = 0
+        for ax in self.axes:
+            if ax.kind not in ("trace", "weather", "price", "renewable"):
+                continue               # dyn/seed/fleet points are ~scalars
+            supplied += 1
+            supplied_bytes += sum(
+                leaf.size // ax.length * leaf.dtype.itemsize
+                for v in ax.values for leaf in jax.tree.leaves(v))
+        derived = len(StepInputs._fields) - supplied
+        inputs_bytes = supplied_bytes + derived * cfg.n_steps * 4
         out_bytes = len(SimResult._fields) * 4
         per_cell = 2 * carry_bytes + inputs_bytes + out_bytes
         if self.fleet is not None:
@@ -571,7 +626,7 @@ class ScenarioGrid:
         if chunk_size is None or self.axes[0].length <= chunk_size:
             return run_chunk(payloads[0])
         return _concat_chunks(
-            [run_chunk(tuple(v[s:s + chunk_size] for v in payloads[0]))
+            [run_chunk(_slice_lead(payloads[0], s, chunk_size))
              for s in range(0, self.axes[0].length, chunk_size)])
 
     def lower(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
@@ -616,6 +671,13 @@ def _round_chunk_to_mesh(mesh, chunk_size: int) -> int:
     for a in (_mesh_spec(mesh)[0] or ()):
         ndev *= sizes[a]
     return max(ndev, -(-chunk_size // ndev) * ndev)
+
+
+def _slice_lead(axis_values: tuple, start: int, size: int) -> tuple:
+    """Slice one chunk out of the leading axis' values (array or
+    QuantizedTrace pytree alike)."""
+    return tuple(jax.tree.map(lambda x: x[start:start + size], v)
+                 for v in axis_values)
 
 
 def _concat_chunks(parts: list[SimResult]) -> SimResult:

@@ -35,7 +35,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .config import BatteryConfig, PricingConfig
-from .shifting import forward_window_quantile
+from .shifting import forward_window_quantiles
 
 
 def billing_window_steps(cfg: PricingConfig, dt_h: float) -> int:
@@ -53,11 +53,11 @@ def precompute_price_signals(price_trace, dt_h: float, cfg: BatteryConfig):
     collapse onto the price itself), the arbitrage analogue of a flat
     carbon trace.
     """
-    lo = forward_window_quantile(price_trace, dt_h, cfg.price_window_h,
-                                 jnp.float32(cfg.price_charge_quantile))
-    hi = forward_window_quantile(price_trace, dt_h, cfg.price_window_h,
-                                 jnp.float32(cfg.price_discharge_quantile))
-    return lo, hi
+    bands = forward_window_quantiles(
+        price_trace, dt_h, cfg.price_window_h,
+        jnp.stack([jnp.float32(cfg.price_charge_quantile),
+                   jnp.float32(cfg.price_discharge_quantile)]))
+    return bands[0], bands[1]
 
 
 def pricing_step(energy_cost, demand_cost, window_peak_kw, grid_kw, price,

@@ -24,13 +24,34 @@ from .config import SchedulerConfig
 from .state import HostTable, TaskTable, PENDING, RUNNING
 
 
+# Below this host count, per-host sums run as a one-hot matmul instead of
+# segment_sum: XLA's CPU scatter path costs ~50us per call at N=1024, which
+# dominated the whole scan step (the sums run EVERY step, inside the hot
+# loop), while the [h, N] matmul is tens of FLOPs per task.  Above it the
+# one-hot mask's h*N footprint stops paying for itself.
+_MATMUL_MAX_HOSTS = 256
+
+
+def _per_host_sum(vals, seg, h: int):
+    """segment_sum(vals, seg, h), scatter-free for small host counts.
+
+    Exact for integer-valued inputs (core/GPU counts) in any order; for
+    float-weighted inputs the summation order differs from segment_sum by
+    ULP-level rounding only.
+    """
+    if h <= _MATMUL_MAX_HOSTS:
+        onehot = (seg[None, :] == jnp.arange(h, dtype=seg.dtype)[:, None])
+        return onehot.astype(vals.dtype) @ vals
+    return jax.ops.segment_sum(vals, seg, h)
+
+
 def free_capacity(tasks: TaskTable, hosts: HostTable):
     """Recompute per-host free CPU cores and GPUs from the task table."""
     h = hosts.cores.shape[0]
     running = tasks.status == RUNNING
     seg = jnp.clip(tasks.host, 0, h - 1)
-    used_c = jax.ops.segment_sum(jnp.where(running, tasks.cores, 0.0), seg, h)
-    used_g = jax.ops.segment_sum(jnp.where(running, tasks.gpus, 0.0), seg, h)
+    used_c = _per_host_sum(jnp.where(running, tasks.cores, 0.0), seg, h)
+    used_g = _per_host_sum(jnp.where(running, tasks.gpus, 0.0), seg, h)
     avail = (hosts.active & hosts.up).astype(jnp.float32)
     return hosts.cores * avail - used_c, hosts.n_gpus * avail - used_g
 
@@ -40,9 +61,9 @@ def host_utilization(tasks: TaskTable, hosts: HostTable):
     h = hosts.cores.shape[0]
     running = tasks.status == RUNNING
     seg = jnp.clip(tasks.host, 0, h - 1)
-    cpu = jax.ops.segment_sum(
+    cpu = _per_host_sum(
         jnp.where(running, tasks.cores * tasks.cpu_util, 0.0), seg, h)
-    gpu = jax.ops.segment_sum(
+    gpu = _per_host_sum(
         jnp.where(running, tasks.gpus * tasks.gpu_util, 0.0), seg, h)
     cpu_u = jnp.where(hosts.cores > 0, cpu / jnp.maximum(hosts.cores, 1e-6), 0.0)
     gpu_u = jnp.where(hosts.n_gpus > 0, gpu / jnp.maximum(hosts.n_gpus, 1e-6), 0.0)
@@ -55,16 +76,30 @@ def _eligible(tasks: TaskTable, now, shift_ok):
 
 
 def _first_k_indices(mask, k: int):
-    """Indices of the first k True rows of mask (padded with -1), via cumsum."""
-    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
-    slot = jnp.where(mask & (rank < k), rank, k)
-    idx = jnp.arange(mask.shape[0], dtype=jnp.int32)
-    return jnp.full((k,), -1, jnp.int32).at[slot].set(idx, mode="drop")
+    """Indices of the first k True rows of mask (padded with -1).
+
+    csum[i] counts True rows in [0..i], so the s-th True index is the first
+    i with csum[i] == s + 1 — k binary searches on the sorted cumsum instead
+    of the scatter this used to be (XLA CPU scatters serialize; inside the
+    per-step hot loop that was most of the scheduler's fixed cost).
+    """
+    csum = jnp.cumsum(mask.astype(jnp.int32))
+    wanted = jnp.arange(1, k + 1, dtype=jnp.int32)
+    idx = jnp.searchsorted(csum, wanted, side="left").astype(jnp.int32)
+    return jnp.where(wanted <= csum[-1], idx, -1)
 
 
 def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
-                       cfg: SchedulerConfig):
-    """Exact bounded first-fit.  Returns updated task table."""
+                       cfg: SchedulerConfig, slots=None):
+    """Exact bounded first-fit.  Returns updated task table.
+
+    `cfg.slots_per_step` is the STATIC placement bound (it shapes the
+    compiled loop).  `slots`, when given, is a TRACED per-run slot count
+    <= that bound: iterations past it become no-ops, so a scenario grid can
+    sweep `dyn_axis(slots_per_step=...)` inside ONE compiled program — the
+    fori_loop bound used to be the swept value itself, recompiling per
+    point.  `slots=None` reproduces the static path bit-for-bit.
+    """
     k = cfg.slots_per_step
     elig = _eligible(tasks, now, shift_ok)
     cand = _first_k_indices(elig, k)
@@ -74,6 +109,8 @@ def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
         free_c, free_g, status, host, first_start = carry
         ti = cand[i]
         valid = ti >= 0
+        if slots is not None:  # masked tail: loop runs to the static bound
+            valid = valid & (i < slots)
         tj = jnp.maximum(ti, 0)
         need_c, need_g = tasks.cores[tj], tasks.gpus[tj]
         fits = (free_c >= need_c) & (free_g >= need_g)
@@ -124,9 +161,10 @@ def schedule_aggregate(tasks: TaskTable, hosts: HostTable, now, shift_ok,
 
 
 def schedule_step(tasks: TaskTable, hosts: HostTable, now, shift_ok,
-                  cfg: SchedulerConfig):
+                  cfg: SchedulerConfig, slots=None):
     if cfg.mode == "first_fit":
-        return schedule_first_fit(tasks, hosts, now, shift_ok, cfg)
+        return schedule_first_fit(tasks, hosts, now, shift_ok, cfg,
+                                  slots=slots)
     if cfg.mode == "aggregate":
         return schedule_aggregate(tasks, hosts, now, shift_ok, cfg)
     raise ValueError(f"unknown scheduler mode '{cfg.mode}'")

@@ -25,12 +25,25 @@ def forward_window_quantile(trace, dt_h: float, window_h: float, quantile):
     bands from it over the price trace.  `quantile` may be a traced scalar
     so scenario grids can sweep the level inside one compiled program.
     """
+    return forward_window_quantiles(trace, dt_h, window_h, quantile)
+
+
+def forward_window_quantiles(trace, dt_h: float, window_h: float, quantiles):
+    """`forward_window_quantile` for one or several levels at once.
+
+    `quantiles` may be a scalar (returns f32[S]) or a vector of Q levels
+    (returns f32[Q, S]).  The [S, W] window matrix is sorted ONCE for all
+    levels — `jnp.quantile` re-sorts per call, and the battery's price
+    bands need two levels of the SAME windows, so the stacked form halves
+    the dominant precompute cost.
+    """
     x = jnp.asarray(trace, jnp.float32)
     s = x.shape[0]
     w = max(int(round(window_h / dt_h)), 1)
     idx = jnp.minimum(jnp.arange(s)[:, None] + jnp.arange(w)[None, :], s - 1)
     windows = x[idx]                                    # f32[S, W]
-    return jnp.quantile(windows, quantile, axis=1).astype(jnp.float32)
+    q = jnp.asarray(quantiles, jnp.float32)
+    return jnp.quantile(windows, q, axis=1).astype(jnp.float32)
 
 
 def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig,

@@ -1,10 +1,17 @@
 """jit'd public wrappers for the Pallas kernels (the ops layer).
 
-Each op dispatches to the Pallas kernel (interpret=True on CPU — the kernel
-body executes in Python for validation; on TPU set interpret=False) with
-the pure-jnp oracle available in kernels/ref.py for testing.
+Each op dispatches to the Pallas kernel with the pure-jnp oracle available
+in kernels/ref.py for testing.  Interpret mode is resolved PER CALL from the
+active JAX backend (`resolved_interpret`): on CPU the kernel body executes
+as traced jnp for validation; on TPU/GPU the real Mosaic kernel runs.  A
+module-level constant here used to pin interpret=True, which silently ran
+the Python emulation on accelerators — the env override
+`STEAM_PALLAS_INTERPRET=0|1` remains for forcing either mode (e.g. running
+the interpret path on a TPU host while debugging a kernel).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +21,19 @@ from . import power_carbon as _power_carbon
 from . import ssd_chunk as _ssd_chunk
 from repro.core.config import CoolingConfig, PowerModelConfig
 
-_INTERPRET = True  # CPU container: Pallas interpret mode
+
+def resolved_interpret() -> bool:
+    """Should Pallas kernels run in interpret mode for the current backend?
+
+    `STEAM_PALLAS_INTERPRET` (0/1, false/true) wins when set; otherwise
+    interpret mode is exactly "the default backend is CPU".  Resolved at
+    call time, not import time, so late backend selection (jax.config,
+    distributed init) and env changes are honoured.
+    """
+    env = os.environ.get("STEAM_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off", "")
+    return jax.default_backend() == "cpu"
 
 
 def host_power(cpu_util, gpu_util, n_gpus, on, cpu_cfg: PowerModelConfig,
@@ -24,7 +43,7 @@ def host_power(cpu_util, gpu_util, n_gpus, on, cpu_cfg: PowerModelConfig,
         cpu_util, gpu_util, n_gpus, on, 0.0, 0.0,
         cpu_idle=cpu_cfg.idle_w, cpu_max=cpu_cfg.max_w, cpu_curve=cpu_cfg.model,
         gpu_idle=gpu_cfg.idle_w, gpu_max=gpu_cfg.max_w, gpu_curve=gpu_cfg.model,
-        interpret=_INTERPRET)
+        interpret=resolved_interpret())
     return p
 
 
@@ -48,7 +67,7 @@ def facility_power(cpu_util, gpu_util, n_gpus, on, wet_bulb_c, setpoint_c,
         max_cop=cooling_cfg.max_cop,
         fan_overhead=cooling_cfg.fan_pump_overhead,
         evap_l_per_kwh=cooling_cfg.evap_l_per_kwh_heat,
-        interpret=_INTERPRET)
+        interpret=resolved_interpret())
 
 
 def facility_power_batched(cpu_util, gpu_util, n_gpus, on, wet_bulb_c,
@@ -78,18 +97,18 @@ def fused_power_carbon(cpu_util, gpu_util, n_gpus, on, ci, dt_h,
         cpu_util, gpu_util, n_gpus, on, ci, dt_h,
         cpu_idle=cpu_cfg.idle_w, cpu_max=cpu_cfg.max_w, cpu_curve=cpu_cfg.model,
         gpu_idle=gpu_cfg.idle_w, gpu_max=gpu_cfg.max_w, gpu_curve=gpu_cfg.model,
-        interpret=_INTERPRET)
+        interpret=resolved_interpret())
 
 
 def first_fit_place(cand_cores, cand_gpus, free_cores, free_gpus):
     """Greedy first-fit placement of K candidates onto H hosts."""
     return _first_fit.first_fit_place(cand_cores, cand_gpus, free_cores,
-                                      free_gpus, interpret=_INTERPRET)
+                                      free_gpus, interpret=resolved_interpret())
 
 
 def ssd_intra_chunk(xdt, da, b, c):
     """Mamba-2 SSD intra-chunk quadratic form (see kernels/ssd_chunk.py)."""
-    return _ssd_chunk.ssd_intra_chunk(xdt, da, b, c, interpret=_INTERPRET)
+    return _ssd_chunk.ssd_intra_chunk(xdt, da, b, c, interpret=resolved_interpret())
 
 
 def flash_attention(q, k, v, *, scale, causal=True, block_q=256, block_k=256):
@@ -97,4 +116,4 @@ def flash_attention(q, k, v, *, scale, causal=True, block_q=256, block_k=256):
     from . import flash_attn as _fa
     return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
                                block_q=block_q, block_k=block_k,
-                               interpret=_INTERPRET)
+                               interpret=resolved_interpret())
