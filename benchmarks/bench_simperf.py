@@ -34,7 +34,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import numpy as np
@@ -43,7 +42,7 @@ from repro.core import (BatteryConfig, CoolingConfig, PricingConfig,
                         RenewableConfig, simulate, summarize, sweep_grid,
                         trace_axis)
 from repro.kernels.ops import resolved_interpret
-from .common import DT_H, pct, regions, save_rows, setup
+from .common import DT_H, pct, regions, save_rows, setup, time_split
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_FILE = os.path.join(REPO_ROOT, "BENCH_simperf.json")
@@ -57,11 +56,10 @@ SEED_PALLAS_YEARS_PER_S = 0.089
 
 
 def _time(fn, *args, reps=3):
-    jax.block_until_ready(fn(*args))       # compile
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps
+    """Compile-then-steady timing: `steady_s` drives the sim-years/s rate
+    (same semantics as before the split); the compile side rides along on
+    each row so regressions in either show up separately."""
+    return time_split(fn, *args, reps=reps)
 
 
 def _technique_cfg(cfg):
@@ -99,6 +97,17 @@ def run(quick: bool = True):
     interp = resolved_interpret()
     print(f"simperf: pallas interpret={interp} "
           f"(backend={jax.default_backend()}, devices={ndev})", flush=True)
+    # interpret mode on an accelerator host means the Pallas rows silently
+    # benchmark the interpreter, not the hardware: fail loudly (under
+    # run.py --smoke this surfaces as a SUITE ERROR) unless the override
+    # env var says interpret was requested on purpose
+    if (interp and jax.default_backend() != "cpu"
+            and os.environ.get("STEAM_PALLAS_INTERPRET") is None):
+        raise RuntimeError(
+            f"Pallas kernels resolved to interpret mode on a "
+            f"{jax.default_backend()} host — the fused-kernel rows would "
+            f"measure the interpreter.  Set STEAM_PALLAS_INTERPRET=1 to "
+            f"accept that, or fix the lowering.")
 
     trace = regions(1, cfg.n_steps)[0]
     vmap_sizes = (16,) if common.SMOKE else (16, 64)
@@ -110,13 +119,16 @@ def run(quick: bool = True):
             cfg_b = vcfg.replace(backend=backend)
             jit_one = jax.jit(lambda tr, c=cfg_b, d=dyn: summarize(
                 simulate(tasks, hosts, tr, c, dyn=dict(d))[0], c))
-            t_one = _time(jit_one, trace)
+            tm = _time(jit_one, trace)
+            t_one = tm["steady_s"]
             rows.append({"bench": "simperf", "backend": backend,
                          "variant": variant,
                          "metric": f"sim_years_per_s_single"
                                    f"[{backend},{variant}]",
                          "value": pct(sim_years / t_one),
                          "wall_s": pct(t_one),
+                         "compile_s": pct(tm["compile_s"]),
+                         "first_call_s": pct(tm["first_call_s"]),
                          "per_device": pct(sim_years / t_one / ndev),
                          "task_steps_per_s": pct(task_steps / t_one),
                          "paper_java_years_per_core_s": 0.0127})
@@ -128,7 +140,8 @@ def run(quick: bool = True):
                 fn = jax.jit(lambda tr, c=cfg_b, d=dyn: sweep_grid(
                     tasks, hosts, c, [trace_axis(tr)], dyn=dict(d),
                     jit=False))
-                t_vmap = _time(fn, traces)
+                tm = _time(fn, traces)
+                t_vmap = tm["steady_s"]
                 rows.append({"bench": "simperf", "backend": backend,
                              "variant": variant,
                              "metric": f"sim_years_per_s_vmap{r}"
@@ -136,7 +149,9 @@ def run(quick: bool = True):
                              "value": pct(sim_years * r / t_vmap),
                              "per_device": pct(sim_years * r / t_vmap / ndev),
                              "task_steps_per_s": pct(task_steps * r / t_vmap),
-                             "wall_s": pct(t_vmap)})
+                             "wall_s": pct(t_vmap),
+                             "compile_s": pct(tm["compile_s"]),
+                             "first_call_s": pct(tm["first_call_s"])})
 
     # Pallas rows: stage-pipeline dispatches its fused power/carbon op every
     # scan step; the megakernel dispatches ONE time-blocked facility kernel
@@ -146,17 +161,24 @@ def run(quick: bool = True):
         dyn = _shared_traces(cfg.n_steps)
         jit_p = jax.jit(lambda tr, c=cfg_p, d=dyn: summarize(
             simulate(tasks, hosts, tr, c, dyn=dict(d))[0], c))
-        t_pal = _time(jit_p, trace, reps=1)
+        tm = _time(jit_p, trace, reps=1)
+        t_pal = tm["steady_s"]
         rows.append({"bench": "simperf", "backend": backend,
                      "variant": "techniques", "interpret": bool(interp),
                      "metric": f"sim_years_per_s_pallas[{backend}]",
-                     "value": pct(sim_years / t_pal), "wall_s": pct(t_pal)})
+                     "value": pct(sim_years / t_pal), "wall_s": pct(t_pal),
+                     "compile_s": pct(tm["compile_s"]),
+                     "first_call_s": pct(tm["first_call_s"])})
 
     save_rows("simperf", rows)
     with open(BENCH_FILE, "w") as f:
         json.dump({"bench": "simperf", "smoke": bool(common.SMOKE),
                    "backend": jax.default_backend(),
                    "device_count": ndev, "pallas_interpret": bool(interp),
+                   "compile_s_total": pct(sum(r.get("compile_s", 0.0)
+                                              for r in rows)),
+                   "steady_s_total": pct(sum(r.get("wall_s", 0.0)
+                                             for r in rows)),
                    "sim_years_per_run": pct(sim_years),
                    "seed_baseline": {
                        "vmap64": SEED_VMAP64_YEARS_PER_S,

@@ -15,12 +15,14 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
+import jax
 import numpy as np
 
 from repro.carbontraces.synthetic import make_region_traces
 from repro.core import (BatteryConfig, FailureConfig, ShiftingConfig,
-                        SimConfig)
+                        SimConfig, telemetry)
 from repro.workloads.synthetic import make_workload
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
@@ -73,6 +75,28 @@ def battery_cfg(meta, enabled=True, kwh_per_host: float | None = None,
                else KWH_PER_HOST.get(workload or meta.get("name", ""), 1.1))
         kwh = per * meta["n_hosts"]
     return BatteryConfig(enabled=enabled, capacity_kwh=kwh, **kw)
+
+
+def time_split(fn, *args, reps: int = 3) -> dict:
+    """Time `fn(*args)` with the compile/steady split made explicit.
+
+    The first call is watched by the telemetry compile monitor
+    (core/telemetry.compile_watch), so XLA backend-compile seconds are
+    attributed instead of guessed; `steady_s` is the mean of `reps` warm
+    calls — directly comparable to the pre-split benchmark numbers.
+
+    Returns {first_call_s, compile_s, steady_s, compiles}.
+    """
+    with telemetry.compile_watch() as w:
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        first = time.time() - t0
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    steady = (time.time() - t0) / reps
+    return {"first_call_s": first, "compile_s": min(w.seconds, first),
+            "steady_s": steady, "compiles": w.count}
 
 
 def save_rows(name: str, rows: list[dict]):

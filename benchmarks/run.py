@@ -14,8 +14,13 @@ meaningful at that scale — only SUITE ERRORs fail the run.
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
+import os
 import sys
 import time
+
+from repro.core import telemetry
 
 from . import (bench_analytical_gap, bench_battery_capacity,
                bench_battery_regions, bench_climate, bench_combinations,
@@ -39,6 +44,25 @@ MODULES = {
     "roofline": roofline,                    # §Dry-run / §Roofline
 }
 
+HISTORY_FILE = os.path.join(os.path.dirname(bench_simperf.BENCH_FILE),
+                            "BENCH_simperf.history.jsonl")
+
+
+def _append_history(stamp: str):
+    """One JSONL row per driver invocation that produced BENCH_simperf.json:
+    the headline summary plus a UTC timestamp, so speed trajectories across
+    PRs/machines are greppable without digging through CI artifacts."""
+    try:
+        with open(bench_simperf.BENCH_FILE) as f:
+            summary = json.load(f)
+    except OSError:
+        return
+    entry = dict(summary)
+    entry.pop("rows", None)            # headline only; rows stay in the .json
+    entry["timestamp"] = stamp
+    with open(HISTORY_FILE, "a") as f:
+        f.write(json.dumps(entry, default=float) + "\n")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -50,15 +74,19 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.smoke:
         common.SMOKE = True
+    stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds")
 
     names = [args.only] if args.only else list(MODULES)
     print("name,us_per_call,derived")
     verdicts = []
+    ran_ok = set()
     for name in names:
         mod = MODULES[name]
         t0 = time.time()
         try:
             rows = mod.run(quick=not args.full)
+            ran_ok.add(name)
             dt = time.time() - t0
             head = rows[0] if rows else {}
             derived = f"{head.get('metric','rows')}={head.get('value', len(rows))}"
@@ -70,6 +98,11 @@ def main(argv=None):
             print(f"{name},{dt*1e6:.0f},ERROR:{type(e).__name__}:{e}",
                   flush=True)
             verdicts.append(f"[{name}] SUITE ERROR: {e}")
+    if "simperf" in ran_ok:
+        _append_history(stamp)
+    tel = telemetry.get()
+    if tel is not None and tel.events:   # STEAM_TELEMETRY=1 (CI bench-smoke)
+        print(f"telemetry: {tel.export_chrome_trace()}", flush=True)
     print()
     print("=== paper-claim validation (F1-F6 + §III/§VIII) ===")
     for v in verdicts:

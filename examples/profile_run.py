@@ -1,0 +1,136 @@
+"""Observability walkthrough: spans, run records, and the probe bus.
+
+Runs one simulation and one region sweep inside a `telemetry.session`, then
+shows everything the subsystem captured:
+
+  * host-side spans exported as Chrome-trace JSON — open the printed path at
+    https://ui.perfetto.dev (or chrome://tracing) to see trace generation,
+    grid build, chunked execution, and jit compile laid out on a timeline
+  * one structured RunRecord per run (results/telemetry/run_records.jsonl):
+    config hash, backend, device topology, compile vs steady-state seconds,
+    chunk plan with predicted vs actual bytes, Pallas interpret resolution
+  * the opt-in per-step probe bus (EnergyFlow ledger, battery SoC, billing
+    window peak, scheduler queue depth) sampled inside the scan — plotted
+    with matplotlib when available, dumped as CSV otherwise
+
+Optionally wraps the sweep in `telemetry.profile(...)` (--xprof) to capture
+a full jax.profiler trace for TensorBoard.
+
+Run:  PYTHONPATH=src python examples/profile_run.py [--regions 8] [--xprof]
+"""
+import argparse
+import csv
+import os
+
+import numpy as np
+
+from repro.carbontraces.synthetic import make_region_traces
+from repro.core import (BatteryConfig, CoolingConfig, PricingConfig,
+                        ProbeConfig, RenewableConfig, SimConfig,
+                        make_host_table, make_task_table, simulate, summarize,
+                        sweep_grid, telemetry, trace_axis)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--regions", type=int, default=8)
+ap.add_argument("--days", type=float, default=7.0)
+ap.add_argument("--stride", type=int, default=4,
+                help="probe every Nth step")
+ap.add_argument("--out", default=os.path.join("results", "telemetry"))
+ap.add_argument("--xprof", action="store_true",
+                help="also capture a jax.profiler trace (TensorBoard logdir)")
+args = ap.parse_args()
+
+DT = 0.25
+S = int(args.days * 24 / DT)
+rng = np.random.default_rng(0)
+N = 96
+tasks = make_task_table(np.sort(rng.uniform(0, args.days * 18, N)),
+                        rng.uniform(0.5, 8.0, N),
+                        rng.integers(1, 4, N).astype(float))
+hosts = make_host_table(8, 8)
+t = np.arange(S) * DT
+dyn = {"price_trace": (0.1 * (1 + 0.5 * np.sin(2 * np.pi * t / 24))
+                       ).astype(np.float32),
+       "wet_bulb_trace": (14 + 6 * np.sin(2 * np.pi * t / 24)
+                          ).astype(np.float32),
+       "pv_cf_trace": np.clip(np.sin(2 * np.pi * (t - 6) / 24), 0,
+                              1).astype(np.float32)}
+
+cfg = SimConfig(
+    n_steps=S, dt_h=DT,
+    cooling=CoolingConfig(enabled=True, heat_reuse_fraction=0.3),
+    pricing=PricingConfig(enabled=True, billing_window_h=24.0),
+    renewables=RenewableConfig(enabled=True, pv_capacity_kw=60.0),
+    battery=BatteryConfig(enabled=True, capacity_kwh=50.0, policy="carbon"),
+    probes=ProbeConfig(enabled=True, stride=args.stride))
+traces = make_region_traces(S, DT, args.regions, seed=1)
+
+with telemetry.session(out_dir=args.out) as tel:
+    # 1. a single probed run: the probe bus samples the settled energy
+    # ledger every `stride` steps INSIDE the compiled scan
+    final, _ = simulate(tasks, hosts, traces[0], cfg, dyn=dyn)
+    res = summarize(final, cfg)
+
+    # 2. a region sweep: grid.build / grid.chunk spans + a grid RunRecord
+    # with the chunk plan
+    sweep = sweep_grid(tasks, hosts, cfg.replace(probes=ProbeConfig()),
+                       [trace_axis(traces)], dyn=dyn, chunk_size=4)
+
+    if args.xprof:
+        _, logdir = telemetry.profile(
+            lambda: sweep_grid(tasks, hosts, cfg.replace(probes=ProbeConfig()),
+                               [trace_axis(traces)], dyn=dyn))
+        print(f"xprof trace -> {logdir}  (tensorboard --logdir {logdir})")
+
+    print("=== run records ===")
+    for rec in tel.records:
+        print(f"  {rec.kind:8s} backend={rec.backend} "
+              f"hash={rec.config_hash} compile={rec.compile_time_s:.2f}s "
+              f"execute={rec.execute_time_s:.3f}s "
+              f"pallas_interpret={rec.pallas_interpret} "
+              f"chunk={rec.chunk}")
+    print("=== span durations (ms) ===")
+    for name in sorted({e["name"] for e in tel.events}):
+        durs = tel.span_durations(name)          # µs
+        print(f"  {name:24s} n={len(durs):3d} total={sum(durs)/1e3:9.1f}")
+
+print(f"\nPerfetto trace -> {os.path.join(args.out, 'trace.json')}")
+print(f"run records    -> {os.path.join(args.out, 'run_records.jsonl')}")
+print(f"sweep mean CO2 {np.asarray(sweep.op_carbon_kg).mean():.1f} kg "
+      f"across {args.regions} regions")
+
+# --- probe-bus plot (matplotlib optional: CSV fallback) -------------------
+p = res.probes
+steps = np.asarray(p.step)
+hours = steps * DT
+series = {f: np.asarray(getattr(p, f)) for f in telemetry.PROBE_VALUE_FIELDS}
+try:
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+    fig, axes = plt.subplots(3, 1, figsize=(10, 9), sharex=True)
+    axes[0].plot(hours, series["it_kw"], label="IT")
+    axes[0].plot(hours, series["cooling_kw"], label="cooling")
+    axes[0].plot(hours, series["pv_kw"], label="PV")
+    axes[0].plot(hours, series["grid_import_kw"], label="grid import")
+    axes[0].set_ylabel("kW"), axes[0].legend(ncol=4, fontsize=8)
+    axes[1].plot(hours, series["soc_kwh"], label="battery SoC (kWh)")
+    axes[1].plot(hours, series["window_peak_kw"],
+                 label="billing-window peak (kW)")
+    axes[1].legend(fontsize=8)
+    axes[2].step(hours, series["queue_depth"], where="post")
+    axes[2].set_ylabel("queued tasks"), axes[2].set_xlabel("hours")
+    fig.suptitle(f"probe bus: every {args.stride} steps, "
+                 f"{len(steps)} samples")
+    out_png = os.path.join(args.out, "probes.png")
+    fig.savefig(out_png, dpi=110, bbox_inches="tight")
+    print(f"probe plot     -> {out_png}")
+except ImportError:
+    out_csv = os.path.join(args.out, "probes.csv")
+    with open(out_csv, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["step"] + list(series))
+        for i in range(len(steps)):
+            w.writerow([int(steps[i])] + [float(series[k][i])
+                                          for k in series])
+    print(f"matplotlib not installed; probe samples -> {out_csv}")

@@ -14,6 +14,7 @@ if [[ "${1:-}" == "--fast" ]]; then
   exec python -m pytest -x -q tests/test_core_sim.py tests/test_grid.py \
     tests/test_fleet.py tests/test_pricing.py tests/test_pricing_properties.py \
     tests/test_renewables.py tests/test_energy_ledger.py \
-    tests/test_golden.py tests/test_kernels.py tests/test_megakernel.py "$@"
+    tests/test_golden.py tests/test_kernels.py tests/test_megakernel.py \
+    tests/test_telemetry.py "$@"
 fi
 exec python -m pytest -x -q "$@"

@@ -1,10 +1,11 @@
 """steamx core: the OpenDC-STEAM technique, tensorized for TPU."""
 from .battery import (battery_flow_step, dispatch_decision,
                       surplus_aware_dispatch)
+from . import telemetry
 from .config import (BatteryConfig, CoolingConfig, EmbodiedConfig,
                      FailureConfig, PowerModelConfig, PricingConfig,
-                     RenewableConfig, SchedulerConfig, ShiftingConfig,
-                     SimConfig, techniques)
+                     ProbeConfig, RenewableConfig, SchedulerConfig,
+                     ShiftingConfig, SimConfig, techniques)
 from .engine import (BACKENDS, EnergyFlow, StepInputs, build_step_fn,
                      build_step_inputs, default_pipeline,
                      facility_totals_from_flows, init_energy_flow, simulate)
@@ -35,8 +36,8 @@ from .sweep import (lower_sweep, sharded_sweep, sweep_battery_sizes,
 
 __all__ = [
     "BatteryConfig", "CoolingConfig", "EmbodiedConfig", "FailureConfig",
-    "PowerModelConfig", "PricingConfig", "RenewableConfig",
-    "SchedulerConfig", "ShiftingConfig", "SimConfig",
+    "PowerModelConfig", "PricingConfig", "ProbeConfig", "RenewableConfig",
+    "SchedulerConfig", "ShiftingConfig", "SimConfig", "telemetry",
     "techniques", "BACKENDS", "EnergyFlow", "StepInputs", "build_step_fn",
     "build_step_inputs", "default_pipeline", "facility_totals_from_flows",
     "init_energy_flow", "simulate",

@@ -164,6 +164,26 @@ class RenewableConfig:
 
 
 @dataclass(frozen=True)
+class ProbeConfig:
+    """Per-step probe bus (core/telemetry.py).
+
+    Disabled by default: `SimState.probes`/`SimResult.probes` stay None
+    and the step function is unchanged (bitwise-identical outputs).
+    Enabled, a probe stage samples the settled EnergyFlow ledger,
+    battery SoC, the running billing-window peak and the scheduler
+    queue depth every `stride` steps into a preallocated ring buffer
+    carried through the scan — time-resolved visibility at
+    O(n_steps/stride) memory instead of `collect_series`' full horizon.
+    `max_samples` caps the ring (0 = keep every strided sample); a
+    capped ring wraps, keeping the LAST samples.  Both step executors
+    export identical probes (differentially tested).
+    """
+    enabled: bool = False
+    stride: int = 1
+    max_samples: int = 0
+
+
+@dataclass(frozen=True)
 class SchedulerConfig:
     # 'first_fit'  : exact bounded first-fit placement (K slots/step)
     # 'aggregate'  : capacity-only admission (analytical-model-like placement)
@@ -188,6 +208,7 @@ class SimConfig:
     renewables: RenewableConfig = RenewableConfig()
     embodied: EmbodiedConfig = EmbodiedConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
+    probes: ProbeConfig = ProbeConfig()
     sla_grace_h: float = 24.0       # task meets SLA if done within 24h of expected
     collect_series: bool = False    # emit per-step (power, ci, running) series
     use_pallas: bool = False        # fused power/carbon Pallas kernel path

@@ -107,6 +107,7 @@ from . import renewables as renewables_mod
 from . import scaling as scaling_mod
 from . import scheduler as scheduler_mod
 from . import shifting as shifting_mod
+from . import telemetry as telemetry_mod
 from . import thermal as thermal_mod
 from .config import SimConfig
 from .power import host_power_kw
@@ -552,9 +553,42 @@ def default_pipeline(cfg: SimConfig) -> list[Stage]:
 # executor
 # --------------------------------------------------------------------------
 
+def _queue_depth(state: SimState) -> jax.Array:
+    """Arrived-but-pending task count at the state's current time."""
+    return jnp.sum(((state.tasks.status == PENDING)
+                    & (state.tasks.arrival <= state.t)).astype(jnp.float32))
+
+
+def stage_probes(cfg: SimConfig) -> Stage:
+    """Probe-bus sampler (cfg.probes): runs after every other stage, so it
+    sees the SETTLED ledger plus post-dispatch SoC and the post-pricing
+    running window peak.  Samples use the pre-increment `state.step`/`t`
+    of the step being executed."""
+    stride = max(int(cfg.probes.stride), 1)
+
+    def fn(state: SimState, ctx: dict):
+        flow: EnergyFlow = ctx["flow"]
+        sample = {f: getattr(flow, f) for f in EnergyFlow._fields}
+        sample["soc_kwh"] = state.battery.charge
+        sample["window_peak_kw"] = state.metrics.window_peak_kw
+        sample["queue_depth"] = _queue_depth(state)
+        probes = telemetry_mod.probe_write(state.probes, state.step,
+                                           stride, sample)
+        return state._replace(probes=probes), ctx
+    return fn
+
+
+def _stage_label(stage: Stage) -> str:
+    """'stage_power.<locals>.fn' -> 'stage_power' for span/scope names."""
+    q = getattr(stage, "__qualname__", "")
+    return q.split(".<locals>")[0] or getattr(stage, "__name__", "stage")
+
+
 def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
                   dyn: dict | None = None):
     stages = default_pipeline(cfg) if stages is None else list(stages)
+    if cfg.probes.enabled:
+        stages.append(stage_probes(cfg))
     dyn = dyn or {}
 
     def step(state: SimState, inputs: StepInputs):
@@ -566,7 +600,8 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
                "pv_cf": inputs.pv_cf, "flow": init_energy_flow(),
                **dyn}
         for stage in stages:
-            state, ctx = stage(state, ctx)
+            with telemetry_mod.stage_scope(_stage_label(stage)):
+                state, ctx = stage(state, ctx)
         state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
         if cfg.collect_series:
             flow: EnergyFlow = ctx["flow"]
@@ -616,7 +651,8 @@ def _build_demand_step(cfg: SimConfig, dyn: dict):
             ci, st = xs
         ctx = {"ci": ci, "shift_threshold": st, **dyn}
         for stage in stages:
-            state, ctx = stage(state, ctx)
+            with telemetry_mod.stage_scope(_stage_label(stage)):
+                state, ctx = stage(state, ctx)
         cpu_u, gpu_u = scheduler_mod.host_utilization(state.tasks, state.hosts)
         on = (state.hosts.active & state.hosts.up).astype(jnp.float32)
         if cfg.use_pallas:
@@ -626,8 +662,13 @@ def _build_demand_step(cfg: SimConfig, dyn: dict):
         else:
             p = host_power_kw(cpu_u, gpu_u, state.hosts.n_gpus, on,
                               cfg.cpu_power, cfg.gpu_power)
+        # probe-bus queue depth samples the pre-increment time, exactly like
+        # the stage pipeline's probe stage (which runs before the increment)
+        qd = _queue_depth(state) if cfg.probes.enabled else None
         state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
         ys = {"it_kw": jnp.sum(p)}
+        if qd is not None:
+            ys["queue_depth"] = qd
         if cfg.collect_series:
             free_c, free_g = scheduler_mod.free_capacity(state.tasks,
                                                          state.hosts)
@@ -744,7 +785,8 @@ def _simulate_megakernel(state0: SimState, inputs: StepInputs,
     step = _build_demand_step(cfg, dyn)
     xs = ((inputs.ci, inputs.shift_threshold) if cfg.shifting.enabled
           else None)
-    final, demand_ys = jax.lax.scan(step, state0, xs, length=cfg.n_steps)
+    with telemetry_mod.stage_scope("megakernel.demand"):
+        final, demand_ys = jax.lax.scan(step, state0, xs, length=cfg.n_steps)
     it_series = demand_ys["it_kw"]
 
     chain_kwargs = dict(
@@ -753,7 +795,10 @@ def _simulate_megakernel(state0: SimState, inputs: StepInputs,
         batt_rate_kw=dyn.get("batt_rate_kw"),
         dispatch_lambda=dyn.get("dispatch_lambda"),
         pv_capacity_kw=dyn.get("pv_capacity_kw"))
-    if cfg.use_pallas and not cfg.collect_series:
+    # the probe bus needs the per-step flow series, so (like collect_series)
+    # it routes the facility phase through the reference chain rather than
+    # the totals-only Pallas kernel — probing is opt-in observability
+    if cfg.use_pallas and not cfg.collect_series and not cfg.probes.enabled:
         from repro.kernels import fused_step as fused_mod
         from repro.kernels.ops import resolved_interpret
         totals = fused_mod.fused_facility_totals(
@@ -764,13 +809,27 @@ def _simulate_megakernel(state0: SimState, inputs: StepInputs,
             **chain_kwargs)
         final = _merge_facility_totals(final, totals, cfg, dyn)
         return final, None
-    flows = ref_mod.fused_facility_chain(
-        it_series, inputs.ci, inputs.wet_bulb_c, inputs.price,
-        inputs.price_lo, inputs.price_hi, inputs.pv_cf,
-        inputs.batt_threshold, inputs.ci_rising, cfg.dt_h, cfg,
-        **chain_kwargs)
-    totals = facility_totals_from_flows(flows, inputs, cfg)
+    with telemetry_mod.stage_scope("megakernel.facility"):
+        flows = ref_mod.fused_facility_chain(
+            it_series, inputs.ci, inputs.wet_bulb_c, inputs.price,
+            inputs.price_lo, inputs.price_hi, inputs.pv_cf,
+            inputs.batt_threshold, inputs.ci_rising, cfg.dt_h, cfg,
+            **chain_kwargs)
+        totals = facility_totals_from_flows(flows, inputs, cfg)
     final = _merge_facility_totals(final, totals, cfg, dyn)
+    if cfg.probes.enabled:
+        if cfg.pricing.enabled:
+            wsteps = pricing_mod.billing_window_steps(cfg.pricing, cfg.dt_h)
+            wp = telemetry_mod.window_peak_series(flows["grid_import_kw"],
+                                                  wsteps)
+        else:
+            wp = jnp.zeros_like(flows["grid_import_kw"])
+        series = {f: flows[f] for f in EnergyFlow._fields}
+        series["soc_kwh"] = flows["soc"]
+        series["window_peak_kw"] = wp
+        series["queue_depth"] = demand_ys["queue_depth"]
+        final = final._replace(probes=telemetry_mod.probes_from_series(
+            cfg.n_steps, cfg.probes, series))
     if not cfg.collect_series:
         return final, None
     flow = EnergyFlow(
@@ -840,8 +899,22 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     dyn.pop("price_trace", None)
     dyn.pop("pv_cf_trace", None)
     state0 = init_sim_state(tasks, hosts, dyn.get("seed", cfg.seed))
-    if cfg.backend == "megakernel":
-        return _simulate_megakernel(state0, inputs, cfg, dyn)
-    step = build_step_fn(cfg, stages, dyn)
-    final, series = jax.lax.scan(step, state0, inputs)
-    return final, series
+    if cfg.probes.enabled:
+        state0 = state0._replace(
+            probes=telemetry_mod.init_probes(cfg.n_steps, cfg.probes))
+
+    def run():
+        if cfg.backend == "megakernel":
+            return _simulate_megakernel(state0, inputs, cfg, dyn)
+        step = build_step_fn(cfg, stages, dyn)
+        return jax.lax.scan(step, state0, inputs)
+
+    # cut a RunRecord only for eager top-level calls: under jit/vmap (grid
+    # sweeps, fleet cells) the outer driver records instead, and blocking
+    # on tracers is impossible anyway
+    if telemetry_mod.enabled() and not telemetry_mod.is_tracing(state0):
+        with telemetry_mod.run_recorder("simulate", cfg):
+            out = run()
+            jax.block_until_ready(out)
+        return out
+    return run()

@@ -29,6 +29,7 @@ import numpy as np
 
 from .config import SimConfig
 from .engine import simulate
+from . import telemetry as telemetry_mod
 from .metrics import SimResult, fleet_totals, summarize
 from .spatial import (spatial_assign, spatial_assign_online, split_by_region)
 from .state import HostTable, TaskTable
@@ -262,8 +263,9 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
                          "cfg.renewables.enabled is False: the per-region "
                          "PV resource would be ignored")
     if region is None:
-        region = fleet_place(tasks, hosts, fleet, cfg.dt_h,
-                             n_steps=cfg.n_steps)
+        with telemetry_mod.span("fleet.place", policy=fleet.policy):
+            region = fleet_place(tasks, hosts, fleet, cfg.dt_h,
+                                 n_steps=cfg.n_steps)
     stacked = split_by_region(tasks, region, fleet.n_regions, width=width)
     per_region_dyn = fleet.per_region_dyn()
     scalar_dyn = {}
@@ -278,14 +280,26 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
             scalar_dyn[key] = val
 
     fn = _jitted_fleet_cell if jit else fleet_cell
-    return fn(stacked, hosts, cfg, jnp.asarray(fleet.ci_traces),
-              None if fleet.wb_traces is None
-              else jnp.asarray(fleet.wb_traces),
-              scalar_dyn, per_region_dyn,
-              None if fleet.price_traces is None
-              else jnp.asarray(fleet.price_traces),
-              None if fleet.pv_traces is None
-              else jnp.asarray(fleet.pv_traces))
+
+    def run():
+        return fn(stacked, hosts, cfg, jnp.asarray(fleet.ci_traces),
+                  None if fleet.wb_traces is None
+                  else jnp.asarray(fleet.wb_traces),
+                  scalar_dyn, per_region_dyn,
+                  None if fleet.price_traces is None
+                  else jnp.asarray(fleet.price_traces),
+                  None if fleet.pv_traces is None
+                  else jnp.asarray(fleet.pv_traces))
+
+    if telemetry_mod.enabled() and not telemetry_mod.is_tracing(
+            (stacked, scalar_dyn, per_region_dyn)):
+        with telemetry_mod.run_recorder(
+                "fleet", cfg, n_regions=int(fleet.n_regions),
+                policy=str(fleet.policy)):
+            out = run()
+            jax.block_until_ready(out)
+        return out
+    return run()
 
 
 # one shared jit cache across simulate_fleet calls: same (shapes, cfg, dyn

@@ -141,6 +141,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .config import SimConfig
 from .engine import StepInputs, simulate
+from . import telemetry as telemetry_mod
 from .metrics import SimResult, summarize
 from .quant import STORES, maybe_dequantize, quantize_trace
 from .state import HostTable, TaskTable
@@ -502,10 +503,39 @@ class ScenarioGrid:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         self._check_cfg(cfg)
         red = _normalize_reduce(reduce, len(self.shape))
-        fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
-        if red is not None:
-            fn = _apply_reduce(fn, red)
-        payloads = self.payloads()
+        with telemetry_mod.span("grid.build", shape=str(self.shape)):
+            fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
+            if red is not None:
+                fn = _apply_reduce(fn, red)
+            payloads = self.payloads()
+        recording = (telemetry_mod.enabled()
+                     and not telemetry_mod.is_tracing((tasks, hosts,
+                                                       payloads)))
+        if not recording:
+            return self._run_grid(tasks, hosts, cfg, fn, payloads, chunk_size,
+                                  mesh, jit, red, memory_budget_bytes, None)
+        with telemetry_mod.run_recorder("grid", cfg) as rec:
+            rec.grid_shape = [int(s) for s in self.shape]
+            rec.extra["n_scenarios"] = int(self.n_scenarios)
+            rec.extra["axes"] = [{"kind": ax.kind, "names": list(ax.names),
+                                  "length": ax.length} for ax in self.axes]
+            rec.trace_dtypes = {
+                ax.names[0]: str(jnp.asarray(
+                    jax.tree.leaves(ax.values[0])[0]).dtype)
+                for ax in self.axes
+                if ax.kind in ("trace", "weather", "price", "renewable")}
+            if mesh is not None:
+                rec.mesh = {"axis_names": [str(a) for a in mesh.axis_names],
+                            "shape": [int(s) for s in mesh.devices.shape]}
+            out = self._run_grid(tasks, hosts, cfg, fn, payloads, chunk_size,
+                                 mesh, jit, red, memory_budget_bytes, rec)
+            jax.block_until_ready(out)
+        return out
+
+    def _run_grid(self, tasks, hosts, cfg, fn, payloads, chunk_size, mesh,
+                  jit, red, memory_budget_bytes, rec):
+        """`run`'s execution body; `rec` is the telemetry record builder
+        (None when telemetry is off or the call is being traced)."""
         if self.axes[0].kind == "region":
             # a lone region_axis: nothing is swept, so nothing to chunk or
             # shard — the fleet's internal region vmap must never be split
@@ -513,7 +543,8 @@ class ScenarioGrid:
                 raise ValueError("cannot shard a grid whose only axis is the "
                                  "region_axis: add a swept leading axis")
             fn = jax.jit(fn) if jit else fn
-            return fn(*payloads)
+            with telemetry_mod.span("grid.execute"):
+                return fn(*payloads)
         auto_chunked = chunk_size is None
         if auto_chunked:
             chunk_size = self._auto_chunk_size(tasks, hosts, cfg,
@@ -533,38 +564,57 @@ class ScenarioGrid:
                 f"chunks of {chunk_size}: {cause}): move the reduced axis "
                 "off axis 0, raise the memory budget, or pass an explicit "
                 "chunk_size >= the leading length")
+        lead = self.axes[0].length
+        if rec is not None:
+            # chunk plan with predicted (estimate-based) vs actual bytes
+            rec.chunk = {
+                "chunk_size": int(chunk_size),
+                "n_chunks": -(-lead // chunk_size),
+                "auto": bool(auto_chunked),
+                "predicted_bytes_per_lead": float(
+                    self._per_lead_bytes(tasks, hosts, cfg)),
+                "actual_payload_bytes": int(sum(
+                    jnp.asarray(l).size * jnp.asarray(l).dtype.itemsize
+                    for p in payloads for l in jax.tree.leaves(p))),
+            }
         if mesh is not None:
             return self._run_sharded(fn, payloads, mesh, chunk_size, red)
-        if self.axes[0].length <= chunk_size:
-            return (jax.jit(fn) if jit else fn)(*payloads)
+        if lead <= chunk_size:
+            with telemetry_mod.span("grid.execute", chunks=1):
+                return (jax.jit(fn) if jit else fn)(*payloads)
         # donate each chunk's payload slice: the slices are temporaries, so
         # XLA may reuse their buffers for the chunk's outputs instead of
         # holding both live — the chunked path exists to bound memory.
         # Donation is best-effort (a bf16/int8 chunk has no f32 output to
         # fold into), so the unusable-buffer warning is suppressed.
         cfn = jax.jit(fn, donate_argnums=(0,)) if jit else fn
-        with warnings.catch_warnings():
+        # equal-size chunks must share one compilation (a ragged tail adds
+        # one more); a compile per chunk is the slots_per_step bug class
+        ragged = lead % chunk_size != 0
+        guard = telemetry_mod.recompile_guard(
+            "grid.run chunk loop", allowed=1 + int(ragged))
+        chunks = []
+        with warnings.catch_warnings(), guard:
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            return _concat_chunks(
-                [cfn(_slice_lead(payloads[0], s, chunk_size), *payloads[1:])
-                 for s in range(0, self.axes[0].length, chunk_size)])
+            for i, s in enumerate(range(0, lead, chunk_size)):
+                with telemetry_mod.span("grid.chunk", index=i, start=s):
+                    # slice OUTSIDE the guard window: eager slice ops compile
+                    # per static offset and are not chunk recompiles
+                    p0 = _slice_lead(payloads[0], s, chunk_size)
+                    guard.mark()
+                    chunks.append(cfn(p0, *payloads[1:]))
+                guard.tick()
+            return _concat_chunks(chunks)
 
-    def _auto_chunk_size(self, tasks, hosts, cfg: SimConfig,
-                         budget_bytes: float | None) -> int:
-        """Chunk size from a device-memory budget (ROADMAP auto-chunking).
+    def _per_lead_bytes(self, tasks, hosts, cfg: SimConfig) -> float:
+        """Estimated working-set bytes per leading-axis point.
 
         Bytes per grid cell = the vmapped scan carry (task + host tables,
         double-buffered by the scan) + the per-cell StepInputs series + the
-        cell's slice of the output pytree (SimResult: one scalar per field).
-        The leading axis is chunked so `chunk * cells_per_leading_point *
-        bytes_per_cell` fits the budget; a grid under budget returns its full
-        leading length (i.e. runs unchunked, the legacy behaviour).
+        cell's slice of the output pytree (SimResult: one scalar per field,
+        plus the probe-bus ring when cfg.probes is on).
         """
-        if budget_bytes is None:
-            budget_bytes = float(os.environ.get(
-                "STEAM_SWEEP_MEMORY_BUDGET_MB", 4096)) * 2**20
-        lead = self.axes[0].length
         carry_bytes = sum(jnp.asarray(x).size * jnp.asarray(x).dtype.itemsize
                           for x in (*jax.tree.leaves(tasks),
                                     *jax.tree.leaves(hosts)))
@@ -584,12 +634,31 @@ class ScenarioGrid:
                 for v in ax.values for leaf in jax.tree.leaves(v))
         derived = len(StepInputs._fields) - supplied
         inputs_bytes = supplied_bytes + derived * cfg.n_steps * 4
-        out_bytes = len(SimResult._fields) * 4
+        out_bytes = (len(SimResult._fields) - 1) * 4
+        if cfg.probes.enabled:
+            out_bytes += len(telemetry_mod.Probes._fields) * 4 * (
+                telemetry_mod.probe_capacity(cfg.n_steps, cfg.probes))
         per_cell = 2 * carry_bytes + inputs_bytes + out_bytes
         if self.fleet is not None:
             # every cell runs R regional engines (stacked tables + inputs)
             per_cell *= self.fleet.n_regions
-        per_lead = per_cell * (self.n_scenarios / max(lead, 1))
+        lead = self.axes[0].length
+        return per_cell * (self.n_scenarios / max(lead, 1))
+
+    def _auto_chunk_size(self, tasks, hosts, cfg: SimConfig,
+                         budget_bytes: float | None) -> int:
+        """Chunk size from a device-memory budget (ROADMAP auto-chunking).
+
+        The leading axis is chunked so `chunk * cells_per_leading_point *
+        bytes_per_cell` (see `_per_lead_bytes`) fits the budget; a grid
+        under budget returns its full leading length (i.e. runs unchunked,
+        the legacy behaviour).
+        """
+        if budget_bytes is None:
+            budget_bytes = float(os.environ.get(
+                "STEAM_SWEEP_MEMORY_BUDGET_MB", 4096)) * 2**20
+        lead = self.axes[0].length
+        per_lead = self._per_lead_bytes(tasks, hosts, cfg)
         return max(1, min(lead, int(budget_bytes // max(per_lead, 1.0))))
 
     def _shardings(self, mesh, red=None):

@@ -8,7 +8,7 @@ tasks still unfinished at the end of the simulation count as violations.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,10 @@ class SimResult(NamedTuple):
     n_done: jax.Array              # tasks finished within the horizon
     n_started: jax.Array           # tasks that ever started
     n_decided: jax.Array           # SLA denominator (done or past deadline)
+    # opt-in probe-bus samples (telemetry.Probes, cfg.probes.enabled);
+    # None by default — a leafless trailing pytree node, so results,
+    # goldens and fleet aggregation are untouched unless probing is on
+    probes: Any = None
 
 
 def summarize(state: SimState, cfg: SimConfig) -> SimResult:
@@ -116,6 +120,7 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
         n_done=jnp.sum(done.astype(jnp.float32)),
         n_started=jnp.sum(started.astype(jnp.float32)),
         n_decided=jnp.sum(decided.astype(jnp.float32)),
+        probes=state.probes,
     )
 
 

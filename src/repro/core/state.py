@@ -9,7 +9,7 @@ parallelism.  All times are hours (f32), energy kWh, power kW, carbon kgCO2-eq.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -111,6 +111,10 @@ class SimState(NamedTuple):
     battery: BatteryState
     metrics: MetricsAcc
     rng: jax.Array        # PRNG key for stochastic failures
+    # opt-in probe-bus ring buffer (telemetry.Probes); None when
+    # cfg.probes.enabled is False — a leafless pytree node, so the scan
+    # carry, jit signatures and golden outputs are unchanged by default
+    probes: Any = None
 
 
 def make_task_table(arrival, duration, cores, gpus=None, cpu_util=None,

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import telemetry
 from repro.core.quant import QuantizedTrace, quantize_trace
 
 _LANE = 128
@@ -256,15 +257,16 @@ def fused_facility_totals(it_kw, ci, wet_bulb_c, price, price_lo, price_hi,
     kern = functools.partial(_kernel, cfg=cfg, n_steps=s, wsteps=wsteps)
     trow = lambda: pl.BlockSpec((1, _BLOCK_T), lambda i: (0, i))
     fixed = lambda n: pl.BlockSpec((1, n), lambda i: (0, 0))
-    acc = pl.pallas_call(
-        kern,
-        grid=(n_blocks,),
-        in_specs=[pl.BlockSpec((8, _BLOCK_T), lambda i: (0, i)),
-                  trow(), trow(), trow(), trow(), fixed(8), fixed(8)],
-        out_specs=fixed(_LANE),
-        out_shape=jax.ShapeDtypeStruct((1, _LANE), jnp.float32),
-        interpret=interpret,
-    )(dense, *qrows, meta, params)
+    with telemetry.stage_scope("megakernel.facility.pallas"):
+        acc = pl.pallas_call(
+            kern,
+            grid=(n_blocks,),
+            in_specs=[pl.BlockSpec((8, _BLOCK_T), lambda i: (0, i)),
+                      trow(), trow(), trow(), trow(), fixed(8), fixed(8)],
+            out_specs=fixed(_LANE),
+            out_shape=jax.ShapeDtypeStruct((1, _LANE), jnp.float32),
+            interpret=interpret,
+        )(dense, *qrows, meta, params)
 
     totals = {
         "op_carbon": acc[0, _A_GRID_CI] * dt / 1000.0,

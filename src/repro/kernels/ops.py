@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from . import first_fit as _first_fit
 from . import power_carbon as _power_carbon
 from . import ssd_chunk as _ssd_chunk
+from repro.core import telemetry
 from repro.core.config import CoolingConfig, PowerModelConfig
 
 
@@ -32,8 +33,14 @@ def resolved_interpret() -> bool:
     """
     env = os.environ.get("STEAM_PALLAS_INTERPRET")
     if env is not None:
-        return env.strip().lower() not in ("0", "false", "no", "off", "")
-    return jax.default_backend() == "cpu"
+        interp = env.strip().lower() not in ("0", "false", "no", "off", "")
+    else:
+        interp = jax.default_backend() == "cpu"
+    # observability hook: an active telemetry session records how the call
+    # resolved (RunRecord.pallas_interpret); no-op — one attr set — when a
+    # session is on, free when off
+    telemetry.note_pallas_interpret(interp)
+    return interp
 
 
 def host_power(cpu_util, gpu_util, n_gpus, on, cpu_cfg: PowerModelConfig,

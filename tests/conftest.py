@@ -50,11 +50,16 @@ def pytest_addoption(parser):
 
 
 def _jsonable(tree):
-    """Nested namedtuples/dicts of arrays -> plain JSON-serializable dicts."""
+    """Nested namedtuples/dicts of arrays -> plain JSON-serializable dicts.
+
+    None-valued fields are dropped: disabled-by-default optional outputs
+    (e.g. SimResult.probes) serialize as ABSENT, so adding such a field
+    keeps every golden snapshot byte-identical."""
     if hasattr(tree, "_asdict"):
-        return {k: _jsonable(v) for k, v in tree._asdict().items()}
+        return {k: _jsonable(v) for k, v in tree._asdict().items()
+                if v is not None}
     if isinstance(tree, dict):
-        return {k: _jsonable(v) for k, v in tree.items()}
+        return {k: _jsonable(v) for k, v in tree.items() if v is not None}
     return np.asarray(tree).tolist()
 
 

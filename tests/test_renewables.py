@@ -343,6 +343,8 @@ class TestGridEquivalence:
                                  "price_trace": prices[p]})
                         ref = summarize(final, cfg)
                         for field in res._fields:
+                            if getattr(res, field) is None:
+                                continue  # probes: off by default
                             np.testing.assert_allclose(
                                 np.asarray(getattr(res, field))[v, k, c, p],
                                 np.asarray(getattr(ref, field)), rtol=1e-5,
@@ -360,6 +362,8 @@ class TestGridEquivalence:
         _, _, _, red = self._grid(workload, ci_traces, pv_traces, prices,
                                   reduce=("min", 1))
         for field in full._fields:
+            if getattr(full, field) is None:
+                continue  # probes: off by default
             want = np.asarray(getattr(full, field))
             np.testing.assert_allclose(np.asarray(getattr(chunked, field)),
                                        want, rtol=1e-6, err_msg=field)
