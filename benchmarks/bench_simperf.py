@@ -11,11 +11,13 @@ executors (core/engine.py "Kernel backends"):
                    whole horizon; ONE time-blocked Pallas kernel under
                    use_pallas, kernels/fused_step.py)
 
-Two configurations per backend: `bare` (no facility techniques — the
+Three configurations per backend: `bare` (no facility techniques — the
 metric the seed's results/bench/simperf.json reported, so the speed
-trajectory is comparable across PRs) and `techniques` (cooling + pricing +
+trajectory is comparable across PRs), `techniques` (cooling + pricing +
 renewables + battery, the composition the paper sweeps and the part the
-megakernel fuses).  On a single CPU core both executors converge toward the
+megakernel fuses) and `typed` (priority-aware scheduling + shifting with a
+35% interactive fraction — the demand-side workload subsystem's
+per-priority scheduler passes and per-class metric matmuls).  On a single CPU core both executors converge toward the
 shared demand-scan floor (scheduler + progress + power probe — identical
 work in both, and hoisted out of the vmap batch in both because the demand
 phase is trace-independent); the megakernel's fusion pays where the
@@ -39,8 +41,8 @@ import jax
 import numpy as np
 
 from repro.core import (BatteryConfig, CoolingConfig, PricingConfig,
-                        RenewableConfig, simulate, summarize, sweep_grid,
-                        trace_axis)
+                        RenewableConfig, SchedulerConfig, ShiftingConfig,
+                        simulate, summarize, sweep_grid, trace_axis)
 from repro.kernels.ops import resolved_interpret
 from .common import DT_H, pct, regions, save_rows, setup, time_split
 
@@ -71,6 +73,16 @@ def _technique_cfg(cfg):
         renewables=RenewableConfig(enabled=True, pv_capacity_kw=40.0),
         battery=BatteryConfig(enabled=True, capacity_kwh=100.0,
                               policy="carbon"))
+
+
+def _typed_cfg(cfg):
+    """The typed-workload configuration: priority-aware scheduling +
+    shifting with the interactive bypass; the `interactive_frac` dyn key
+    re-types a share of tasks inside the program.  Benchmarks the
+    per-priority-level scheduler passes and the per-class metric matmuls."""
+    return cfg.replace(
+        shifting=ShiftingConfig(enabled=True, max_delay_h=24.0),
+        scheduler=SchedulerConfig(priority_levels=3))
 
 
 def _shared_traces(n_steps: int):
@@ -113,7 +125,9 @@ def run(quick: bool = True):
     vmap_sizes = (16,) if common.SMOKE else (16, 64)
     variants = [("bare", cfg, {}),
                 ("techniques", _technique_cfg(cfg),
-                 _shared_traces(cfg.n_steps))]
+                 _shared_traces(cfg.n_steps)),
+                ("typed", _typed_cfg(cfg),
+                 {"interactive_frac": np.float32(0.35)})]
     for variant, vcfg, dyn in variants:
         for backend in BACKENDS:
             cfg_b = vcfg.replace(backend=backend)

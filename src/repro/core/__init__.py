@@ -12,7 +12,7 @@ from .engine import (BACKENDS, EnergyFlow, StepInputs, build_step_fn,
 from .fleet import FleetResult, FleetSpec, fleet_place, simulate_fleet
 from .grid import (Axis, ScenarioGrid, dyn_axis, fleet_axis, price_axis,
                    region_axis, renewable_axis, seed_axis, sweep_grid,
-                   trace_axis, weather_axis)
+                   tasktrace_axis, trace_axis, weather_axis)
 from .pricing import (export_revenue_step, flat_energy_cost,
                       precompute_price_signals, pricing_step,
                       settle_demand_charge)
@@ -27,10 +27,12 @@ from .spatial import (spatial_assign, spatial_assign_online,
 from .thermal import (chiller_cop, cooling_step, dynamic_pue,
                       economizer_fraction, reclaimable_heat_kw)
 from .scaling import find_min_scale, with_scale
-from .state import (DONE, INVALID, PENDING, RUNNING, BatteryState, HostTable,
-                    MetricsAcc, SimState, TaskTable, active_host_mask,
-                    init_sim_state, make_host_table, make_task_table,
-                    pad_task_table)
+from .state import (DONE, INVALID, JOB_BATCH, JOB_CLASS_NAMES,
+                    JOB_INTERACTIVE, JOB_TRAINING, N_JOB_CLASSES, PENDING,
+                    RUNNING, BatteryState, HostTable, MetricsAcc, SimState,
+                    TaskTable, active_host_mask, init_sim_state,
+                    make_host_table, make_task_table, pad_task_table,
+                    retime_task_table, with_interactive_frac)
 from .sweep import (lower_sweep, sharded_sweep, sweep_battery_sizes,
                     sweep_regions, sweep_regions_x_battery)
 
@@ -47,7 +49,7 @@ __all__ = [
     "fleet_place", "simulate_fleet", "Axis", "ScenarioGrid", "dyn_axis",
     "fleet_axis", "price_axis", "region_axis", "renewable_axis",
     "seed_axis", "sweep_grid",
-    "trace_axis", "battery_flow_step", "dispatch_decision",
+    "tasktrace_axis", "trace_axis", "battery_flow_step", "dispatch_decision",
     "surplus_aware_dispatch", "export_revenue_step", "flat_energy_cost",
     "precompute_price_signals", "pricing_step", "settle_demand_charge",
     "net_load_split", "pv_power_kw", "split_surplus",
@@ -57,8 +59,11 @@ __all__ = [
     "cooling_step", "dynamic_pue", "economizer_fraction",
     "reclaimable_heat_kw",
     "find_min_scale", "with_scale", "DONE", "INVALID", "PENDING", "RUNNING",
+    "JOB_BATCH", "JOB_TRAINING", "JOB_INTERACTIVE", "N_JOB_CLASSES",
+    "JOB_CLASS_NAMES",
     "BatteryState", "HostTable", "MetricsAcc", "SimState", "TaskTable",
     "active_host_mask", "init_sim_state", "make_host_table", "make_task_table",
-    "pad_task_table", "lower_sweep", "sharded_sweep", "sweep_battery_sizes",
+    "pad_task_table", "retime_task_table", "with_interactive_frac",
+    "lower_sweep", "sharded_sweep", "sweep_battery_sizes",
     "sweep_regions", "sweep_regions_x_battery",
 ]

@@ -189,6 +189,11 @@ class SchedulerConfig:
     # 'aggregate'  : capacity-only admission (analytical-model-like placement)
     mode: str = "first_fit"
     slots_per_step: int = 64
+    # > 1 turns on priority-aware candidate selection (first_fit only):
+    # tasks with higher `TaskTable.priority` fill the K slots first, FIFO
+    # within a class (state.N_JOB_CLASSES covers the typed job classes).
+    # 1 (default) is the plain FIFO prefix, bit-for-bit the untyped path.
+    priority_levels: int = 1
 
 
 @dataclass(frozen=True)
@@ -210,6 +215,10 @@ class SimConfig:
     scheduler: SchedulerConfig = SchedulerConfig()
     probes: ProbeConfig = ProbeConfig()
     sla_grace_h: float = 24.0       # task meets SLA if done within 24h of expected
+    # SLA grace applied to tasks re-typed interactive by the
+    # `interactive_frac` dyn key (state.with_interactive_frac); tasks built
+    # with an explicit `sla_grace` column keep their own value
+    interactive_grace_h: float = 0.25
     collect_series: bool = False    # emit per-step (power, ci, running) series
     use_pallas: bool = False        # fused power/carbon Pallas kernel path
     # step executor (core/engine.py "Kernel backends"):

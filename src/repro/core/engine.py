@@ -233,8 +233,11 @@ def stage_failures(cfg: SimConfig) -> Stage:
 
 
 def stage_checkpoint(cfg: SimConfig) -> Stage:
+    # static: one host-side divide, not a float boundary test in the scan
+    isteps = failures_mod.checkpoint_interval_steps(cfg.failures, cfg.dt_h)
+
     def fn(state: SimState, ctx: dict):
-        tasks = failures_mod.checkpoint_tick(state.tasks, state.t, cfg.dt_h,
+        tasks = failures_mod.checkpoint_tick(state.tasks, state.step, isteps,
                                              cfg.failures)
         return state._replace(tasks=tasks), ctx
     return fn
@@ -244,7 +247,8 @@ def stage_task_stopper(cfg: SimConfig) -> Stage:
     def fn(state: SimState, ctx: dict):
         tasks = state.tasks
         stop = shifting_mod.should_stop(ctx["ci"], ctx["shift_threshold"],
-                                        state.t, tasks.arrival, cfg.shifting)
+                                        state.t, tasks.arrival, cfg.shifting,
+                                        shiftable=tasks.shiftable)
         stop = stop & (tasks.status == RUNNING)
         n = jnp.sum(stop.astype(jnp.float32))
         tasks = tasks._replace(
@@ -260,7 +264,7 @@ def stage_scheduler(cfg: SimConfig) -> Stage:
     def fn(state: SimState, ctx: dict):
         shift_ok = shifting_mod.start_allowed(
             ctx["ci"], ctx["shift_threshold"], state.t, state.tasks.arrival,
-            cfg.shifting)
+            cfg.shifting, shiftable=state.tasks.shiftable)
         n_delayed = jnp.sum(
             ((state.tasks.status == PENDING) & (state.tasks.arrival <= state.t)
              & ~shift_ok).astype(jnp.float32))
@@ -553,6 +557,18 @@ def default_pipeline(cfg: SimConfig) -> list[Stage]:
 # executor
 # --------------------------------------------------------------------------
 
+def _advance_clock(state: SimState, cfg: SimConfig) -> SimState:
+    """End-of-step clock tick: t is DERIVED from the step index, never
+    accumulated.  Accumulating `t += dt_h` compounds one f32 rounding per
+    step — at dt_h = 0.1 that is ~0.15 h of drift over 12 000 steps,
+    silently shifting SLA deadlines and every time-derived boundary.  The
+    product form carries a single rounding regardless of horizon
+    (tests/test_simclock.py)."""
+    step1 = state.step + 1
+    return state._replace(t=step1.astype(jnp.float32) * jnp.float32(cfg.dt_h),
+                          step=step1)
+
+
 def _queue_depth(state: SimState) -> jax.Array:
     """Arrived-but-pending task count at the state's current time."""
     return jnp.sum(((state.tasks.status == PENDING)
@@ -602,7 +618,7 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
         for stage in stages:
             with telemetry_mod.stage_scope(_stage_label(stage)):
                 state, ctx = stage(state, ctx)
-        state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
+        state = _advance_clock(state, cfg)
         if cfg.collect_series:
             flow: EnergyFlow = ctx["flow"]
             ys = {"grid_power_kw": flow.grid_import_kw,
@@ -665,7 +681,7 @@ def _build_demand_step(cfg: SimConfig, dyn: dict):
         # probe-bus queue depth samples the pre-increment time, exactly like
         # the stage pipeline's probe stage (which runs before the increment)
         qd = _queue_depth(state) if cfg.probes.enabled else None
-        state = state._replace(t=state.t + cfg.dt_h, step=state.step + 1)
+        state = _advance_clock(state, cfg)
         ys = {"it_kw": jnp.sum(p)}
         if qd is not None:
             ys["queue_depth"] = qd
@@ -875,8 +891,11 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     `pv_cf_trace` (f32[S] solar capacity factors, renewabletraces/) and
     `pv_capacity_kw` (PV nameplate sizing, core/renewables.py),
     `slots_per_step` (traced scheduler placement-slot count, masked against
-    the static `cfg.scheduler.slots_per_step` bound) and `seed`
-    (failure-model PRNG).
+    the static `cfg.scheduler.slots_per_step` bound), `seed`
+    (failure-model PRNG), `arrival_trace` (f32[T] per-task arrival hours —
+    re-times the task table, state.retime_task_table / grid.tasktrace_axis)
+    and `interactive_frac` (traced share of tasks re-typed as interactive
+    inference, state.with_interactive_frac).
 
     `cfg.backend` picks the executor (module docstring, "Kernel
     backends"); custom `stages` require the stage-pipeline backend.
@@ -894,6 +913,18 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
         dyn["wet_bulb_trace"] = weather_trace
     if "n_active_hosts" in dyn:
         hosts = scaling_mod.with_scale(hosts, dyn["n_active_hosts"])
+    # workload-shaping dyn keys apply to the task table itself, BEFORE the
+    # initial state, so both step executors (and any grid vmap over them)
+    # see the same typed/re-timed population
+    arrival = dyn.pop("arrival_trace", None)
+    if arrival is not None:
+        from . import state as state_mod
+        tasks = state_mod.retime_task_table(tasks, arrival)
+    interactive_frac = dyn.pop("interactive_frac", None)
+    if interactive_frac is not None:
+        from . import state as state_mod
+        tasks = state_mod.with_interactive_frac(
+            tasks, interactive_frac, cfg.interactive_grace_h, seed=cfg.seed)
     inputs = build_step_inputs(ci_trace, cfg, dyn=dyn)
     dyn.pop("wet_bulb_trace", None)  # consumed by the inputs, not a ctx key
     dyn.pop("price_trace", None)

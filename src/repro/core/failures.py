@@ -45,12 +45,23 @@ def interrupt_tasks(tasks: TaskTable, newly_down, cfg: FailureConfig):
     ), jnp.sum(on_down.astype(jnp.float32))
 
 
-def checkpoint_tick(tasks: TaskTable, now, dt_h: float, cfg: FailureConfig):
-    """Snapshot running tasks' progress every checkpoint_interval_h."""
+def checkpoint_interval_steps(cfg: FailureConfig, dt_h: float) -> int:
+    """Steps per checkpoint interval (static: call outside the scan)."""
+    return max(int(round(cfg.checkpoint_interval_h / dt_h)), 1)
+
+
+def checkpoint_tick(tasks: TaskTable, step, interval_steps: int,
+                    cfg: FailureConfig):
+    """Snapshot running tasks' progress every checkpoint_interval_h.
+
+    Boundaries compare on integer step counts, not
+    floor(now/period) != floor((now-dt)/period): the float form double-fires
+    or skips once clock rounding crosses a period edge (tests/test_simclock.py
+    pins equivalence at exact-divisor dt_h).
+    """
     if not (cfg.enabled and cfg.checkpointing):
         return tasks
-    period = cfg.checkpoint_interval_h
-    boundary = jnp.floor(now / period) != jnp.floor((now - dt_h) / period)
+    boundary = step % interval_steps == 0
     take = boundary & (tasks.status == RUNNING)
     return tasks._replace(
         ckpt_remaining=jnp.where(take, tasks.remaining, tasks.ckpt_remaining))

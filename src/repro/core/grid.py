@@ -45,6 +45,17 @@ Axis kinds:
                                               cfg.scheduler.slots_per_step
                                               bound, so a slot sweep stays
                                               one compiled program)
+      - `interactive_frac`                   (share of tasks re-typed as
+                                              interactive inference,
+                                              state.with_interactive_frac:
+                                              non-shiftable, top priority,
+                                              tight SLA grace)
+  * `tasktrace_axis(arrivals)` — per-task arrival sets `f32[A, T]`
+    (tasktraces/synthetic.py `make_arrival_sets`): each grid point re-times
+    the SAME task population with arrivals sampled from a different
+    region's traffic curve (dyn key `arrival_trace`,
+    state.retime_task_table).  A demand dimension orthogonal to every
+    supply-side axis above.
   * `seed_axis(seeds)` — PRNG seeds for the stochastic failure model.
   * `region_axis(fleet)` — a multi-datacenter FLEET (core/fleet.py): the
     FleetSpec's R regional datacenters (per-region carbon + weather traces,
@@ -148,6 +159,7 @@ from .state import HostTable, TaskTable
 
 TRACE_KEY = "ci_trace"
 SEED_KEY = "seed"
+TASKTRACE_KEY = "arrival_trace"
 WEATHER_KEY = "wet_bulb_trace"
 PRICE_KEY = "price_trace"
 PV_KEY = "pv_cf_trace"
@@ -167,7 +179,7 @@ class Axis(NamedTuple):
     `QuantizedTrace` pytree (core/quant.py, trace-carrying axes declared
     with `store=`) whose every leaf shares the leading dim."""
 
-    kind: str                      # 'trace'|'weather'|'price'|'dyn'|'seed'|'fleet'|'region'
+    kind: str                      # 'trace'|'weather'|'price'|'dyn'|'seed'|'fleet'|'region'|'tasktrace'
     names: tuple[str, ...]         # dyn ctx keys (TRACE_KEY / SEED_KEY special)
     values: tuple                  # arrays / QuantizedTraces, equal leading dims
     meta: object = None            # kind-specific payload (region: FleetSpec)
@@ -243,6 +255,23 @@ def renewable_axis(pv_cf_traces, store: str = "f32") -> Axis:
     assert traces.ndim == 2, (
         f"renewable_axis wants f32[V, S], got {traces.shape}")
     return Axis("renewable", (PV_KEY,), (_stored(traces, store),))
+
+
+def tasktrace_axis(arrivals) -> Axis:
+    """Workload-arrival axis: per-task arrival sets f32[A, T] -> one grid
+    dim of length A (tasktraces/synthetic.py `make_arrival_sets`).  Each
+    point re-times the task table with one row of arrival hours
+    (state.retime_task_table via the `arrival_trace` dyn key), so one
+    compiled grid sweeps WHO the demand is — arrivals following different
+    regions' traffic curves — against any supply-side axis.  Rows are
+    sorted here, host-side: the table's FIFO invariant is row order, and
+    the other task columns keep theirs, so each point is a re-timed
+    pairing of the same task population.  T must equal `tasks.n`
+    (validated at run time)."""
+    arr = jnp.sort(jnp.asarray(arrivals, jnp.float32), axis=-1)
+    assert arr.ndim == 2, (
+        f"tasktrace_axis wants f32[A, T], got {arr.shape}")
+    return Axis("tasktrace", (TASKTRACE_KEY,), (arr,))
 
 
 def seed_axis(seeds) -> Axis:
@@ -348,6 +377,13 @@ class ScenarioGrid:
                     "region_axis already carries per-region carbon/weather/"
                     "price/pv traces; drop the trace_axis/weather_axis/"
                     "price_axis/renewable_axis")
+            if any(ax.kind == "tasktrace" for ax in axes):
+                raise ValueError(
+                    "tasktrace_axis re-times the task table, but a fleet "
+                    "grid splits tasks across regions host-side before the "
+                    "compiled program runs: re-timed arrivals could not "
+                    "re-place them — sweep arrival sets by building one "
+                    "fleet per set instead")
             for ax in axes:
                 if ax.kind == "fleet":
                     for n, v in zip(ax.names, ax.values):
@@ -476,6 +512,15 @@ class ScenarioGrid:
                              "cfg.renewables.enabled is False: the "
                              "per-region PV resource would be ignored")
 
+    def _check_tasks(self, tasks: TaskTable):
+        for ax in self.axes:
+            if ax.kind == "tasktrace" and ax.values[0].shape[1] != tasks.n:
+                raise ValueError(
+                    f"tasktrace_axis carries {ax.values[0].shape[1]} "
+                    f"arrivals per point but the task table has {tasks.n} "
+                    "rows: generate the arrival sets with "
+                    "n_tasks == tasks.n (retiming is a bijection on rows)")
+
     def run(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
             ci_trace=None, *, chunk_size: int | None = None, mesh=None,
             jit: bool = True, reduce: tuple[str, int] | None = None,
@@ -502,6 +547,7 @@ class ScenarioGrid:
         if chunk_size is not None and chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         self._check_cfg(cfg)
+        self._check_tasks(tasks)
         red = _normalize_reduce(reduce, len(self.shape))
         with telemetry_mod.span("grid.build", shape=str(self.shape)):
             fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
@@ -711,6 +757,7 @@ class ScenarioGrid:
         paper-scale grid allocates nothing.
         """
         self._check_cfg(cfg)
+        self._check_tasks(tasks)
         red = _normalize_reduce(reduce, len(self.shape))
         fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
         if red is not None:

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from . import pricing as pricing_mod
 from .config import SimConfig
-from .state import DONE, INVALID, SimState
+from .state import DONE, INVALID, N_JOB_CLASSES, SimState
 
 
 class SimResult(NamedTuple):
@@ -51,6 +51,16 @@ class SimResult(NamedTuple):
     n_done: jax.Array              # tasks finished within the horizon
     n_started: jax.Array           # tasks that ever started
     n_decided: jax.Array           # SLA denominator (done or past deadline)
+    # per-class SLA/latency metrics, indexed by the state.JOB_* codes
+    # (batch, training, interactive) — the performance leg of sweeps that
+    # trade carbon against latency (examples/slo_tradeoff.py).  The class
+    # axis is TRAILING so fleet stacking/vmap leading axes compose; the raw
+    # per-class counts recombine across regions exactly like the totals
+    class_sla_violation_frac: jax.Array  # f32[C] violations / decided
+    class_mean_start_delay_h: jax.Array  # f32[C] mean first_start - arrival
+    class_n_violations: jax.Array        # f32[C]; sums to the total count
+    class_n_decided: jax.Array           # f32[C]; sums to n_decided
+    class_n_started: jax.Array           # f32[C]; sums to n_started
     # opt-in probe-bus samples (telemetry.Probes, cfg.probes.enabled);
     # None by default — a leafless trailing pytree node, so results,
     # goldens and fleet aggregation are untouched unless probing is on
@@ -65,7 +75,12 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
     done = tasks.status == DONE
 
     expected = tasks.arrival + tasks.duration
-    deadline = expected + cfg.sla_grace_h
+    # per-task SLA grace where set (>= 0, e.g. interactive latency SLOs);
+    # the -1 sentinel falls back to the config-wide grace, so untyped
+    # tables reproduce the flat-deadline pipeline bit-for-bit
+    grace = jnp.where(tasks.sla_grace >= 0.0, tasks.sla_grace,
+                      jnp.float32(cfg.sla_grace_h))
+    deadline = expected + grace
     violated_done = done & (tasks.finish > deadline)
     # undone tasks only count once their SLA deadline has actually passed
     violated_undone = arrived & ~done & (deadline <= t_end)
@@ -82,6 +97,22 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
     started = arrived & jnp.isfinite(tasks.first_start)
     n_started = jnp.maximum(jnp.sum(started.astype(jnp.float32)), 1.0)
     sdelay = jnp.where(started, tasks.first_start - tasks.arrival, 0.0)
+
+    # per-class splits via masked [C, T] row reductions (scatter-free, and —
+    # unlike a dot — the vmapped lowering reduces in the same order as the
+    # unbatched one, keeping simulate_fleet R=1 bitwise == simulate);
+    # violated_done and violated_undone are disjoint (done vs not-done), so
+    # the class counts sum exactly to the totals above
+    cw = (tasks.job_class[None, :]
+          == jnp.arange(N_JOB_CLASSES, dtype=jnp.int32)[:, None])
+
+    def _csum(x):
+        return jnp.sum(jnp.where(cw, x[None, :], 0.0), axis=-1)
+
+    class_n_viol = _csum((violated_done | violated_undone).astype(jnp.float32))
+    class_n_decided = _csum(decided.astype(jnp.float32))
+    class_n_started = _csum(started.astype(jnp.float32))
+    class_sdelay = _csum(sdelay)
 
     it_safe = jnp.maximum(m.it_energy, 1e-9)
     # settle the final (still open) demand-charge billing window
@@ -120,6 +151,13 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
         n_done=jnp.sum(done.astype(jnp.float32)),
         n_started=jnp.sum(started.astype(jnp.float32)),
         n_decided=jnp.sum(decided.astype(jnp.float32)),
+        class_sla_violation_frac=class_n_viol
+        / jnp.maximum(class_n_decided, 1.0),
+        class_mean_start_delay_h=class_sdelay
+        / jnp.maximum(class_n_started, 1.0),
+        class_n_violations=class_n_viol,
+        class_n_decided=class_n_decided,
+        class_n_started=class_n_started,
         probes=state.probes,
     )
 
@@ -179,6 +217,15 @@ def fleet_totals(per_region: SimResult, axis: int = 0) -> SimResult:
         n_done=s(p.n_done),
         n_started=s(p.n_started),
         n_decided=s(p.n_decided),
+        # class fields are [R, C]: sum/recombine over the region axis,
+        # keeping the trailing class axis
+        class_sla_violation_frac=(s(p.class_n_violations)
+                                  / jnp.maximum(s(p.class_n_decided), 1.0)),
+        class_mean_start_delay_h=wmean(p.class_mean_start_delay_h,
+                                       p.class_n_started),
+        class_n_violations=s(p.class_n_violations),
+        class_n_decided=s(p.class_n_decided),
+        class_n_started=s(p.class_n_started),
     )
 
 

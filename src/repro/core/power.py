@@ -17,6 +17,29 @@ _CURVES = {
     "cubic": lambda u: u * u * u,
 }
 
+# Per-class utilization profiles (mean cpu_util, gpu_util), indexed by the
+# state.JOB_* codes (batch, training, interactive).  Batch is CPU-bound
+# throughput work; training saturates accelerators; interactive inference is
+# latency-bound — bursty, so its SUSTAINED utilization of allocated
+# resources is modest even when request rates are high (the RackMind job-mix
+# shape).  Per-class power rides the existing per-task cpu_util/gpu_util
+# columns, so `host_power_kw` and both step executors are untouched.
+JOB_CLASS_CPU_UTIL = (0.80, 0.55, 0.35)
+JOB_CLASS_GPU_UTIL = (0.30, 0.95, 0.60)
+
+
+def class_utilization(job_class):
+    """Per-task (cpu_util, gpu_util) from the class profile tables.
+
+    `job_class` i32[...] (may be traced); out-of-range codes clamp to the
+    nearest class rather than indexing out of bounds.
+    """
+    cls = jnp.clip(jnp.asarray(job_class, jnp.int32), 0,
+                   len(JOB_CLASS_CPU_UTIL) - 1)
+    cpu = jnp.asarray(JOB_CLASS_CPU_UTIL, jnp.float32)[cls]
+    gpu = jnp.asarray(JOB_CLASS_GPU_UTIL, jnp.float32)[cls]
+    return cpu, gpu
+
 
 def component_power_kw(util, cfg: PowerModelConfig, present=None):
     """Power draw of one component class.

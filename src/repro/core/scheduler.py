@@ -48,7 +48,10 @@ def _per_host_sum(vals, seg, h: int):
 def free_capacity(tasks: TaskTable, hosts: HostTable):
     """Recompute per-host free CPU cores and GPUs from the task table."""
     h = hosts.cores.shape[0]
-    running = tasks.status == RUNNING
+    # host >= 0 like failures.interrupt_tasks: the clip below is only index
+    # safety — without the mask a RUNNING task carrying host == -1 would be
+    # silently billed to host 0
+    running = (tasks.status == RUNNING) & (tasks.host >= 0)
     seg = jnp.clip(tasks.host, 0, h - 1)
     used_c = _per_host_sum(jnp.where(running, tasks.cores, 0.0), seg, h)
     used_g = _per_host_sum(jnp.where(running, tasks.gpus, 0.0), seg, h)
@@ -59,7 +62,7 @@ def free_capacity(tasks: TaskTable, hosts: HostTable):
 def host_utilization(tasks: TaskTable, hosts: HostTable):
     """Per-host CPU/GPU utilization in [0,1] from running tasks."""
     h = hosts.cores.shape[0]
-    running = tasks.status == RUNNING
+    running = (tasks.status == RUNNING) & (tasks.host >= 0)
     seg = jnp.clip(tasks.host, 0, h - 1)
     cpu = _per_host_sum(
         jnp.where(running, tasks.cores * tasks.cpu_util, 0.0), seg, h)
@@ -89,6 +92,24 @@ def _first_k_indices(mask, k: int):
     return jnp.where(wanted <= csum[-1], idx, -1)
 
 
+def _first_k_by_priority(mask, priority, k: int, levels: int):
+    """First k True rows of mask in (priority desc, arrival) order.
+
+    Priority-aware candidate selection, still scatter-free: one
+    `_first_k_indices` pass per priority level (`levels` is a small static
+    int from SchedulerConfig), then one merge pass over the concatenated
+    per-level candidate lists.  Higher classes fill the k slots first; FIFO
+    (row) order is preserved within a class because each per-level pass
+    already returns rows in arrival order.  `priority` may be traced.
+    """
+    prio = jnp.asarray(priority)
+    cands = [_first_k_indices(mask & (prio == p), k)
+             for p in range(levels - 1, -1, -1)]
+    cat = jnp.concatenate(cands)                  # [levels*k]
+    sel = _first_k_indices(cat >= 0, k)           # first k valid candidates
+    return jnp.where(sel >= 0, cat[jnp.maximum(sel, 0)], -1)
+
+
 def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
                        cfg: SchedulerConfig, slots=None):
     """Exact bounded first-fit.  Returns updated task table.
@@ -102,7 +123,11 @@ def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
     """
     k = cfg.slots_per_step
     elig = _eligible(tasks, now, shift_ok)
-    cand = _first_k_indices(elig, k)
+    if cfg.priority_levels > 1:
+        cand = _first_k_by_priority(elig, tasks.priority, k,
+                                    cfg.priority_levels)
+    else:  # single class: the plain FIFO prefix, bit-for-bit the old path
+        cand = _first_k_indices(elig, k)
     free_c, free_g = free_capacity(tasks, hosts)
 
     def body(i, carry):
@@ -166,5 +191,10 @@ def schedule_step(tasks: TaskTable, hosts: HostTable, now, shift_ok,
         return schedule_first_fit(tasks, hosts, now, shift_ok, cfg,
                                   slots=slots)
     if cfg.mode == "aggregate":
+        if cfg.priority_levels > 1:
+            raise ValueError(
+                "scheduler mode 'aggregate' admits the longest FIFO prefix "
+                "and cannot honor priority classes; use mode='first_fit' "
+                "with priority_levels > 1")
         return schedule_aggregate(tasks, hosts, now, shift_ok, cfg)
     raise ValueError(f"unknown scheduler mode '{cfg.mode}'")

@@ -58,23 +58,36 @@ def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig,
     return forward_window_quantile(ci_trace, dt_h, cfg.forecast_window_h, q)
 
 
-def start_allowed(ci, threshold, now, arrival, cfg: ShiftingConfig):
+def start_allowed(ci, threshold, now, arrival, cfg: ShiftingConfig,
+                  shiftable=None):
     """Eligibility modifier for PENDING tasks.
 
     Returns bool[T]: True if the shifting policy permits starting the task now.
-    Tasks that have waited past max_delay_h bypass the gate (FIFO fallback).
+    Tasks that have waited past max_delay_h bypass the gate (FIFO fallback),
+    and so do tasks marked non-shiftable (`shiftable` bool[T], e.g.
+    interactive inference whose latency SLO cannot absorb a delay).
     """
     if not cfg.enabled:
         return jnp.ones_like(arrival, dtype=bool)
     green = ci <= threshold
     overdue = (now - arrival) >= cfg.max_delay_h
-    return green | overdue
+    ok = green | overdue
+    if shiftable is not None:
+        ok = ok | ~shiftable
+    return ok
 
 
-def should_stop(ci, threshold, now, arrival, cfg: ShiftingConfig):
-    """Task-stopper predicate for RUNNING tasks (graceful pause)."""
+def should_stop(ci, threshold, now, arrival, cfg: ShiftingConfig,
+                shiftable=None):
+    """Task-stopper predicate for RUNNING tasks (graceful pause).
+
+    Non-shiftable tasks (`shiftable` bool[T]) are never paused.
+    """
     if not (cfg.enabled and cfg.stop_running):
         return jnp.zeros_like(arrival, dtype=bool)
     red = ci > threshold
     within_budget = (now - arrival) < cfg.max_delay_h
-    return red & within_budget
+    stop = red & within_budget
+    if shiftable is not None:
+        stop = stop & shiftable
+    return stop

@@ -253,12 +253,18 @@ def split_by_region(tasks: TaskTable, region, n_regions: int,
         w = width
     out = []
     for idx in subsets:
+        # thread the typed-workload columns too, or a fleet split would
+        # silently drop classes/priorities/SLOs on the way in
         t = make_task_table(arrival[idx],
                             np.asarray(tasks.duration)[idx],
                             np.asarray(tasks.cores)[idx],
                             np.asarray(tasks.gpus)[idx],
                             np.asarray(tasks.cpu_util)[idx],
-                            np.asarray(tasks.gpu_util)[idx])
+                            np.asarray(tasks.gpu_util)[idx],
+                            job_class=np.asarray(tasks.job_class)[idx],
+                            priority=np.asarray(tasks.priority)[idx],
+                            shiftable=np.asarray(tasks.shiftable)[idx],
+                            sla_grace=np.asarray(tasks.sla_grace)[idx])
         # empty regions become a full-width INVALID table through the same
         # pad path as everyone else (no hand-built sentinel rows)
         out.append(pad_task_table(t, w))

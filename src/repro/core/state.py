@@ -21,6 +21,18 @@ RUNNING = 1
 DONE = 2
 INVALID = 3  # padding rows
 
+# Job-class codes (i32), ordered by default scheduling priority (low to
+# high).  BATCH is the legacy default: tables built without class columns
+# are all-batch / all-shiftable / config-grace and reproduce the pre-typed
+# pipeline bit-for-bit.  INTERACTIVE models latency-bound inference traffic:
+# top priority, non-shiftable (it bypasses the temporal-shifting gate), and
+# a tight per-task SLA grace.
+JOB_BATCH = 0
+JOB_TRAINING = 1
+JOB_INTERACTIVE = 2
+N_JOB_CLASSES = 3
+JOB_CLASS_NAMES = ("batch", "training", "interactive")
+
 _INF = jnp.float32(jnp.inf)
 
 
@@ -54,6 +66,10 @@ class TaskTable(NamedTuple):
     first_start: jax.Array    # f32[T]; +inf until first scheduled
     finish: jax.Array         # f32[T]; +inf until done
     lost_work: jax.Array      # f32[T] hours of work redone due to failures
+    job_class: jax.Array      # i32[T] JOB_* code (batch/training/interactive)
+    priority: jax.Array       # i32[T] scheduling priority, higher first
+    shiftable: jax.Array      # bool[T] may temporal shifting delay/pause it?
+    sla_grace: jax.Array      # f32[T] per-task SLA grace hours; <0 = cfg default
 
     @property
     def n(self) -> int:
@@ -118,8 +134,15 @@ class SimState(NamedTuple):
 
 
 def make_task_table(arrival, duration, cores, gpus=None, cpu_util=None,
-                    gpu_util=None) -> TaskTable:
-    """Build a task table from per-task arrays; sorts by arrival (FIFO order)."""
+                    gpu_util=None, job_class=None, priority=None,
+                    shiftable=None, sla_grace=None) -> TaskTable:
+    """Build a task table from per-task arrays; sorts by arrival (FIFO order).
+
+    The typed-workload columns default to the legacy homogeneous table:
+    all-batch (`job_class` zeros), priority = class code, shiftable for
+    every non-interactive class, and `sla_grace` -1 (sentinel: use
+    cfg.sla_grace_h).
+    """
     arrival = jnp.asarray(arrival, jnp.float32)
     duration = jnp.asarray(duration, jnp.float32)
     cores = jnp.asarray(cores, jnp.float32)
@@ -129,9 +152,19 @@ def make_task_table(arrival, duration, cores, gpus=None, cpu_util=None,
                 else jnp.asarray(cpu_util, jnp.float32))
     gpu_util = (jnp.where(gpus > 0, 1.0, 0.0).astype(jnp.float32) if gpu_util is None
                 else jnp.asarray(gpu_util, jnp.float32))
+    job_class = (jnp.zeros(t, jnp.int32) if job_class is None
+                 else jnp.asarray(job_class, jnp.int32))
+    priority = (job_class if priority is None
+                else jnp.asarray(priority, jnp.int32))
+    shiftable = (job_class != JOB_INTERACTIVE if shiftable is None
+                 else jnp.asarray(shiftable, bool))
+    sla_grace = (jnp.full(t, -1.0, jnp.float32) if sla_grace is None
+                 else jnp.asarray(sla_grace, jnp.float32))
     order = jnp.argsort(arrival)
     arrival, duration, cores = arrival[order], duration[order], cores[order]
     gpus, cpu_util, gpu_util = gpus[order], cpu_util[order], gpu_util[order]
+    job_class, priority = job_class[order], priority[order]
+    shiftable, sla_grace = shiftable[order], sla_grace[order]
     inf = jnp.full(t, _INF)
     return TaskTable(
         arrival=arrival, duration=duration, remaining=duration,
@@ -140,7 +173,56 @@ def make_task_table(arrival, duration, cores, gpus=None, cpu_util=None,
         status=jnp.where(jnp.isfinite(arrival), PENDING, INVALID).astype(jnp.int32),
         host=jnp.full(t, -1, jnp.int32), first_start=inf, finish=inf,
         lost_work=jnp.zeros(t, jnp.float32),
+        job_class=job_class, priority=priority, shiftable=shiftable,
+        sla_grace=sla_grace,
     )
+
+
+def with_interactive_frac(tasks: TaskTable, frac, grace_h,
+                          seed: int = 0) -> TaskTable:
+    """Re-type a `frac` share of tasks as interactive inference.
+
+    Backs the `interactive_frac` dyn key (core/grid.py): `frac` may be a
+    TRACED scalar, so a scenario grid can sweep the interactive share inside
+    one compiled program.  Each task draws a fixed uniform (from `seed`, NOT
+    from `frac`), and tasks with u < frac flip to JOB_INTERACTIVE — top
+    priority, non-shiftable, `grace_h` SLA grace, and the interactive power
+    profile (core/power.py class tables).  Fixing the per-task draws makes
+    the selection nested across frac levels: raising frac only ADDS
+    interactive tasks.  frac == 0.0 leaves every column's values unchanged.
+    """
+    from .power import class_utilization  # late: power imports nothing back
+    u = jax.random.uniform(jax.random.fold_in(jax.random.PRNGKey(seed), 7),
+                           (tasks.n,))
+    inter = (u < frac) & (tasks.status != INVALID)
+    cls = jnp.where(inter, JOB_INTERACTIVE, tasks.job_class).astype(jnp.int32)
+    cpu_c, gpu_c = class_utilization(cls)
+    return tasks._replace(
+        job_class=cls,
+        priority=jnp.where(inter, JOB_INTERACTIVE,
+                           tasks.priority).astype(jnp.int32),
+        shiftable=tasks.shiftable & ~inter,
+        sla_grace=jnp.where(inter, jnp.float32(grace_h), tasks.sla_grace),
+        cpu_util=jnp.where(inter, cpu_c, tasks.cpu_util),
+        gpu_util=jnp.where(inter, jnp.where(tasks.gpus > 0, gpu_c, 0.0),
+                           tasks.gpu_util),
+    )
+
+
+def retime_task_table(tasks: TaskTable, arrival) -> TaskTable:
+    """Replace the arrival column with a pre-sorted (possibly traced) one.
+
+    Backs the `arrival_trace` dyn key (core/grid.py `tasktrace_axis`): each
+    grid point re-times the SAME task population with arrivals sampled from
+    a different traffic curve (tasktraces/synthetic.py).  Rows must already
+    be ascending — the axis constructor sorts host-side, because an argsort
+    inside the compiled cell would also have to re-pair every other column.
+    Non-finite arrivals mark the row INVALID (and vice versa), like
+    `make_task_table`.
+    """
+    arrival = jnp.asarray(arrival, jnp.float32)
+    status = jnp.where(jnp.isfinite(arrival), PENDING, INVALID)
+    return tasks._replace(arrival=arrival, status=status.astype(jnp.int32))
 
 
 def stack_task_tables(tables) -> TaskTable:
@@ -172,6 +254,10 @@ def pad_task_table(tasks: TaskTable, n: int) -> TaskTable:
         status=_pad(tasks.status, INVALID), host=_pad(tasks.host, -1),
         first_start=_pad(tasks.first_start, jnp.inf),
         finish=_pad(tasks.finish, jnp.inf), lost_work=_pad(tasks.lost_work, 0),
+        job_class=_pad(tasks.job_class, JOB_BATCH),
+        priority=_pad(tasks.priority, 0),
+        shiftable=_pad(tasks.shiftable, True),
+        sla_grace=_pad(tasks.sla_grace, -1.0),
     )
 
 

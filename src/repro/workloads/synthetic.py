@@ -20,7 +20,14 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.config import EmbodiedConfig
-from repro.core.state import HostTable, TaskTable, make_host_table, make_task_table
+from repro.core.power import JOB_CLASS_CPU_UTIL, JOB_CLASS_GPU_UTIL
+from repro.core.state import (JOB_INTERACTIVE, HostTable, TaskTable,
+                              make_host_table, make_task_table)
+
+# duration multiplier per job class (batch, training, interactive): training
+# runs are multi-hour/multi-day; interactive inference tasks are minutes-long
+# request-serving sessions.  Applied on top of the spec's ATD lognormal.
+CLASS_DURATION_SCALE = (1.0, 3.0, 0.15)
 
 
 @dataclass(frozen=True)
@@ -74,7 +81,9 @@ def _arrival_envelope(t_h: np.ndarray, spec: WorkloadSpec) -> np.ndarray:
 
 def make_workload(kind: str, scale: float = 1.0, seed: int = 0,
                   n_tasks_cap: int | None = None,
-                  dt_h: float = 0.25, horizon_days: float | None = None):
+                  dt_h: float = 0.25, horizon_days: float | None = None,
+                  class_mix: tuple[float, float, float] | None = None,
+                  interactive_grace_h: float = 0.25):
     """Returns (TaskTable, HostTable, spec, meta dict).
 
     Calibration: expected peak core demand = peak_capacity_frac * capacity.
@@ -82,6 +91,15 @@ def make_workload(kind: str, scale: float = 1.0, seed: int = 0,
     arrival rate is solved from Little's law over mean duration x mean cores.
     `horizon_days` truncates the trace horizon (arrival density is preserved
     — callers simulating d days MUST pass it or the density collapses).
+
+    class_mix: optional (batch, training, interactive) probabilities — tasks
+    get typed job classes (core.state JOB_*), per-class duration scaling
+    (CLASS_DURATION_SCALE) and power-profile utilizations
+    (core.power JOB_CLASS_*_UTIL); interactive tasks get a tight
+    `interactive_grace_h` SLA grace and arrive non-shiftable with top
+    priority (make_task_table defaults from job_class).  None (default)
+    keeps the legacy all-batch table bit-for-bit: the typed path draws from
+    its OWN rng stream, so existing seeds reproduce.
     """
     spec = SPECS[kind]
     rng = np.random.default_rng(seed)
@@ -129,10 +147,31 @@ def make_workload(kind: str, scale: float = 1.0, seed: int = 0,
     gpu_util = np.where(gpus > 0, np.clip(rng.beta(5.0, 2.0, n_tasks), 0.05, 1.0),
                         0.0)
 
-    tasks = make_task_table(arrival, duration, cores, gpus, cpu_util, gpu_util)
+    if class_mix is None:
+        tasks = make_task_table(arrival, duration, cores, gpus, cpu_util,
+                                gpu_util)
+    else:
+        mix = np.asarray(class_mix, np.float64)
+        mix = mix / mix.sum()
+        crng = np.random.default_rng(seed + 101)   # own stream: legacy draws
+        job_class = crng.choice(len(mix), n_tasks, p=mix).astype(np.int32)
+        duration = np.clip(
+            duration * np.asarray(CLASS_DURATION_SCALE)[job_class],
+            0.05, 96.0)
+        cpu_util = np.asarray(JOB_CLASS_CPU_UTIL, np.float64)[job_class]
+        gpu_util = np.where(
+            gpus > 0, np.asarray(JOB_CLASS_GPU_UTIL, np.float64)[job_class],
+            0.0)
+        sla_grace = np.where(job_class == JOB_INTERACTIVE,
+                             interactive_grace_h, -1.0)
+        tasks = make_task_table(arrival, duration, cores, gpus, cpu_util,
+                                gpu_util, job_class=job_class,
+                                sla_grace=sla_grace)
     hosts = make_host_table(n_hosts, spec.cores_per_host, spec.gpus_per_host)
     meta = {"name": kind, "n_tasks": n_tasks, "n_hosts": n_hosts,
             "capacity_cores": capacity,
             "horizon_h": horizon_h, "mean_demand_cores": mean_demand,
             "embodied": EmbodiedConfig(host_kg=spec.host_embodied_kg)}
+    if class_mix is not None:
+        meta["class_mix"] = tuple(float(m) for m in mix)
     return tasks, hosts, spec, meta

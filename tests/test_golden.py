@@ -15,9 +15,9 @@ import numpy as np
 import pytest
 
 from repro.core import (BatteryConfig, CoolingConfig, FleetSpec,
-                        PricingConfig, ShiftingConfig, SimConfig,
-                        make_host_table, make_task_table, simulate,
-                        simulate_fleet, summarize)
+                        PricingConfig, SchedulerConfig, ShiftingConfig,
+                        SimConfig, make_host_table, make_task_table,
+                        simulate, simulate_fleet, summarize)
 
 S = 96  # 1 day at dt=0.25
 
@@ -98,6 +98,27 @@ def test_golden_renewables(golden, workload, traces):
     assert float(res.pv_energy_kwh) > 0.0
     assert float(res.grid_export_kwh) > 0.0
     golden("renewables", res)
+
+
+def test_golden_typed_workload(golden, workload, traces):
+    """Pin the typed-workload subsystem: all three job classes, priority
+    scheduling, shifting with the interactive bypass, and the per-class
+    SLA/latency metrics the slo_tradeoff study reads."""
+    rng = np.random.default_rng(42)
+    n = 24
+    tasks = make_task_table(
+        np.sort(rng.uniform(0.0, 8.0, n)),
+        rng.uniform(0.5, 4.0, n),
+        rng.integers(1, 3, n).astype(float),
+        job_class=np.array([0, 1, 2] * (n // 3), np.int32),
+        sla_grace=np.where(np.arange(n) % 3 == 2, 0.25, -1.0))
+    hosts = make_host_table(2, 4)  # scarce: classes actually contend
+    cfg = SimConfig(n_steps=S,
+                    shifting=ShiftingConfig(enabled=True, max_delay_h=12.0),
+                    scheduler=SchedulerConfig(priority_levels=3))
+    res = summarize(simulate(tasks, hosts, traces[0], cfg)[0], cfg)
+    assert np.all(np.asarray(res.class_n_started) > 0)
+    golden("typed_workload", res)
 
 
 def test_golden_fleet(golden, workload, traces):

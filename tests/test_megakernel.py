@@ -23,8 +23,8 @@ import pytest
 
 from repro.core import (BatteryConfig, CoolingConfig, PricingConfig,
                         RenewableConfig, ScenarioGrid, SchedulerConfig,
-                        SimConfig, build_step_inputs, dyn_axis,
-                        make_host_table, make_task_table, simulate,
+                        ShiftingConfig, SimConfig, build_step_inputs,
+                        dyn_axis, make_host_table, make_task_table, simulate,
                         summarize, sweep_grid, trace_axis, weather_axis)
 from repro.core.engine import BACKENDS, facility_totals_from_flows
 from repro.core.scheduler import _first_k_indices, _per_host_sum
@@ -151,6 +151,32 @@ def test_megakernel_series_and_conservation():
                 np.testing.assert_allclose(
                     v, ref_flow[k], rtol=1e-4, atol=1e-3 * scale,
                     err_msg=f"series {k} diverges from stage pipeline")
+
+
+def test_megakernel_matches_stage_pipeline_typed_workload():
+    """Typed-workload differential: all three job classes, priority
+    scheduling, shifting with stop/resume and the interactive bypass — the
+    demand scan is shared code, but the new TaskTable columns must thread
+    through the fused facility chain unchanged."""
+    rng = np.random.default_rng(33)
+    n = 18
+    tasks = make_task_table(np.sort(rng.uniform(0.0, 8.0, n)),
+                            rng.uniform(0.5, 4.0, n),
+                            rng.integers(1, 3, n).astype(float),
+                            job_class=rng.integers(0, 3, n).astype(np.int32),
+                            sla_grace=rng.choice([-1.0, 0.25], n))
+    cfg = _cfg(True, True, True, policy="blended",
+               shifting=ShiftingConfig(enabled=True, stop_running=True,
+                                       max_delay_h=12.0),
+               scheduler=SchedulerConfig(priority_levels=3))
+    results = {}
+    for backend in BACKENDS:
+        final, _ = simulate(tasks, HOSTS, CI, cfg.replace(backend=backend),
+                            dyn=_dyn(cfg))
+        results[backend] = summarize(final, cfg)
+    _assert_results_close(results["megakernel"], results["stage-pipeline"])
+    # the typed run actually exercised every class
+    assert np.all(np.asarray(results["megakernel"].class_n_started) > 0)
 
 
 def test_backend_validation():

@@ -1,0 +1,197 @@
+"""Simulation-clock and interval-boundary regression tests (bugfix sweep).
+
+The engine's clock was once ACCUMULATED (`t += dt_h` each step).  At dt
+values not exactly representable in f32 (0.1 h = 6 min), thousands of f32
+additions drift — ~0.15 h over 12 000 steps — silently shifting every
+time-derived quantity (SLA deadlines, shifting overdue releases, repair
+times).  `t` is now DERIVED from the step index (`engine._advance_clock`:
+`t = step * dt_h`, one rounding); interval boundaries (checkpointing,
+billing windows) compare INTEGER step counts.  These tests fail on the
+accumulating/float-boundary forms.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (RUNNING, FailureConfig, SimConfig, make_host_table,
+                        make_task_table, simulate)
+from repro.core.failures import (checkpoint_interval_steps, checkpoint_tick,
+                                 interrupt_tasks)
+from repro.core.pricing import pricing_step
+from repro.core.scheduler import free_capacity, host_utilization
+
+DT_INEXACT = 0.1          # not representable in binary float
+N_LONG = 12_000           # 50 simulated days at 6-min steps
+
+
+def _tiny(n_tasks=4, dur=1.0):
+    return make_task_table(np.linspace(0.0, 1.0, n_tasks),
+                           np.full(n_tasks, dur), np.ones(n_tasks))
+
+
+class TestClockExactness:
+    def test_long_horizon_clock_is_exact(self):
+        """final.t == n_steps * dt bit-for-bit at an inexact dt.
+
+        The accumulating clock lands ~0.146 h short of 1200 h here; the
+        derived clock's only error is the single product rounding."""
+        cfg = SimConfig(n_steps=N_LONG, dt_h=DT_INEXACT)
+        tasks = _tiny()
+        hosts = make_host_table(2, 4)
+        trace = jnp.full((N_LONG,), 100.0, jnp.float32)
+        final, _ = jax.jit(lambda t, h, tr: simulate(t, h, tr, cfg))(
+            tasks, hosts, trace)
+        expect = np.float32(N_LONG) * np.float32(DT_INEXACT)
+        assert float(final.t) == float(expect)
+        assert abs(float(final.t) - N_LONG * DT_INEXACT) < 1e-3
+        assert int(final.step) == N_LONG
+
+    def test_accumulating_form_violates_the_bound(self):
+        """The drift the engine test above guards against is real: the old
+        `t += dt` form breaks the same 1e-3 tolerance.  If this stops
+        failing-for-the-float-form, the regression test has lost its
+        teeth — tighten it."""
+        t = np.float32(0.0)
+        for _ in range(N_LONG):
+            t = np.float32(t + np.float32(DT_INEXACT))
+        assert abs(float(t) - N_LONG * DT_INEXACT) > 1e-1
+
+
+class TestCheckpointBoundaries:
+    def test_interval_steps(self):
+        cfg = FailureConfig(checkpoint_interval_h=1.0)
+        assert checkpoint_interval_steps(cfg, 0.25) == 4
+        assert checkpoint_interval_steps(cfg, 0.1) == 10
+        # sub-step intervals clamp to every step, never 0 (mod-0 traps)
+        assert checkpoint_interval_steps(cfg, 2.0) == 1
+
+    def test_exact_boundary_count_long_horizon(self):
+        """Snapshot fires exactly n_steps // interval_steps times (step 0
+        excluded only by there being nothing RUNNING yet in the engine;
+        here status is RUNNING throughout so step 0 fires too)."""
+        cfg = FailureConfig(enabled=True, checkpointing=True,
+                            checkpoint_interval_h=1.0)
+        isteps = checkpoint_interval_steps(cfg, DT_INEXACT)
+        tasks = _tiny(1, dur=2000.0)._replace(
+            status=jnp.asarray([RUNNING], jnp.int32),
+            host=jnp.asarray([0], jnp.int32))
+
+        def body(carry, step):
+            tk, fired = carry
+            tk = tk._replace(
+                remaining=jnp.full((1,), 2000.0, jnp.float32) - step)
+            out = checkpoint_tick(tk, step, isteps, cfg)
+            fired = fired + (out.ckpt_remaining != tk.ckpt_remaining).any()
+            return (out, fired), None
+
+        (_, fired), _ = jax.lax.scan(
+            body, (tasks, jnp.int32(0)), jnp.arange(N_LONG))
+        # fires at steps 10, 20, ... (step 0's snapshot equals the initial
+        # ckpt_remaining, so it produces no observable change)
+        assert int(fired) == (N_LONG - 1) // isteps
+
+    def test_step_form_matches_float_form_at_exact_divisor(self):
+        """Differential: with dt an exact divisor of the interval AND an
+        exact clock, the integer boundary equals the floor-crossing float
+        boundary — the rewrite changes representation, not semantics."""
+        dt, interval = 0.25, 1.0
+        isteps = checkpoint_interval_steps(
+            FailureConfig(checkpoint_interval_h=interval), dt)
+        steps = np.arange(1, 5000)
+        step_form = steps % isteps == 0
+        t = steps * dt  # f64-exact clock
+        float_form = np.floor(t / interval) != np.floor((t - dt) / interval)
+        np.testing.assert_array_equal(step_form, float_form)
+
+    def test_float_form_misfires_on_drifted_clock(self):
+        """The bug the rewrite removes: feed the float form the f32-
+        accumulated clock and boundaries fire on the WRONG steps (the
+        drift delays floor crossings by a step long before the total
+        count diverges)."""
+        dt, interval = DT_INEXACT, 1.0
+        isteps = checkpoint_interval_steps(
+            FailureConfig(checkpoint_interval_h=interval), dt)
+        t = np.cumsum(np.full(N_LONG, dt, np.float32), dtype=np.float32)
+        float_form = (np.floor(t[1:] / interval)
+                      != np.floor(t[:-1] / interval))
+        step_form = np.arange(2, N_LONG + 1) % isteps == 0
+        misfired = int(np.sum(float_form != step_form))
+        assert misfired > 0
+
+
+class TestPricingWindow:
+    def test_window_close_count_matches_float_reference(self):
+        """The billing window (already step-based) closes exactly as often
+        as an exact-arithmetic floor-crossing reference says it should,
+        at an inexact dt over a long horizon."""
+        dt, window_h = DT_INEXACT, 24.0
+        ws = max(int(round(window_h / dt)), 1)
+
+        def body(carry, step):
+            e, d, p = carry
+            e, d, p = pricing_step(e, d, p, jnp.float32(1.0),
+                                   jnp.float32(0.0), step, dt, ws,
+                                   demand_charge_per_kw=1.0)
+            return (e, d, p), None
+
+        (_, demand, _), _ = jax.lax.scan(
+            body, (jnp.float32(0.0),) * 3, jnp.arange(N_LONG))
+        t = np.arange(1, N_LONG) * dt  # exact clock
+        expect = int(np.sum(np.floor(t / window_h)
+                            != np.floor((t - dt) / window_h)))
+        # peak is pinned at 1 kW and the charge at 1 $/kW, so the demand
+        # charge IS the close count
+        assert int(round(float(demand))) == expect
+
+
+class TestNegativeHostSegments:
+    def test_corrupted_row_not_billed_to_host_zero(self):
+        """A RUNNING row carrying host == -1 (the transient interrupt
+        encoding) must not consume host 0's capacity via the index clip."""
+        tasks = _tiny(2)._replace(
+            status=jnp.asarray([RUNNING, RUNNING], jnp.int32),
+            host=jnp.asarray([-1, 0], jnp.int32))
+        hosts = make_host_table(2, 4)
+        free_c, free_g = free_capacity(tasks, hosts)
+        np.testing.assert_allclose(np.asarray(free_c), [3.0, 4.0])
+        cpu_u, _ = host_utilization(tasks, hosts)
+        assert float(cpu_u[0]) == pytest.approx(
+            float(tasks.cores[1] * tasks.cpu_util[1]) / 4.0)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_interrupt_only_releases_capacity(self, seed):
+        """Property: interrupt_tasks rewrites host to -1 on RUNNING rows.
+        Free capacity recomputed immediately after must (a) not decrease
+        anywhere, (b) return the failed host to fully free — under the
+        pre-fix clip-to-host-0 billing, the requeued rows would instead
+        LOWER host 0's free capacity."""
+        rng = np.random.default_rng(seed)
+        n = 32
+        tasks = make_task_table(np.zeros(n), np.full(n, 10.0),
+                                rng.integers(1, 4, n))
+        hosts = make_host_table(4, 8)
+        host = rng.integers(0, 4, n).astype(np.int32)
+        tasks = tasks._replace(
+            status=jnp.full((n,), RUNNING, jnp.int32),
+            host=jnp.asarray(host))
+        free_before, _ = free_capacity(tasks, hosts)
+        down = np.zeros(4, bool)
+        down[rng.integers(0, 4)] = True
+        out, _ = interrupt_tasks(tasks, jnp.asarray(down),
+                                 FailureConfig(enabled=True))
+        free_c, free_g = free_capacity(out, hosts)
+        assert np.all(np.asarray(free_c) >= np.asarray(free_before) - 1e-6)
+        np.testing.assert_allclose(np.asarray(free_c)[down], 8.0)
+        assert np.all(np.asarray(free_g) >= -1e-6)
+
+    def test_engine_overcommit_stays_zero_under_failures(self):
+        """End-to-end: a failure-heavy run never overcommits a host."""
+        tasks = _tiny(48, dur=3.0)
+        hosts = make_host_table(3, 4)
+        cfg = SimConfig(n_steps=600, dt_h=0.25, collect_series=True,
+                        failures=FailureConfig(enabled=True, mtbf_h=6.0,
+                                               repair_h=2.0))
+        _, series = jax.jit(lambda t, h, tr: simulate(t, h, tr, cfg))(
+            tasks, hosts, jnp.full((600,), 100.0, jnp.float32))
+        assert float(jnp.max(series["max_overcommit"])) <= 1e-5
