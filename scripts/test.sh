@@ -15,7 +15,7 @@ if [[ "${1:-}" == "--fast" ]]; then
     tests/test_fleet.py tests/test_pricing.py tests/test_pricing_properties.py \
     tests/test_renewables.py tests/test_energy_ledger.py \
     tests/test_golden.py tests/test_kernels.py tests/test_megakernel.py \
-    tests/test_telemetry.py tests/test_simclock.py \
+    tests/test_resilience.py tests/test_telemetry.py tests/test_simclock.py \
     tests/test_workloads_slo.py "$@"
 fi
 exec python -m pytest -x -q "$@"

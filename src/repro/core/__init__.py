@@ -4,8 +4,8 @@ from .battery import (battery_flow_step, dispatch_decision,
 from . import telemetry
 from .config import (BatteryConfig, CoolingConfig, EmbodiedConfig,
                      FailureConfig, PowerModelConfig, PricingConfig,
-                     ProbeConfig, RenewableConfig, SchedulerConfig,
-                     ShiftingConfig, SimConfig, techniques)
+                     ProbeConfig, RenewableConfig, ResilienceConfig,
+                     SchedulerConfig, ShiftingConfig, SimConfig, techniques)
 from .engine import (BACKENDS, EnergyFlow, StepInputs, build_step_fn,
                      build_step_inputs, default_pipeline,
                      facility_totals_from_flows, init_energy_flow, simulate)
@@ -19,6 +19,8 @@ from .pricing import (export_revenue_step, flat_energy_cost,
 from .quant import (STORES, QuantizedTrace, dequantize_trace,
                     maybe_dequantize, quantize_trace)
 from .renewables import net_load_split, pv_power_kw, split_surplus
+from .resilience import (cross_region_spill, facility_failure_series,
+                         host_rank, inlet_proxy_c, next_throttle)
 from .shifting import forward_window_quantile, forward_window_quantiles
 from .metrics import (SimResult, carbon_reduction_pct, fleet_totals,
                       summarize)
@@ -39,7 +41,8 @@ from .sweep import (lower_sweep, sharded_sweep, sweep_battery_sizes,
 __all__ = [
     "BatteryConfig", "CoolingConfig", "EmbodiedConfig", "FailureConfig",
     "PowerModelConfig", "PricingConfig", "ProbeConfig", "RenewableConfig",
-    "SchedulerConfig", "ShiftingConfig", "SimConfig", "telemetry",
+    "ResilienceConfig", "SchedulerConfig", "ShiftingConfig", "SimConfig",
+    "telemetry",
     "techniques", "BACKENDS", "EnergyFlow", "StepInputs", "build_step_fn",
     "build_step_inputs", "default_pipeline", "facility_totals_from_flows",
     "init_energy_flow", "simulate",
@@ -53,6 +56,8 @@ __all__ = [
     "surplus_aware_dispatch", "export_revenue_step", "flat_energy_cost",
     "precompute_price_signals", "pricing_step", "settle_demand_charge",
     "net_load_split", "pv_power_kw", "split_surplus",
+    "cross_region_spill", "facility_failure_series", "host_rank",
+    "inlet_proxy_c", "next_throttle",
     "weather_axis", "SimResult", "carbon_reduction_pct", "fleet_totals",
     "summarize", "spatial_assign", "spatial_assign_online",
     "spatial_assign_reference", "split_by_region", "chiller_cop",

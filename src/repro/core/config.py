@@ -80,6 +80,61 @@ class FailureConfig:
 
 
 @dataclass(frozen=True)
+class ResilienceConfig:
+    """Closed-loop resilience (core/resilience.py).
+
+    Disabled by default: the engine then carries no throttle state, samples
+    no facility failure processes, and reproduces the open-loop pipeline
+    bit-for-bit.  Enabled, three loops close:
+
+      * facility failure injection — memoryless chiller-derate and PDU-cap
+        processes (MTBF/repair, like FailureConfig's host model) sampled
+        from the run seed as exogenous per-step series.  While the chiller
+        is derated, `chiller_derate` scales the achievable COP and the
+        economizer availability (core/thermal.py); while a PDU is derated,
+        rack power is clamped to `pdu_cap_kw` (dyn-sweepable).
+      * thermal throttling feedback — an inlet-temperature proxy from
+        wet-bulb + IT load (divided by the chiller derate: degraded cooling
+        raises inlet temperature).  When it exceeds `throttle_inlet_c`
+        (dyn-sweepable), host speed/utilization is capped at
+        `throttle_factor` on the NEXT tick — the one-step delay keeps the
+        recurrence causal, which is what lets the megakernel's facility
+        half stay vectorized over the horizon.
+      * failure-reactive placement — the scheduler prefers hosts that are
+        up and longest since their last repair (`reactive_placement`), and
+        `core/fleet.simulate_fleet` can spill interrupted tasks across
+        regions each step (`spill_interrupted`).
+
+    `heat_hazard_mult` couples the loops into CORRELATED failures: while
+    the chiller is derated, the host failure hazard is multiplied by
+    `1 + heat_hazard_mult * (1 - derate)` (heat kills hosts).  The dyn key
+    `failure_hazard_scale` scales BOTH the host and facility hazards
+    (0 = a healthy datacenter, inside one compiled grid).
+    """
+    enabled: bool = False
+    # facility failure processes (memoryless MTBF + deterministic repair)
+    chiller_mtbf_h: float = 500.0
+    chiller_repair_h: float = 12.0
+    chiller_derate: float = 0.5     # COP / economizer availability when derated
+    pdu_mtbf_h: float = 1000.0
+    pdu_repair_h: float = 4.0
+    pdu_cap_kw: float = float("inf")  # rack-power clamp while PDU-derated
+    # thermal throttling feedback (RackMind's inlet-trip rule, one-step delay)
+    throttle_inlet_c: float = 32.0
+    throttle_factor: float = 0.5    # host speed/utilization cap while tripped
+    inlet_approach_c: float = 8.0   # inlet proxy: wet_bulb + approach + load
+    inlet_load_c_per_kw: float = 0.02  # degC of inlet rise per kW of IT load
+    # correlated failures: extra host hazard while the chiller is derated
+    heat_hazard_mult: float = 0.0
+    # failure-reactive placement (core/scheduler.py host re-ranking)
+    reactive_placement: bool = True
+    # fleet-level per-step cross-region spill of interrupted tasks
+    # (core/fleet.simulate_fleet; needs `enabled` too)
+    spill_interrupted: bool = False
+    max_spills_per_step: int = 4
+
+
+@dataclass(frozen=True)
 class EmbodiedConfig:
     host_kg: float = 1022.0         # Surf default (Table II)
     host_lifetime_years: float = 5.0
@@ -214,6 +269,7 @@ class SimConfig:
     embodied: EmbodiedConfig = EmbodiedConfig()
     scheduler: SchedulerConfig = SchedulerConfig()
     probes: ProbeConfig = ProbeConfig()
+    resilience: ResilienceConfig = ResilienceConfig()
     sla_grace_h: float = 24.0       # task meets SLA if done within 24h of expected
     # SLA grace applied to tasks re-typed interactive by the
     # `interactive_frac` dyn key (state.with_interactive_frac); tasks built

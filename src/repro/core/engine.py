@@ -104,6 +104,7 @@ from . import carbon as carbon_mod
 from . import failures as failures_mod
 from . import pricing as pricing_mod
 from . import renewables as renewables_mod
+from . import resilience as resilience_mod
 from . import scaling as scaling_mod
 from . import scheduler as scheduler_mod
 from . import shifting as shifting_mod
@@ -150,6 +151,11 @@ class StepInputs(NamedTuple):
     price_lo: jax.Array        # f32[S] forward charge-quantile band
     price_hi: jax.Array        # f32[S] forward discharge-quantile band
     pv_cf: jax.Array           # f32[S] solar capacity factor in [0, 1]
+    # facility failure injection (core/resilience.py): both series depend
+    # only on the seed, never on simulation state, so they are exogenous
+    # inputs — identical for both backends, vectorizable in the megakernel
+    chiller_derate: jax.Array  # f32[S] COP/economizer scale (1 = healthy)
+    pdu_cap_kw: jax.Array      # f32[S] rack-power clamp (+inf = healthy)
 
 
 def build_step_inputs(ci_trace, cfg: SimConfig,
@@ -210,9 +216,21 @@ def build_step_inputs(ci_trace, cfg: SimConfig,
                 "False: the PV trace would be silently ignored — enable the "
                 "renewables subsystem (core/renewables.py)")
         cf = jnp.zeros_like(ci)
+    if cfg.resilience.enabled:
+        derate, pdu_down = resilience_mod.facility_failure_series(
+            dyn.get("seed", cfg.seed), cfg.n_steps, cfg.dt_h, cfg.resilience,
+            hazard_scale=dyn.get("failure_hazard_scale"))
+        cap = dyn.get("pdu_cap_kw")
+        cap = (jnp.float32(cfg.resilience.pdu_cap_kw) if cap is None
+               else jnp.asarray(cap, jnp.float32))
+        pdu_cap = jnp.where(pdu_down, cap, jnp.float32(jnp.inf))
+    else:  # inert placeholders: no stage reads them, so XLA drops them
+        derate = jnp.ones_like(ci)
+        pdu_cap = jnp.full_like(ci, jnp.inf)
     return StepInputs(ci=ci, batt_threshold=bt, ci_rising=rising,
                       shift_threshold=st, wet_bulb_c=wb, price=pr,
-                      price_lo=plo, price_hi=phi, pv_cf=cf)
+                      price_lo=plo, price_hi=phi, pv_cf=cf,
+                      chiller_derate=derate, pdu_cap_kw=pdu_cap)
 
 
 # --------------------------------------------------------------------------
@@ -220,9 +238,21 @@ def build_step_inputs(ci_trace, cfg: SimConfig,
 # --------------------------------------------------------------------------
 
 def stage_failures(cfg: SimConfig) -> Stage:
+    resil = cfg.resilience.enabled
+    heat_mult = cfg.resilience.heat_hazard_mult
+
     def fn(state: SimState, ctx: dict):
+        hazard = None
+        if resil:  # failure_hazard_scale dyn + heat-correlated failures
+            hz = ctx.get("failure_hazard_scale")
+            hazard = (jnp.float32(1.0) if hz is None
+                      else jnp.asarray(hz, jnp.float32))
+            if heat_mult > 0.0:  # a derated chiller cooks the hosts
+                hazard = hazard * (1.0 + heat_mult
+                                   * (1.0 - ctx["chiller_derate"]))
         rng, hosts, newly_down = failures_mod.step_host_failures(
-            state.rng, state.hosts, state.t, cfg.dt_h, cfg.failures)
+            state.rng, state.hosts, state.t, cfg.dt_h, cfg.failures,
+            hazard=hazard)
         tasks, n_int = failures_mod.interrupt_tasks(state.tasks, newly_down,
                                                     cfg.failures)
         metrics = state.metrics._replace(
@@ -254,13 +284,18 @@ def stage_task_stopper(cfg: SimConfig) -> Stage:
         tasks = tasks._replace(
             status=jnp.where(stop, PENDING, tasks.status).astype(jnp.int32),
             host=jnp.where(stop, -1, tasks.host).astype(jnp.int32))
+        # graceful pauses are NOT failure interrupts: they roll back no work
+        # and cost no checkpoint restore, so they get their own counter —
+        # conflating them into n_interrupts double-counted resilience stats
         metrics = state.metrics._replace(
-            n_interrupts=state.metrics.n_interrupts + n)
+            n_stops=state.metrics.n_stops + n)
         return state._replace(tasks=tasks, metrics=metrics), ctx
     return fn
 
 
 def stage_scheduler(cfg: SimConfig) -> Stage:
+    reactive = cfg.resilience.enabled and cfg.resilience.reactive_placement
+
     def fn(state: SimState, ctx: dict):
         shift_ok = shifting_mod.start_allowed(
             ctx["ci"], ctx["shift_threshold"], state.t, state.tasks.arrival,
@@ -268,9 +303,12 @@ def stage_scheduler(cfg: SimConfig) -> Stage:
         n_delayed = jnp.sum(
             ((state.tasks.status == PENDING) & (state.tasks.arrival <= state.t)
              & ~shift_ok).astype(jnp.float32))
+        order = (resilience_mod.host_rank(state.hosts, state.t)
+                 if reactive else None)
         tasks = scheduler_mod.schedule_step(state.tasks, state.hosts, state.t,
                                             shift_ok, cfg.scheduler,
-                                            slots=ctx.get("slots_per_step"))
+                                            slots=ctx.get("slots_per_step"),
+                                            host_order=order)
         metrics = state.metrics._replace(
             n_shift_delays=state.metrics.n_shift_delays + n_delayed)
         return state._replace(tasks=tasks, metrics=metrics), ctx
@@ -278,12 +316,16 @@ def stage_scheduler(cfg: SimConfig) -> Stage:
 
 
 def stage_progress(cfg: SimConfig) -> Stage:
+    resil = cfg.resilience.enabled
+
     def fn(state: SimState, ctx: dict):
         tasks = state.tasks
         running = tasks.status == RUNNING
         # straggler hosts advance work at speed < 1 (host of each task)
         h = state.hosts.speed.shape[0]
         speed = state.hosts.speed[jnp.clip(tasks.host, 0, h - 1)]
+        if resil:  # thermal throttle computed from the PREVIOUS step
+            speed = speed * state.throttle
         advance = cfg.dt_h * jnp.where(running, speed, 1.0)
         done_now = running & (tasks.remaining <= advance)
         finish = jnp.where(done_now,
@@ -302,17 +344,29 @@ def stage_progress(cfg: SimConfig) -> Stage:
 
 def stage_power(cfg: SimConfig) -> Stage:
     """Writes `flow.it_kw` (and provisionally `flow.grid_import_kw`: with no
-    later facility stage, the IT draw IS the metered import)."""
+    later facility stage, the IT draw IS the metered import).
+
+    With resilience on, the previous step's thermal throttle caps host
+    utilization and the PDU failure process clamps the summed IT draw
+    (`flow.it_kw` is the CAPPED value every downstream consumer meters;
+    the raw demand is kept in ctx for the next-throttle rule)."""
+    resil = cfg.resilience.enabled
+
     def fn(state: SimState, ctx: dict):
         cpu_u, gpu_u = scheduler_mod.host_utilization(state.tasks, state.hosts)
+        if resil:  # thermal throttle computed from the PREVIOUS step
+            cpu_u = cpu_u * state.throttle
+            gpu_u = gpu_u * state.throttle
         on = (state.hosts.active & state.hosts.up).astype(jnp.float32)
         if cfg.collect_series:  # capacity-invariant probe for tests/debugging
             free_c, free_g = scheduler_mod.free_capacity(state.tasks, state.hosts)
             ctx["max_overcommit"] = jnp.maximum(jnp.max(-free_c), jnp.max(-free_g))
         if cfg.use_pallas:
             from repro.kernels import ops as pc_ops
-            if cfg.cooling.enabled:
-                # one VMEM pass: per-host power + IT sum + cooling + water
+            if cfg.cooling.enabled and not resil:
+                # one VMEM pass: per-host power + IT sum + cooling + water.
+                # (not with resilience: the PDU clamp sits between the IT sum
+                # and the cooling model, splitting the fused op in two)
                 sp = ctx.get("cooling_setpoint", cfg.cooling.setpoint_c)
                 p, it_kw, cool_kw, water = pc_ops.facility_power(
                     cpu_u, gpu_u, state.hosts.n_gpus, on, ctx["wet_bulb_c"],
@@ -329,6 +383,9 @@ def stage_power(cfg: SimConfig) -> Stage:
             p = host_power_kw(cpu_u, gpu_u, state.hosts.n_gpus, on,
                               cfg.cpu_power, cfg.gpu_power)
         it_kw = jnp.sum(p)
+        if resil:
+            ctx["raw_it_kw"] = it_kw  # pre-clamp demand (next-throttle rule)
+            it_kw = jnp.minimum(it_kw, ctx["pdu_cap_kw"])
         flow = ctx["flow"]._replace(it_kw=it_kw, grid_import_kw=it_kw)
         ctx = dict(ctx, flow=flow, host_power_kw=p,
                    host_cpu_util=cpu_u, host_gpu_util=gpu_u)
@@ -348,22 +405,28 @@ def stage_cooling(cfg: SimConfig) -> Stage:
     `metrics.heat_reuse` and stops evaporating water (dry heat exchangers).
     """
     reuse = cfg.cooling.heat_reuse_fraction
+    resil = cfg.resilience.enabled
 
     def fn(state: SimState, ctx: dict):
         flow = ctx["flow"]
         it_kw = flow.it_kw
+        # None (not 1.0) when resilience is off: the derated expressions
+        # reassociate and would not be bitwise-identical to the healthy path
+        derate = ctx["chiller_derate"] if resil else None
         if "fused_cooling_kw" in ctx:   # Pallas path: computed in stage_power
             cooling_kw = ctx["fused_cooling_kw"]
             water_l_per_h = ctx["fused_water_l_per_h"]
         else:
             cooling_kw, water_l_per_h = thermal_mod.cooling_step(
                 it_kw, ctx["wet_bulb_c"], cfg.cooling,
-                setpoint_c=ctx.get("cooling_setpoint"))
+                setpoint_c=ctx.get("cooling_setpoint"),
+                chiller_derate=derate)
         m = state.metrics
         if reuse > 0.0:
             heat_kw = thermal_mod.reclaimable_heat_kw(
                 it_kw, cooling_kw, ctx["wet_bulb_c"], cfg.cooling,
-                setpoint_c=ctx.get("cooling_setpoint"))
+                setpoint_c=ctx.get("cooling_setpoint"),
+                chiller_derate=derate)
             water_l_per_h = water_l_per_h * (1.0 - reuse)
             m = m._replace(heat_reuse=m.heat_reuse + reuse * heat_kw * cfg.dt_h)
         metrics = m._replace(
@@ -525,6 +588,31 @@ def stage_carbon(cfg: SimConfig) -> Stage:
     return fn
 
 
+def stage_resilience(cfg: SimConfig) -> Stage:
+    """Close the thermal loop: from this step's SETTLED facility state,
+    compute the throttle the NEXT step will run under (one-step delay =
+    causal recurrence; see core/resilience.next_throttle), and account the
+    resilience metrics (hours throttled / hours with facility equipment
+    derated).  Runs last so it sees the capped `flow.it_kw`."""
+    rcfg = cfg.resilience
+    dt = jnp.float32(cfg.dt_h)
+
+    def fn(state: SimState, ctx: dict):
+        flow: EnergyFlow = ctx["flow"]
+        derate, cap = ctx["chiller_derate"], ctx["pdu_cap_kw"]
+        m = state.metrics
+        m = m._replace(
+            throttled_h=m.throttled_h
+            + dt * (state.throttle < 1.0).astype(jnp.float32),
+            derate_h=m.derate_h
+            + dt * ((derate < 1.0) | jnp.isfinite(cap)).astype(jnp.float32))
+        throttle = resilience_mod.next_throttle(
+            flow.it_kw, ctx["raw_it_kw"], ctx["wet_bulb_c"], derate, cap,
+            rcfg, threshold_c=ctx.get("throttle_inlet_c"))
+        return state._replace(metrics=m, throttle=throttle), ctx
+    return fn
+
+
 def default_pipeline(cfg: SimConfig) -> list[Stage]:
     """Technique composition: each enabled technique contributes its stage.
 
@@ -533,9 +621,14 @@ def default_pipeline(cfg: SimConfig) -> list[Stage]:
     """
     stages: list[Stage] = []
     if cfg.failures.enabled:
-        stages.append(stage_failures(cfg))
+        # checkpoint BEFORE failures: the boundary snapshot at time t must
+        # capture all work completed by t, including the previous step's
+        # progress — otherwise a failure in the same step rolls back past
+        # its own checkpoint and per-step checkpointing still loses work
+        # (tests/test_resilience.py pins lost_work == 0 at interval == dt)
         if cfg.failures.checkpointing:
             stages.append(stage_checkpoint(cfg))
+        stages.append(stage_failures(cfg))
     if cfg.shifting.enabled and cfg.shifting.stop_running:
         stages.append(stage_task_stopper(cfg))
     stages += [stage_scheduler(cfg), stage_progress(cfg), stage_power(cfg)]
@@ -550,6 +643,8 @@ def default_pipeline(cfg: SimConfig) -> list[Stage]:
     if cfg.pricing.enabled:
         stages.append(stage_pricing(cfg))
     stages.append(stage_carbon(cfg))
+    if cfg.resilience.enabled:
+        stages.append(stage_resilience(cfg))
     return stages
 
 
@@ -613,7 +708,10 @@ def build_step_fn(cfg: SimConfig, stages: Sequence[Stage] | None = None,
                "shift_threshold": inputs.shift_threshold,
                "wet_bulb_c": inputs.wet_bulb_c, "price": inputs.price,
                "price_lo": inputs.price_lo, "price_hi": inputs.price_hi,
-               "pv_cf": inputs.pv_cf, "flow": init_energy_flow(),
+               "pv_cf": inputs.pv_cf,
+               "chiller_derate": inputs.chiller_derate,
+               "pdu_cap_kw": inputs.pdu_cap_kw,
+               "flow": init_energy_flow(),
                **dyn}
         for stage in stages:
             with telemetry_mod.stage_scope(_stage_label(stage)):
@@ -650,26 +748,39 @@ def _build_demand_step(cfg: SimConfig, dyn: dict):
     stages (failures -> stopper -> scheduler -> progress) plus an IT-power
     probe.  Emits per-step `it_kw` — the only demand->facility coupling —
     and, under `collect_series`, the capacity/occupancy probes the
-    stage-pipeline series carry."""
+    stage-pipeline series carry.
+
+    With resilience on, the scan's xs also carry the exogenous facility
+    series (wet-bulb, chiller derate, PDU cap) and the step replicates the
+    stage pipeline's throttle recurrence exactly: previous-step throttle
+    caps utilization, the PDU clamps the IT sum, and the NEXT throttle is
+    computed from the capped draw — same formulas, same order, so the
+    emitted `it_kw[S]` matches the stage pipeline and the facility half
+    stays vectorized (it consumes it_kw and the same exogenous series)."""
     stages: list[Stage] = []
     if cfg.failures.enabled:
-        stages.append(stage_failures(cfg))
+        # checkpoint-before-failures, same as default_pipeline
         if cfg.failures.checkpointing:
             stages.append(stage_checkpoint(cfg))
+        stages.append(stage_failures(cfg))
     if cfg.shifting.enabled and cfg.shifting.stop_running:
         stages.append(stage_task_stopper(cfg))
     stages += [stage_scheduler(cfg), stage_progress(cfg)]
+    resil = cfg.resilience.enabled
+    rcfg = cfg.resilience
 
     def step(state: SimState, xs):
-        if xs is None:  # shifting off: the gate never reads ci/threshold
-            ci = st = jnp.float32(0.0)
-        else:
-            ci, st = xs
-        ctx = {"ci": ci, "shift_threshold": st, **dyn}
+        # defaults cover the xs the enabled techniques don't feed (shifting
+        # off: the gate never reads ci/threshold)
+        ctx = {"ci": jnp.float32(0.0), "shift_threshold": jnp.float32(0.0),
+               **(xs or {}), **dyn}
         for stage in stages:
             with telemetry_mod.stage_scope(_stage_label(stage)):
                 state, ctx = stage(state, ctx)
         cpu_u, gpu_u = scheduler_mod.host_utilization(state.tasks, state.hosts)
+        if resil:
+            cpu_u = cpu_u * state.throttle
+            gpu_u = gpu_u * state.throttle
         on = (state.hosts.active & state.hosts.up).astype(jnp.float32)
         if cfg.use_pallas:
             from repro.kernels import ops as pc_ops
@@ -678,11 +789,28 @@ def _build_demand_step(cfg: SimConfig, dyn: dict):
         else:
             p = host_power_kw(cpu_u, gpu_u, state.hosts.n_gpus, on,
                               cfg.cpu_power, cfg.gpu_power)
+        it_kw = jnp.sum(p)
+        if resil:  # mirror stage_power's clamp + stage_resilience's update
+            raw_it_kw = it_kw
+            it_kw = jnp.minimum(it_kw, ctx["pdu_cap_kw"])
+            dt = jnp.float32(cfg.dt_h)
+            m = state.metrics
+            m = m._replace(
+                throttled_h=m.throttled_h
+                + dt * (state.throttle < 1.0).astype(jnp.float32),
+                derate_h=m.derate_h
+                + dt * ((ctx["chiller_derate"] < 1.0)
+                        | jnp.isfinite(ctx["pdu_cap_kw"])).astype(jnp.float32))
+            throttle = resilience_mod.next_throttle(
+                it_kw, raw_it_kw, ctx["wet_bulb_c"], ctx["chiller_derate"],
+                ctx["pdu_cap_kw"], rcfg,
+                threshold_c=ctx.get("throttle_inlet_c"))
+            state = state._replace(metrics=m, throttle=throttle)
         # probe-bus queue depth samples the pre-increment time, exactly like
         # the stage pipeline's probe stage (which runs before the increment)
         qd = _queue_depth(state) if cfg.probes.enabled else None
         state = _advance_clock(state, cfg)
-        ys = {"it_kw": jnp.sum(p)}
+        ys = {"it_kw": it_kw}
         if qd is not None:
             ys["queue_depth"] = qd
         if cfg.collect_series:
@@ -799,10 +927,17 @@ def _simulate_megakernel(state0: SimState, inputs: StepInputs,
     from repro.kernels import ref as ref_mod  # lazy: kernels import core
 
     step = _build_demand_step(cfg, dyn)
-    xs = ((inputs.ci, inputs.shift_threshold) if cfg.shifting.enabled
-          else None)
+    xs = {}
+    if cfg.shifting.enabled:
+        xs["ci"] = inputs.ci
+        xs["shift_threshold"] = inputs.shift_threshold
+    if cfg.resilience.enabled:  # the throttle recurrence reads these
+        xs["wet_bulb_c"] = inputs.wet_bulb_c
+        xs["chiller_derate"] = inputs.chiller_derate
+        xs["pdu_cap_kw"] = inputs.pdu_cap_kw
     with telemetry_mod.stage_scope("megakernel.demand"):
-        final, demand_ys = jax.lax.scan(step, state0, xs, length=cfg.n_steps)
+        final, demand_ys = jax.lax.scan(step, state0, xs or None,
+                                        length=cfg.n_steps)
     it_series = demand_ys["it_kw"]
 
     chain_kwargs = dict(
@@ -811,10 +946,15 @@ def _simulate_megakernel(state0: SimState, inputs: StepInputs,
         batt_rate_kw=dyn.get("batt_rate_kw"),
         dispatch_lambda=dyn.get("dispatch_lambda"),
         pv_capacity_kw=dyn.get("pv_capacity_kw"))
+    if cfg.resilience.enabled:
+        chain_kwargs["chiller_derate"] = inputs.chiller_derate
     # the probe bus needs the per-step flow series, so (like collect_series)
     # it routes the facility phase through the reference chain rather than
-    # the totals-only Pallas kernel — probing is opt-in observability
-    if cfg.use_pallas and not cfg.collect_series and not cfg.probes.enabled:
+    # the totals-only Pallas kernel — probing is opt-in observability;
+    # resilience also takes the reference chain (the fused kernel's quantized
+    # trace store has no slot for the derate series)
+    if (cfg.use_pallas and not cfg.collect_series and not cfg.probes.enabled
+            and not cfg.resilience.enabled):
         from repro.kernels import fused_step as fused_mod
         from repro.kernels.ops import resolved_interpret
         totals = fused_mod.fused_facility_totals(
@@ -895,7 +1035,11 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     (failure-model PRNG), `arrival_trace` (f32[T] per-task arrival hours —
     re-times the task table, state.retime_task_table / grid.tasktrace_axis)
     and `interactive_frac` (traced share of tasks re-typed as interactive
-    inference, state.with_interactive_frac).
+    inference, state.with_interactive_frac).  With cfg.resilience.enabled
+    three more: `failure_hazard_scale` (scales host AND facility failure
+    hazards; 0.0 = provably healthy), `throttle_inlet_c` (thermal trip
+    point) and `pdu_cap_kw` (rack-power clamp while PDU-derated) — see
+    core/resilience.py.
 
     `cfg.backend` picks the executor (module docstring, "Kernel
     backends"); custom `stages` require the stage-pipeline backend.
@@ -909,6 +1053,14 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
             "megakernel fuses the default facility chain and cannot honour "
             "a replacement pipeline")
     dyn = dict(dyn) if dyn else {}
+    if not cfg.resilience.enabled:
+        bad = [k for k in ("throttle_inlet_c", "pdu_cap_kw",
+                           "failure_hazard_scale") if k in dyn]
+        if bad:
+            raise ValueError(
+                f"dyn key(s) {bad} belong to the resilience loop but "
+                "cfg.resilience.enabled is False: they would be silently "
+                "ignored — enable the subsystem (core/resilience.py)")
     if weather_trace is not None:
         dyn["wet_bulb_trace"] = weather_trace
     if "n_active_hosts" in dyn:
@@ -929,10 +1081,13 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
     dyn.pop("wet_bulb_trace", None)  # consumed by the inputs, not a ctx key
     dyn.pop("price_trace", None)
     dyn.pop("pv_cf_trace", None)
+    dyn.pop("pdu_cap_kw", None)  # folded into inputs.pdu_cap_kw
     state0 = init_sim_state(tasks, hosts, dyn.get("seed", cfg.seed))
     if cfg.probes.enabled:
         state0 = state0._replace(
             probes=telemetry_mod.init_probes(cfg.n_steps, cfg.probes))
+    if cfg.resilience.enabled:  # healthy start: no throttle on step 0
+        state0 = state0._replace(throttle=jnp.float32(1.0))
 
     def run():
         if cfg.backend == "megakernel":

@@ -17,12 +17,24 @@ from .config import FailureConfig
 from .state import HostTable, TaskTable, PENDING, RUNNING
 
 
-def step_host_failures(rng, hosts: HostTable, now, dt_h: float, cfg: FailureConfig):
-    """Sample failure/repair transitions.  Returns (rng, hosts, newly_down[H])."""
+def step_host_failures(rng, hosts: HostTable, now, dt_h: float, cfg: FailureConfig,
+                       hazard=None):
+    """Sample failure/repair transitions.  Returns (rng, hosts, newly_down[H]).
+
+    `hazard` (optional traced scalar) multiplies the failure rate — the
+    resilience loop uses it for the `failure_hazard_scale` dyn key and for
+    heat-correlated failures (hazard rises while the chiller is derated;
+    core/resilience.py).  0.0 gives p_fail == 0 exactly.  None keeps the
+    baseline expression bitwise.
+    """
     if not cfg.enabled:
         return rng, hosts, jnp.zeros(hosts.up.shape, bool)
     rng, k_fail = jax.random.split(rng)
-    p_fail = 1.0 - jnp.exp(-dt_h / cfg.mtbf_h)
+    if hazard is None:
+        p_fail = 1.0 - jnp.exp(-dt_h / cfg.mtbf_h)
+    else:
+        p_fail = 1.0 - jnp.exp(-jnp.asarray(hazard, jnp.float32)
+                               * (dt_h / cfg.mtbf_h))
     fail_draw = jax.random.bernoulli(k_fail, p_fail, hosts.up.shape)
     newly_down = hosts.up & hosts.active & fail_draw
     repaired = (~hosts.up) & (now >= hosts.repair_at)

@@ -231,6 +231,98 @@ def fleet_cell(tasks_r: TaskTable, hosts: HostTable, cfg: SimConfig,
     return FleetResult(total=fleet_totals(per), per_region=per)
 
 
+def _fleet_cell_spill(tasks_r: TaskTable, hosts: HostTable, cfg: SimConfig,
+                      ci_traces, wb_traces=None, scalar_dyn: dict | None = None,
+                      per_region_dyn: dict | None = None,
+                      price_traces=None, pv_traces=None) -> FleetResult:
+    """`fleet_cell` with the regions COUPLED step-by-step: after every
+    simulation step, up to `cfg.resilience.max_spills_per_step` interrupted
+    tasks move from failing regions to the healthiest one
+    (core/resilience.cross_region_spill) — fleet-level failure-reactive
+    placement.
+
+    Structure: `fleet_cell` vmaps the whole `simulate` (scan inside vmap);
+    here the nesting flips to scan-of-vmapped-step so the spill hook can
+    run between steps with all regions' tables in hand.  vmap-of-scan and
+    scan-of-vmap compute the same per-region step math, and the spill is a
+    value-preserving no-op while every region is healthy, so with no
+    failures this reproduces `fleet_cell` (pinned in
+    tests/test_resilience.py).  Stage-pipeline backend only; the per-step
+    ctx mirrors `engine.build_step_fn`.
+    """
+    from . import resilience as resilience_mod
+    from . import scaling as scaling_mod
+    from .engine import (_advance_clock, build_step_inputs, default_pipeline,
+                         init_energy_flow)
+    from .state import init_sim_state
+
+    scalar_dyn = dict(scalar_dyn or {})
+    per_region_dyn = dict(per_region_dyn or {})
+    ci = jnp.asarray(ci_traces, jnp.float32)
+    wb = (None if wb_traces is None
+          else jnp.asarray(wb_traces, jnp.float32))
+    pr = (None if price_traces is None
+          else jnp.asarray(price_traces, jnp.float32))
+    pv = (None if pv_traces is None
+          else jnp.asarray(pv_traces, jnp.float32))
+
+    def prep(tt, tr, per_r, wb_r, pr_r, pv_r):
+        """Per-region init: mirrors the front half of engine.simulate."""
+        dyn = {**scalar_dyn, **per_r}
+        if wb_r is not None:
+            dyn["wet_bulb_trace"] = wb_r
+        if pr_r is not None:
+            dyn["price_trace"] = pr_r
+        if pv_r is not None:
+            dyn["pv_cf_trace"] = pv_r
+        h = hosts
+        if "n_active_hosts" in dyn:
+            h = scaling_mod.with_scale(h, dyn["n_active_hosts"])
+        inputs = build_step_inputs(tr, cfg, dyn=dyn)
+        for k in ("wet_bulb_trace", "price_trace", "pv_cf_trace",
+                  "pdu_cap_kw"):
+            dyn.pop(k, None)
+        state0 = init_sim_state(tt, h, dyn.get("seed", cfg.seed))
+        state0 = state0._replace(throttle=jnp.float32(1.0))
+        return state0, inputs, dyn
+
+    in_axes = (0, 0, 0, None if wb is None else 0, None if pr is None else 0,
+               None if pv is None else 0)
+    states0, inputs, dyn_r = jax.vmap(prep, in_axes=in_axes)(
+        tasks_r, ci, per_region_dyn, wb, pr, pv)
+
+    stages = default_pipeline(cfg)
+
+    def one_step(state, inp, dyn):
+        ctx = {"ci": inp.ci, "batt_threshold": inp.batt_threshold,
+               "ci_rising": inp.ci_rising,
+               "shift_threshold": inp.shift_threshold,
+               "wet_bulb_c": inp.wet_bulb_c, "price": inp.price,
+               "price_lo": inp.price_lo, "price_hi": inp.price_hi,
+               "pv_cf": inp.pv_cf,
+               "chiller_derate": inp.chiller_derate,
+               "pdu_cap_kw": inp.pdu_cap_kw,
+               "flow": init_energy_flow(), **dyn}
+        for stage in stages:
+            state, ctx = stage(state, ctx)
+        return _advance_clock(state, cfg)
+
+    vstep = jax.vmap(one_step)
+    xs = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), inputs)  # [S, R]
+    max_spills = int(cfg.resilience.max_spills_per_step)
+
+    def scan_body(states, inp_t):
+        states = vstep(states, inp_t, dyn_r)
+        tasks, metrics = resilience_mod.cross_region_spill(
+            states.tasks, states.hosts, states.metrics, max_spills)
+        return states._replace(tasks=tasks, metrics=metrics), None
+
+    with telemetry_mod.stage_scope("fleet.spill_scan"):
+        finals, _ = jax.lax.scan(scan_body, states0, xs, length=cfg.n_steps)
+    per = jax.vmap(lambda st: summarize(st, cfg))(finals)
+    return FleetResult(total=fleet_totals(per), per_region=per)
+
+
 def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
                    fleet: FleetSpec, dyn: dict | None = None,
                    region=None, width: int | None = None,
@@ -262,6 +354,28 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
         raise ValueError("the fleet carries pv_traces but "
                          "cfg.renewables.enabled is False: the per-region "
                          "PV resource would be ignored")
+    spill = cfg.resilience.enabled and cfg.resilience.spill_interrupted
+    if cfg.resilience.spill_interrupted and not cfg.resilience.enabled:
+        raise ValueError("cfg.resilience.spill_interrupted requires "
+                         "cfg.resilience.enabled (the spill hook reacts to "
+                         "failure signals the resilience loops produce)")
+    if spill:
+        # the coupled executor replays engine.build_step_fn's ctx assembly
+        # per step; features that change the scan signature are out of scope
+        if cfg.backend != "stage-pipeline":
+            raise ValueError("spill_interrupted supports only the "
+                             f"'stage-pipeline' backend, got {cfg.backend!r}")
+        if cfg.probes.enabled or cfg.collect_series:
+            raise ValueError("spill_interrupted does not compose with "
+                             "probes or collect_series")
+        for k in ("arrival_trace", "interactive_frac"):
+            if k in (dyn or {}):
+                raise ValueError(f"spill_interrupted does not support the "
+                                 f"'{k}' dyn key")
+        if width is None:
+            # full-width tables so every region has INVALID slots to
+            # receive spilled tasks regardless of the initial placement
+            width = tasks.n
     if region is None:
         with telemetry_mod.span("fleet.place", policy=fleet.policy):
             region = fleet_place(tasks, hosts, fleet, cfg.dt_h,
@@ -279,7 +393,10 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
         else:
             scalar_dyn[key] = val
 
-    fn = _jitted_fleet_cell if jit else fleet_cell
+    if spill:
+        fn = _jitted_fleet_cell_spill if jit else _fleet_cell_spill
+    else:
+        fn = _jitted_fleet_cell if jit else fleet_cell
 
     def run():
         return fn(stacked, hosts, cfg, jnp.asarray(fleet.ci_traces),
@@ -306,3 +423,5 @@ def simulate_fleet(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
 # keys) -> same compiled fleet program, so e.g. comparing placement policies
 # re-runs one executable instead of recompiling per policy
 _jitted_fleet_cell = jax.jit(fleet_cell, static_argnames=("cfg",))
+_jitted_fleet_cell_spill = jax.jit(_fleet_cell_spill,
+                                   static_argnames=("cfg",))

@@ -50,6 +50,20 @@ Axis kinds:
                                               state.with_interactive_frac:
                                               non-shiftable, top priority,
                                               tight SLA grace)
+      - `failure_hazard_scale`               (multiplies host AND facility
+                                              failure hazards,
+                                              core/resilience.py; 0.0 is an
+                                              exactly-healthy datacenter, so
+                                              one grid can rank techniques
+                                              healthy-vs-degraded; requires
+                                              `cfg.resilience.enabled`)
+      - `throttle_inlet_c`                   (thermal-throttle trip point,
+                                              core/resilience.py; requires
+                                              `cfg.resilience.enabled`)
+      - `pdu_cap_kw`                         (rack power cap applied while a
+                                              PDU is down, core/resilience.py;
+                                              requires
+                                              `cfg.resilience.enabled`)
   * `tasktrace_axis(arrivals)` — per-task arrival sets `f32[A, T]`
     (tasktraces/synthetic.py `make_arrival_sets`): each grid point re-times
     the SAME task population with arrivals sampled from a different

@@ -44,8 +44,13 @@ class SimResult(NamedTuple):
     done_frac: jax.Array
     n_tasks: jax.Array
     n_interrupts: jax.Array
+    n_stops: jax.Array             # graceful shifting pauses (not failures)
     batt_discharged_kwh: jax.Array
     lost_work_h: jax.Array
+    # resilience loop (core/resilience.py; all 0 unless resilience.enabled)
+    throttled_h: jax.Array         # hours spent thermally throttled
+    derate_h: jax.Array            # hours with chiller/PDU equipment derated
+    n_spills: jax.Array            # tasks spilled to another region (fleet)
     # raw outcome counts (unclamped): the exact weights fleet aggregation
     # needs to recombine the ratio metrics above across regions
     n_done: jax.Array              # tasks finished within the horizon
@@ -146,8 +151,12 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
         # by it, and a clamp would phantom-count empty regions
         n_tasks=n_arrived,
         n_interrupts=m.n_interrupts,
+        n_stops=m.n_stops,
         batt_discharged_kwh=m.batt_discharged,
         lost_work_h=jnp.sum(jnp.where(arrived, tasks.lost_work, 0.0)),
+        throttled_h=m.throttled_h,
+        derate_h=m.derate_h,
+        n_spills=m.n_spills,
         n_done=jnp.sum(done.astype(jnp.float32)),
         n_started=jnp.sum(started.astype(jnp.float32)),
         n_decided=jnp.sum(decided.astype(jnp.float32)),
@@ -212,8 +221,12 @@ def fleet_totals(per_region: SimResult, axis: int = 0) -> SimResult:
         done_frac=wmean(p.done_frac, p.n_tasks),
         n_tasks=s(p.n_tasks),
         n_interrupts=s(p.n_interrupts),
+        n_stops=s(p.n_stops),
         batt_discharged_kwh=s(p.batt_discharged_kwh),
         lost_work_h=s(p.lost_work_h),
+        throttled_h=s(p.throttled_h),
+        derate_h=s(p.derate_h),
+        n_spills=s(p.n_spills),
         n_done=s(p.n_done),
         n_started=s(p.n_started),
         n_decided=s(p.n_decided),

@@ -111,7 +111,7 @@ def _first_k_by_priority(mask, priority, k: int, levels: int):
 
 
 def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
-                       cfg: SchedulerConfig, slots=None):
+                       cfg: SchedulerConfig, slots=None, host_order=None):
     """Exact bounded first-fit.  Returns updated task table.
 
     `cfg.slots_per_step` is the STATIC placement bound (it shapes the
@@ -120,6 +120,13 @@ def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
     sweep `dyn_axis(slots_per_step=...)` inside ONE compiled program — the
     fori_loop bound used to be the swept value itself, recompiling per
     point.  `slots=None` reproduces the static path bit-for-bit.
+
+    `host_order` (i32[H] permutation, e.g. resilience.host_rank) makes the
+    "first" in first-fit mean "first in that order" — failure-reactive
+    placement.  None keeps natural host order.  Either way a down or
+    deactivated host never fits, even for zero-footprint tasks: `0 >= 0`
+    used to admit a coreless task onto a failed host (whose free capacity
+    reads as exactly 0), parking it there forever.
     """
     k = cfg.slots_per_step
     elig = _eligible(tasks, now, shift_ok)
@@ -129,6 +136,7 @@ def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
     else:  # single class: the plain FIFO prefix, bit-for-bit the old path
         cand = _first_k_indices(elig, k)
     free_c, free_g = free_capacity(tasks, hosts)
+    usable = hosts.active & hosts.up
 
     def body(i, carry):
         free_c, free_g, status, host, first_start = carry
@@ -138,8 +146,11 @@ def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
             valid = valid & (i < slots)
         tj = jnp.maximum(ti, 0)
         need_c, need_g = tasks.cores[tj], tasks.gpus[tj]
-        fits = (free_c >= need_c) & (free_g >= need_g)
-        h = jnp.argmax(fits)            # first host that fits (first-fit)
+        fits = (free_c >= need_c) & (free_g >= need_g) & usable
+        if host_order is None:
+            h = jnp.argmax(fits)        # first host that fits (first-fit)
+        else:  # first fitting host in preference order
+            h = host_order[jnp.argmax(fits[host_order])]
         placed = valid & fits[h]
         hj = jnp.where(placed, h, 0).astype(jnp.int32)
         take_c = jnp.where(placed, need_c, 0.0)
@@ -176,7 +187,18 @@ def schedule_aggregate(tasks: TaskTable, hosts: HostTable, now, shift_ok,
     cum_c = jnp.cumsum(jnp.maximum(free_c, 0.0))
     pos = jnp.cumsum(need_c) - need_c * 0.5
     host = jnp.searchsorted(cum_c, pos).astype(jnp.int32)
-    host = jnp.clip(host, 0, hosts.cores.shape[0] - 1)
+    h = hosts.cores.shape[0]
+    host = jnp.clip(host, 0, h - 1)
+    # a down/inactive host occupies a zero-width span of the cumsum, yet a
+    # zero-need task's midpoint can land exactly on it (0 >= 0); bump every
+    # task to the next usable host at-or-after its mapped position, and
+    # refuse admission when none exists
+    usable = hosts.active & hosts.up
+    next_usable = jax.lax.cummin(
+        jnp.where(usable, jnp.arange(h, dtype=jnp.int32), h)[::-1])[::-1]
+    bumped = next_usable[host]
+    admit = admit & (bumped < h)
+    host = jnp.where(bumped < h, bumped, 0).astype(jnp.int32)
     return tasks._replace(
         status=jnp.where(admit, RUNNING, tasks.status).astype(jnp.int32),
         host=jnp.where(admit, host, tasks.host).astype(jnp.int32),
@@ -186,10 +208,10 @@ def schedule_aggregate(tasks: TaskTable, hosts: HostTable, now, shift_ok,
 
 
 def schedule_step(tasks: TaskTable, hosts: HostTable, now, shift_ok,
-                  cfg: SchedulerConfig, slots=None):
+                  cfg: SchedulerConfig, slots=None, host_order=None):
     if cfg.mode == "first_fit":
         return schedule_first_fit(tasks, hosts, now, shift_ok, cfg,
-                                  slots=slots)
+                                  slots=slots, host_order=host_order)
     if cfg.mode == "aggregate":
         if cfg.priority_levels > 1:
             raise ValueError(

@@ -11,9 +11,16 @@ The per-step threshold depends only on the carbon trace -> precomputed.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from .config import ShiftingConfig
+
+# rows of the [chunk, W] window block materialized at a time by
+# forward_window_quantiles: bounds the transient footprint at ~chunk * W * 4
+# bytes (55 MB at the year-horizon W=1680) instead of S * W * 4 (~590 MB),
+# which multiplied under vmapped scenario grids
+_QUANTILE_CHUNK_S = 8192
 
 
 def forward_window_quantile(trace, dt_h: float, window_h: float, quantile):
@@ -28,22 +35,44 @@ def forward_window_quantile(trace, dt_h: float, window_h: float, quantile):
     return forward_window_quantiles(trace, dt_h, window_h, quantile)
 
 
-def forward_window_quantiles(trace, dt_h: float, window_h: float, quantiles):
+def forward_window_quantiles(trace, dt_h: float, window_h: float, quantiles,
+                             chunk_size: int = _QUANTILE_CHUNK_S):
     """`forward_window_quantile` for one or several levels at once.
 
     `quantiles` may be a scalar (returns f32[S]) or a vector of Q levels
-    (returns f32[Q, S]).  The [S, W] window matrix is sorted ONCE for all
-    levels — `jnp.quantile` re-sorts per call, and the battery's price
-    bands need two levels of the SAME windows, so the stacked form halves
-    the dominant precompute cost.
+    (returns f32[Q, S]).  Each window block is sorted ONCE for all levels —
+    `jnp.quantile` re-sorts per call, and the battery's price bands need
+    two levels of the SAME windows, so the stacked form halves the
+    dominant precompute cost.
+
+    The window matrix is built in [chunk_size, W] blocks (`lax.map` over
+    start-index blocks) instead of one [S, W] allocation: ~590 MB f32 at a
+    year horizon with dt_h=0.1, multiplied under vmapped grids.  Each row's
+    gather + quantile is the same arithmetic regardless of which block it
+    lands in, so under jit the thresholds are bitwise-identical to the
+    dense form (pinned in tests/test_resilience.py; eager dispatch may
+    differ by final-ULP rounding because XLA compiles each block shape
+    separately).
     """
     x = jnp.asarray(trace, jnp.float32)
     s = x.shape[0]
     w = max(int(round(window_h / dt_h)), 1)
-    idx = jnp.minimum(jnp.arange(s)[:, None] + jnp.arange(w)[None, :], s - 1)
-    windows = x[idx]                                    # f32[S, W]
     q = jnp.asarray(quantiles, jnp.float32)
-    return jnp.quantile(windows, q, axis=1).astype(jnp.float32)
+    off = jnp.arange(w)
+
+    def block(starts):  # [C] start indices -> [C] or [Q, C] quantiles
+        rows = jnp.minimum(starts[:, None] + off[None, :], s - 1)
+        return jnp.quantile(x[rows], q, axis=1).astype(jnp.float32)
+
+    if s <= chunk_size:
+        return block(jnp.arange(s))
+    n = -(-s // chunk_size)
+    # pad starts with s-1 (a degenerate repeat row), sliced off below
+    starts = jnp.minimum(jnp.arange(n * chunk_size), s - 1)
+    out = jax.lax.map(block, starts.reshape(n, chunk_size))
+    if q.ndim == 0:
+        return out.reshape(n * chunk_size)[:s]
+    return jnp.moveaxis(out, 1, 0).reshape(q.shape[0], n * chunk_size)[:, :s]
 
 
 def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig,

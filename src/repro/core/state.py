@@ -107,7 +107,7 @@ class MetricsAcc(NamedTuple):
     water_l: jax.Array         # f32[] litres evaporated by the cooling tower
     peak_power: jax.Array      # f32[] kW max grid draw
     batt_discharged: jax.Array # f32[] kWh served from the battery
-    n_interrupts: jax.Array    # f32[] task interruptions (failures + stops)
+    n_interrupts: jax.Array    # f32[] failure interruptions (work rolled back)
     n_shift_delays: jax.Array  # f32[] task-steps spent delayed by shifting
     energy_cost: jax.Array     # f32[] currency; 0 unless cfg.pricing.enabled
     demand_cost: jax.Array     # f32[] currency from CLOSED billing windows
@@ -117,6 +117,11 @@ class MetricsAcc(NamedTuple):
     curtailed_energy: jax.Array  # f32[] kWh of surplus thrown away
     export_revenue: jax.Array  # f32[] currency earned by the export tariff
     heat_reuse: jax.Array      # f32[] kWh of chiller-path heat reclaimed
+    n_stops: jax.Array         # f32[] graceful shifting pauses (subset context
+                               #   of n_interrupts; NOT failure interrupts)
+    throttled_h: jax.Array     # f32[] hours spent thermally throttled
+    derate_h: jax.Array        # f32[] hours with chiller/PDU derated
+    n_spills: jax.Array        # f32[] tasks spilled to another region (fleet)
 
 
 class SimState(NamedTuple):
@@ -131,6 +136,11 @@ class SimState(NamedTuple):
     # cfg.probes.enabled is False — a leafless pytree node, so the scan
     # carry, jit signatures and golden outputs are unchanged by default
     probes: Any = None
+    # thermal-throttle factor applied to hosts THIS step, computed from the
+    # PREVIOUS step's facility state (core/resilience.py).  None when
+    # cfg.resilience.enabled is False — same leafless-node trick as probes,
+    # so the disabled engine is structurally (and bitwise) unchanged
+    throttle: Any = None
 
 
 def make_task_table(arrival, duration, cores, gpus=None, cpu_util=None,
@@ -301,7 +311,8 @@ def init_metrics() -> MetricsAcc:
                       peak_power=z, batt_discharged=z, n_interrupts=z,
                       n_shift_delays=z, energy_cost=z, demand_cost=z,
                       window_peak_kw=z, pv_energy=z, export_energy=z,
-                      curtailed_energy=z, export_revenue=z, heat_reuse=z)
+                      curtailed_energy=z, export_revenue=z, heat_reuse=z,
+                      n_stops=z, throttled_h=z, derate_h=z, n_spills=z)
 
 
 def init_sim_state(tasks: TaskTable, hosts: HostTable, seed: int = 0) -> SimState:

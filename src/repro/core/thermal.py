@@ -33,45 +33,73 @@ _T_ZERO_K = 273.15
 _MIN_LIFT_C = 1.0  # floor on the compressor lift: no free chilling
 
 
-def economizer_fraction(wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
+def economizer_fraction(wet_bulb_c, cfg: CoolingConfig, setpoint_c=None,
+                        availability=None):
     """Fraction of the heat load the chiller must carry (0 = all free).
 
     0 for wet-bulb <= setpoint - economizer_range_c (the cutoff), ramping
     linearly to 1 at the setpoint: the classic water-side economizer duty
     curve.  `setpoint_c` may be a traced scalar (grid axis); defaults to the
     config's static setpoint.
+
+    `availability` (core/resilience.py chiller-derate series) scales how
+    much of the free-cooling path is usable: the chiller fraction becomes
+    ``1 - (1 - frac) * availability``.  None (the default) keeps the
+    original expression — gating on None rather than multiplying by 1.0
+    matters because ``1 - (1 - frac)`` is not bitwise `frac` in f32.
     """
     sp = jnp.float32(cfg.setpoint_c) if setpoint_c is None else setpoint_c
     wb = jnp.asarray(wet_bulb_c, jnp.float32)
     rng = jnp.maximum(jnp.float32(cfg.economizer_range_c), 1e-6)
-    return jnp.clip((wb - (sp - rng)) / rng, 0.0, 1.0)
+    frac = jnp.clip((wb - (sp - rng)) / rng, 0.0, 1.0)
+    if availability is None:
+        return frac
+    return 1.0 - (1.0 - frac) * jnp.asarray(availability, jnp.float32)
 
 
-def chiller_cop(wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
+def chiller_cop(wet_bulb_c, cfg: CoolingConfig, setpoint_c=None,
+                max_cop_scale=None):
     """Weather-dependent chiller COP (monotone non-increasing in wet-bulb).
 
     The tower delivers condenser water at wet-bulb + approach; adding the
     condenser-loop lift gives the hot-side temperature.  COP is a fixed
     fraction of the Carnot limit over that lift, clipped to [1, max_cop].
+
+    `max_cop_scale` (chiller-derate series) shrinks the achievable-COP
+    ceiling while facility equipment is degraded; None keeps the original
+    clip bound bitwise.
     """
     sp = jnp.float32(cfg.setpoint_c) if setpoint_c is None else setpoint_c
     wb = jnp.asarray(wet_bulb_c, jnp.float32)
     t_cond = wb + cfg.tower_approach_c + cfg.condenser_lift_c
     lift = jnp.maximum(t_cond - sp, _MIN_LIFT_C)
     cop = cfg.carnot_efficiency * (sp + _T_ZERO_K) / lift
-    return jnp.clip(cop, 1.0, cfg.max_cop)
+    if max_cop_scale is None:
+        return jnp.clip(cop, 1.0, cfg.max_cop)
+    ceil = jnp.maximum(cfg.max_cop * jnp.asarray(max_cop_scale, jnp.float32),
+                       1.0)
+    return jnp.clip(cop, 1.0, ceil)
 
 
-def cooling_step(it_power_kw, wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
+def cooling_step(it_power_kw, wet_bulb_c, cfg: CoolingConfig, setpoint_c=None,
+                 chiller_derate=None):
     """One cooling decision.  Returns (cooling_kw, water_l_per_h).
 
     cooling_kw   — fan/pump overhead + compressor power.
     water_l_per_h — cooling-tower evaporation (chiller-path heat only;
                     economized heat rejects through dry coils).
     All arguments may be traced scalars/arrays; fuses into the sim step.
+
+    `chiller_derate` < 1 (facility failure injection, core/resilience.py)
+    degrades both paths at once: less economizer availability (more load
+    on the chiller) AND a lower achievable COP — a derated facility burns
+    more energy to move the same heat.  None is the bitwise-identical
+    healthy path.
     """
-    frac = economizer_fraction(wet_bulb_c, cfg, setpoint_c)
-    cop = chiller_cop(wet_bulb_c, cfg, setpoint_c)
+    frac = economizer_fraction(wet_bulb_c, cfg, setpoint_c,
+                               availability=chiller_derate)
+    cop = chiller_cop(wet_bulb_c, cfg, setpoint_c,
+                      max_cop_scale=chiller_derate)
     fan_kw = cfg.fan_pump_overhead * it_power_kw
     chiller_kw = frac * it_power_kw / cop
     water_l_per_h = (frac * it_power_kw + chiller_kw) * cfg.evap_l_per_kwh_heat
@@ -79,7 +107,8 @@ def cooling_step(it_power_kw, wet_bulb_c, cfg: CoolingConfig, setpoint_c=None):
 
 
 def reclaimable_heat_kw(it_power_kw, cooling_kw, wet_bulb_c,
-                        cfg: CoolingConfig, setpoint_c=None):
+                        cfg: CoolingConfig, setpoint_c=None,
+                        chiller_derate=None):
     """Chiller-path heat flow (load + compressor work) available for reuse.
 
     District-heating reclaim taps the condenser loop, so only the
@@ -88,9 +117,11 @@ def reclaimable_heat_kw(it_power_kw, cooling_kw, wet_bulb_c,
     Recomputed from the already-known cooling power (works for both the
     fused-kernel and the elementwise cooling paths): chiller power is the
     cooling power minus the weather-independent fan/pump overhead, and the
-    chiller-path load is `economizer_fraction * IT`.
+    chiller-path load is `economizer_fraction * IT`.  Pass the same
+    `chiller_derate` as `cooling_step` so the split stays consistent.
     """
-    frac = economizer_fraction(wet_bulb_c, cfg, setpoint_c)
+    frac = economizer_fraction(wet_bulb_c, cfg, setpoint_c,
+                               availability=chiller_derate)
     chiller_kw = cooling_kw - cfg.fan_pump_overhead * it_power_kw
     return frac * it_power_kw + chiller_kw
 

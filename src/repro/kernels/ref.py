@@ -88,7 +88,7 @@ def fused_facility_chain(it_kw, ci, wet_bulb_c, price, price_lo, price_hi,
                          pv_cf, batt_threshold, ci_rising, dt_h, cfg, *,
                          soc0=0.0, setpoint_c=None, batt_capacity_kwh=None,
                          batt_rate_kw=None, dispatch_lambda=None,
-                         pv_capacity_kw=None):
+                         pv_capacity_kw=None, chiller_derate=None):
     """The whole facility pipeline (cooling -> renewables -> battery ->
     net metering) vectorized over the time axis.  Returns a dict of f32[S]
     per-step flow series plus the battery SoC trajectory.
@@ -108,6 +108,11 @@ def fused_facility_chain(it_kw, ci, wet_bulb_c, price, price_lo, price_hi,
     Flow keys mirror `engine.EnergyFlow`; extras: `water_l_per_h`,
     `heat_reuse_kw`, `soc` (post-step charge, kWh) and `want_charge` (the
     final dispatch decision, for `BatteryState.was_charging`).
+
+    `chiller_derate` (f32[S] facility-failure series, core/resilience.py)
+    degrades the cooling model exactly as `stage_cooling` does — it is
+    elementwise in t, so the facility half stays vectorized even with the
+    failure loop closed.  None is the bitwise healthy path.
     """
     from repro.core import battery as battery_mod
     from repro.core import renewables as renewables_mod
@@ -120,12 +125,13 @@ def fused_facility_chain(it_kw, ci, wet_bulb_c, price, price_lo, price_hi,
     # cooling: elementwise in t (core/thermal.py is pure jnp)
     if cfg.cooling.enabled:
         cooling_kw, water_l_per_h = thermal_mod.cooling_step(
-            it_kw, wet_bulb_c, cfg.cooling, setpoint_c=setpoint_c)
+            it_kw, wet_bulb_c, cfg.cooling, setpoint_c=setpoint_c,
+            chiller_derate=chiller_derate)
         reuse = cfg.cooling.heat_reuse_fraction
         if reuse > 0.0:
             heat_reuse_kw = reuse * thermal_mod.reclaimable_heat_kw(
                 it_kw, cooling_kw, wet_bulb_c, cfg.cooling,
-                setpoint_c=setpoint_c)
+                setpoint_c=setpoint_c, chiller_derate=chiller_derate)
             water_l_per_h = water_l_per_h * (1.0 - reuse)
         else:
             heat_reuse_kw = zeros

@@ -21,8 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (BatteryConfig, CoolingConfig, PricingConfig,
-                        RenewableConfig, ScenarioGrid, SchedulerConfig,
+from repro.core import (BatteryConfig, CoolingConfig, FailureConfig,
+                        PricingConfig, RenewableConfig, ResilienceConfig,
+                        ScenarioGrid, SchedulerConfig,
                         ShiftingConfig, SimConfig, build_step_inputs,
                         dyn_axis, make_host_table, make_task_table, simulate,
                         summarize, sweep_grid, trace_axis, weather_axis)
@@ -177,6 +178,28 @@ def test_megakernel_matches_stage_pipeline_typed_workload():
     _assert_results_close(results["megakernel"], results["stage-pipeline"])
     # the typed run actually exercised every class
     assert np.all(np.asarray(results["megakernel"].class_n_started) > 0)
+
+
+@pytest.mark.parametrize("cool,price,renew", COMBOS)
+def test_megakernel_matches_stage_pipeline_resilience(cool, price, renew):
+    """Closed-loop resilience differential: with facility failures, PDU
+    caps and thermal throttling live, the megakernel's demand scan carries
+    the throttle recurrence itself — it must still reproduce the stage
+    pipeline across the technique matrix."""
+    res = ResilienceConfig(enabled=True, chiller_mtbf_h=15.0,
+                           chiller_repair_h=3.0, pdu_mtbf_h=25.0,
+                           pdu_repair_h=2.0, pdu_cap_kw=3.0,
+                           throttle_inlet_c=24.0, heat_hazard_mult=2.0)
+    cfg = _cfg(cool, price, renew, policy="blended" if price else "carbon",
+               resilience=res, seed=42,
+               failures=FailureConfig(enabled=True, mtbf_h=30.0))
+    ref = _run(cfg.replace(backend="stage-pipeline"))
+    got = _run(cfg.replace(backend="megakernel"))
+    _assert_results_close(got, ref)
+    if cool:
+        # the wet-bulb trace peaks past the trip point whenever cooling is
+        # on, so the throttle loop genuinely engaged in this differential
+        assert float(ref.throttled_h) > 0.0
 
 
 def test_backend_validation():

@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) for the failure/repair cycle.
+
+The host failure model (core/failures.py) is the substrate every resilience
+loop stands on, so its contract gets the property treatment:
+
+  * a failed host is down for EXACTLY `repair_h` of simulated time — never
+    less, never more — across arbitrary (dt_h, mtbf_h, repair_h) draws;
+  * `lost_work` is nonnegative, and exactly zero when checkpoints are taken
+    every step (`checkpoint_interval_h == dt_h`): there is never un-snapshot
+    progress for a failure to destroy;
+  * interrupted tasks are re-queued, not dropped — on a fleet with enough
+    surviving capacity and horizon, every task still finishes.
+
+tests/test_resilience.py carries single-seed deterministic versions of the
+same invariants, so this tier adds breadth, not the only coverage.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property-based tier")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (DONE, FailureConfig, SimConfig, make_host_table,
+                        make_task_table, simulate, summarize)
+from repro.core.failures import step_host_failures
+
+
+@st.composite
+def repair_scenario(draw):
+    return dict(
+        seed=draw(st.integers(0, 2 ** 16)),
+        n_hosts=draw(st.integers(1, 6)),
+        dt_h=draw(st.sampled_from([0.125, 0.25, 0.5, 1.0])),
+        mtbf_h=draw(st.floats(1.0, 20.0)),
+        # keep repair an exact multiple of dt so "exactly repair_h" is a
+        # well-posed claim on the discrete clock
+        repair_steps=draw(st.integers(1, 12)),
+        n_steps=draw(st.integers(50, 300)),
+    )
+
+
+def _down_runs(up_matrix):
+    """Lengths of complete down-runs per host from a [T, H] bool matrix."""
+    runs = []
+    for h in range(up_matrix.shape[1]):
+        n = 0
+        for t in range(up_matrix.shape[0]):
+            if not up_matrix[t, h]:
+                n += 1
+            elif n:
+                runs.append(n)
+                n = 0
+        # a run still open at the horizon is truncated, not a counterexample
+    return runs
+
+
+@settings(max_examples=25, deadline=None)
+@given(repair_scenario())
+def test_repaired_hosts_return_after_exactly_repair_h(s):
+    dt = s["dt_h"]
+    cfg = FailureConfig(enabled=True, mtbf_h=s["mtbf_h"],
+                        repair_h=s["repair_steps"] * dt)
+    hosts = make_host_table(s["n_hosts"], 4)
+    rng = jax.random.PRNGKey(s["seed"])
+    ups = []
+    for k in range(s["n_steps"]):
+        rng, hosts, _ = step_host_failures(rng, hosts, jnp.float32(k * dt),
+                                           dt, cfg)
+        ups.append(np.asarray(hosts.up))
+    runs = _down_runs(np.stack(ups))
+    assert all(r == s["repair_steps"] for r in runs), (
+        f"down-run lengths {sorted(set(runs))} != {s['repair_steps']}")
+
+
+@st.composite
+def workload_scenario(draw):
+    return dict(
+        seed=draw(st.integers(0, 2 ** 16)),
+        n_tasks=draw(st.integers(1, 12)),
+        n_hosts=draw(st.integers(2, 5)),
+        mtbf_h=draw(st.floats(3.0, 40.0)),
+        repair_h=draw(st.floats(0.25, 2.0)),
+    )
+
+
+def _run(s, checkpoint_interval_h, n_steps=24 * 4 * 6, dt=0.25):
+    rng = np.random.default_rng(s["seed"])
+    tasks = make_task_table(
+        np.sort(rng.uniform(0.0, 6.0, s["n_tasks"])),
+        rng.uniform(0.25, 3.0, s["n_tasks"]),
+        rng.integers(1, 3, s["n_tasks"]).astype(float))
+    hosts = make_host_table(s["n_hosts"], 4)
+    cfg = SimConfig(
+        n_steps=n_steps, seed=s["seed"],
+        failures=FailureConfig(enabled=True, mtbf_h=s["mtbf_h"],
+                               repair_h=s["repair_h"], checkpointing=True,
+                               checkpoint_interval_h=checkpoint_interval_h))
+    ci = (200 + 100 * np.sin(np.arange(n_steps) * dt)).astype(np.float32)
+    final, _ = simulate(tasks, hosts, ci, cfg)
+    return final, summarize(final, cfg)
+
+
+@settings(max_examples=20, deadline=None)
+@given(workload_scenario())
+def test_lost_work_nonnegative_and_zero_under_per_step_checkpointing(s):
+    final, r = _run(s, checkpoint_interval_h=1.0)
+    assert float(r.lost_work_h) >= 0.0
+    assert np.all(np.asarray(final.tasks.lost_work) >= 0.0)
+    final1, r1 = _run(s, checkpoint_interval_h=0.25)
+    assert float(r1.lost_work_h) == 0.0, (
+        "per-step checkpointing left un-snapshot progress to lose")
+
+
+@settings(max_examples=20, deadline=None)
+@given(workload_scenario())
+def test_interrupted_tasks_eventually_done(s):
+    """Failures interrupt but never drop work: with repairs shorter than
+    the horizon and a fleet that keeps some capacity, every task ends DONE."""
+    final, r = _run(s, checkpoint_interval_h=1.0)
+    status = np.asarray(final.tasks.status)
+    arrival = np.asarray(final.tasks.arrival)
+    assert np.all(status[np.isfinite(arrival)] == DONE), (
+        f"unfinished tasks with {float(r.n_interrupts):.0f} interrupts: "
+        f"{status[np.isfinite(arrival)]}")
