@@ -16,21 +16,29 @@ metric the seed's results/bench/simperf.json reported, so the speed
 trajectory is comparable across PRs), `techniques` (cooling + pricing +
 renewables + battery, the composition the paper sweeps and the part the
 megakernel fuses) and `typed` (priority-aware scheduling + shifting with a
-35% interactive fraction — the demand-side workload subsystem's
-per-priority scheduler passes and per-class metric matmuls).  On a single CPU core both executors converge toward the
-shared demand-scan floor (scheduler + progress + power probe — identical
-work in both, and hoisted out of the vmap batch in both because the demand
-phase is trace-independent); the megakernel's fusion pays where the
-per-step facility stages cost kernel dispatches / HBM round-trips, which is
-the accelerator regime the Pallas path targets.  The fail-able claim below
-is therefore the speed TRAJECTORY: this PR's hot-loop work (scatter-free
-scheduler sums, single-sort price bands, the megakernel itself) must keep
-vmap64 throughput >= 2x the seed baseline.
+35% interactive fraction — the demand-side workload subsystem).  For the
+untyped variants the demand scan is trace-independent, so XLA hoists it
+out of the vmap batch (computed once, not x N); `typed` turns on shifting,
+whose gate reads each lane's carbon trace, making the demand scan
+per-lane — the structurally irreducible cost the single-pass scheduler,
+presorted task table and bucket-decomposed windowed quantiles minimize
+(root-cause analysis + key construction: benchmarks/PERFORMANCE.md).  The
+fail-able claims below are the speed TRAJECTORY: vmap64 bare and vmap16
+typed throughput must each stay >= 2x their seed baselines.
+
+A weak-scaling mode rides along: the shard_map executor
+(core/grid.py `ScenarioGrid.run_shard_map`) places one leading-axis chunk
+of `WEAK_CELLS_PER_DEVICE` cells per device — cells grow with the device
+count, so FLAT per-device sim-yr/s across device counts is the pass
+condition.  Rows carry `per_device`, the device memory watermark
+(`peak_bytes_per_device`, None where the backend exposes no allocator
+stats — CPU) and the chunk plan's `predicted_bytes_per_lead` side by side.
 
 Besides results/bench/simperf.json this module publishes BENCH_simperf.json
-at the repo root: the headline numbers (single / vmapN / per-device, both
-backends, both configs) that README-level claims and the CI bench-smoke
-gate point at.
+at the repo root: the headline numbers (single / vmapN / per-device /
+weak-scaling, both backends, all configs) that README-level claims and the
+CI bench-smoke gate point at; run.py appends the headline summary to
+BENCH_simperf.history.jsonl per invocation.
 """
 from __future__ import annotations
 
@@ -42,7 +50,9 @@ import numpy as np
 
 from repro.core import (BatteryConfig, CoolingConfig, PricingConfig,
                         RenewableConfig, SchedulerConfig, ShiftingConfig,
-                        simulate, summarize, sweep_grid, trace_axis)
+                        simulate, summarize, sweep_grid, trace_axis,
+                        telemetry)
+from repro.core.grid import ScenarioGrid
 from repro.kernels.ops import resolved_interpret
 from .common import DT_H, pct, regions, save_rows, setup, time_split
 
@@ -55,6 +65,19 @@ BACKENDS = ("stage-pipeline", "megakernel")
 # reference points for the speed-trajectory claim in check().
 SEED_VMAP64_YEARS_PER_S = 5.6
 SEED_PALLAS_YEARS_PER_S = 0.089
+# The typed variant's vmap16 rate BEFORE the single-pass scheduler /
+# presorted-table / windowed-quantile rework (the ~20x batching collapse
+# this campaign removed; see benchmarks/PERFORMANCE.md).  check() gates the
+# typed vmap16 rate at >= 2x this value; the weak-scaling mode gates the
+# PER-DEVICE typed rate at the same bar even under --smoke (a RuntimeError
+# inside run() surfaces as a SUITE ERROR, which does fail CI bench-smoke).
+SEED_TYPED_VMAP16_YEARS_PER_S = 0.33
+WEAK_TYPED_GATE_YEARS_PER_S = 2.0 * SEED_TYPED_VMAP16_YEARS_PER_S
+
+# Weak-scaling mode: cells grow with the device count so the per-device
+# block (and working set) stays constant — flat per-device sim-yr/s over
+# devices is the pass condition, falling per-device rate is lost scaling.
+WEAK_CELLS_PER_DEVICE = 8
 
 
 def _time(fn, *args, reps=3):
@@ -94,6 +117,72 @@ def _shared_traces(n_steps: int):
     cf = np.clip(np.sin(2 * np.pi * (t - 6.0) / 24.0), 0.0, 1.0).astype(
         np.float32)
     return {"price_trace": price, "wet_bulb_trace": wb, "pv_cf_trace": cf}
+
+
+def _weak_scaling_rows(tasks, hosts, cfg, sim_years):
+    """Weak-scaling mode: the shard_map executor (core/grid.py) places one
+    leading-axis chunk of WEAK_CELLS_PER_DEVICE cells per device; rows
+    report per-device sim-yr/s next to the device memory watermark and the
+    chunk plan's predicted bytes.  At one device the executor must be
+    bitwise-equal to the chunked path (acceptance criterion — checked here
+    on every run, so CI bench-smoke pins it too); the typed per-device rate
+    is gated at WEAK_TYPED_GATE_YEARS_PER_S via RuntimeError (--smoke skips
+    check(), so the gate lives inside run())."""
+    ndev = jax.device_count()
+    mesh = jax.make_mesh((ndev,), ("data",))
+    cells = WEAK_CELLS_PER_DEVICE * ndev
+    traces = regions(cells, cfg.n_steps)
+    rows, summary = [], {"device_count": ndev, "cells": cells}
+    for variant, vcfg, dyn in [
+            ("bare", cfg, {}),
+            ("typed", _typed_cfg(cfg),
+             {"interactive_frac": np.float32(0.35)})]:
+        grid = ScenarioGrid([trace_axis(traces)], base_dyn=dict(dyn))
+        # donate=False: the SAME payload arrays are re-submitted each
+        # timing rep (donation would invalidate them after the first call)
+        call = grid.shard_map_callable(tasks, hosts, vcfg, mesh=mesh,
+                                       donate=False)
+        payloads = grid.payloads()
+        if ndev == 1:
+            # acceptance: shard_map executor == single-device chunked path,
+            # bitwise — any drift here means the executors diverged
+            ref = sweep_grid(tasks, hosts, vcfg, [trace_axis(traces)],
+                             dyn=dict(dyn))
+            got = call(*payloads)
+            for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+                if not np.array_equal(np.asarray(a), np.asarray(b)):
+                    raise RuntimeError(
+                        f"weak-scaling executor diverged from the chunked "
+                        f"path at device_count=1 ({variant} variant): "
+                        f"{np.asarray(a).ravel()[:3]} vs "
+                        f"{np.asarray(b).ravel()[:3]}")
+        tm = _time(call, *payloads)
+        t_w = tm["steady_s"]
+        per_dev = sim_years * cells / t_w / ndev
+        peak = telemetry.peak_bytes_per_device()
+        row = {"bench": "simperf", "backend": "stage-pipeline",
+               "variant": variant, "mode": "weak_scaling",
+               "metric": f"sim_years_per_s_weak[{variant},ndev={ndev}]",
+               "value": pct(sim_years * cells / t_w),
+               "per_device": pct(per_dev),
+               "device_count": ndev, "cells": cells,
+               "cells_per_device": WEAK_CELLS_PER_DEVICE,
+               "wall_s": pct(t_w), "compile_s": pct(tm["compile_s"]),
+               "first_call_s": pct(tm["first_call_s"]),
+               "peak_bytes_per_device": peak,
+               "predicted_bytes_per_lead": pct(
+                   grid._per_lead_bytes(tasks, hosts, vcfg))}
+        rows.append(row)
+        summary[f"{variant}_per_device_years_per_s"] = pct(per_dev)
+        if variant == "typed" and per_dev < WEAK_TYPED_GATE_YEARS_PER_S:
+            raise RuntimeError(
+                f"weak-scaling typed throughput regressed: {per_dev:.3f} "
+                f"sim-yr/s per device < gated baseline "
+                f"{WEAK_TYPED_GATE_YEARS_PER_S} (2x the pre-campaign "
+                f"typed rate {SEED_TYPED_VMAP16_YEARS_PER_S})")
+    summary["peak_bytes_per_device"] = rows[-1]["peak_bytes_per_device"]
+    summary["typed_gate_years_per_s"] = WEAK_TYPED_GATE_YEARS_PER_S
+    return rows, summary
 
 
 def run(quick: bool = True):
@@ -184,6 +273,10 @@ def run(quick: bool = True):
                      "compile_s": pct(tm["compile_s"]),
                      "first_call_s": pct(tm["first_call_s"])})
 
+    weak_rows, weak_summary = _weak_scaling_rows(tasks, hosts, cfg,
+                                                 sim_years)
+    rows += weak_rows
+
     save_rows("simperf", rows)
     with open(BENCH_FILE, "w") as f:
         json.dump({"bench": "simperf", "smoke": bool(common.SMOKE),
@@ -196,7 +289,9 @@ def run(quick: bool = True):
                    "sim_years_per_run": pct(sim_years),
                    "seed_baseline": {
                        "vmap64": SEED_VMAP64_YEARS_PER_S,
-                       "pallas": SEED_PALLAS_YEARS_PER_S},
+                       "pallas": SEED_PALLAS_YEARS_PER_S,
+                       "typed_vmap16": SEED_TYPED_VMAP16_YEARS_PER_S},
+                   "weak_scaling": weak_summary,
                    "rows": rows}, f, indent=1, default=float)
     return rows
 
@@ -211,15 +306,27 @@ def check(rows) -> list[str]:
     mk_vm = _get(rows, "sim_years_per_s_vmap64[megakernel,techniques]")
     st_vm = _get(rows, "sim_years_per_s_vmap64[stage-pipeline,techniques]")
     mk_pal = _get(rows, "sim_years_per_s_pallas[megakernel]")
+    ty_vm = _get(rows, "sim_years_per_s_vmap16[stage-pipeline,typed]")
+    te_vm = _get(rows, "sim_years_per_s_vmap16[stage-pipeline,techniques]")
+    weak = next(r for r in rows if r.get("mode") == "weak_scaling"
+                and r["variant"] == "typed")
     speedup = vm["value"] / max(one["value"], 1e-9)
     vs_paper = one["value"] / 0.0127
     vs_seed = vm["value"] / SEED_VMAP64_YEARS_PER_S
     mk_gain = mk_vm["value"] / max(st_vm["value"], 1e-9)
     pal_vs_seed = mk_pal["value"] / SEED_PALLAS_YEARS_PER_S
+    ty_vs_seed = ty_vm["value"] / SEED_TYPED_VMAP16_YEARS_PER_S
+    ty_gap = te_vm["value"] / max(ty_vm["value"], 1e-9)
     seed_verdict = ("OK" if vs_seed >= 2.0
                     else "FAIL: hot loop regressed below 2x the seed")
     mk_verdict = ("OK" if mk_gain >= 1.0
                   else "WEAK: shared demand-scan floor dominates on this host")
+    ty_verdict = ("OK" if ty_vs_seed >= 2.0
+                  else "FAIL: typed demand scan regressed below 2x the "
+                       "pre-campaign rate")
+    weak_verdict = ("OK" if weak["per_device"] >= WEAK_TYPED_GATE_YEARS_PER_S
+                    else "FAIL: weak-scaling typed per-device rate below "
+                         "the gated baseline")
     return [
         f"simperf: single-sim {one['value']} sim-years/s = {vs_paper:.0f}x "
         f"the paper's per-core Java rate",
@@ -233,4 +340,12 @@ def check(rows) -> list[str]:
         f"simperf: megakernel Pallas path {mk_pal['value']} sim-years/s = "
         f"{pal_vs_seed:.0f}x the seed's per-step-kernel path "
         f"({SEED_PALLAS_YEARS_PER_S})",
+        f"simperf: typed vmap(16) {ty_vm['value']} sim-years/s = "
+        f"{ty_vs_seed:.1f}x the pre-campaign collapse "
+        f"({SEED_TYPED_VMAP16_YEARS_PER_S}); techniques/typed gap "
+        f"{ty_gap:.1f}x ({ty_verdict})",
+        f"simperf: weak scaling [{weak['cells']} cells @ "
+        f"{weak['device_count']} device(s)] typed {weak['per_device']} "
+        f"sim-years/s per device (gate {WEAK_TYPED_GATE_YEARS_PER_S}) "
+        f"({weak_verdict})",
     ]

@@ -293,8 +293,17 @@ def stage_task_stopper(cfg: SimConfig) -> Stage:
     return fn
 
 
+def _presort_enabled(cfg: SimConfig) -> bool:
+    """True when `simulate` permutes the task table into (priority desc,
+    arrival) row order before the scan (see state.priority_schedule_order)
+    — the scheduler stage must then run its presorted FIFO-prefix path.
+    Static in cfg, so the stage closure and `simulate` always agree."""
+    return cfg.scheduler.priority_levels > 1 and cfg.scheduler.mode == "first_fit"
+
+
 def stage_scheduler(cfg: SimConfig) -> Stage:
     reactive = cfg.resilience.enabled and cfg.resilience.reactive_placement
+    presorted = _presort_enabled(cfg)
 
     def fn(state: SimState, ctx: dict):
         shift_ok = shifting_mod.start_allowed(
@@ -308,7 +317,8 @@ def stage_scheduler(cfg: SimConfig) -> Stage:
         tasks = scheduler_mod.schedule_step(state.tasks, state.hosts, state.t,
                                             shift_ok, cfg.scheduler,
                                             slots=ctx.get("slots_per_step"),
-                                            host_order=order)
+                                            host_order=order,
+                                            presorted=presorted)
         metrics = state.metrics._replace(
             n_shift_delays=state.metrics.n_shift_delays + n_delayed)
         return state._replace(tasks=tasks, metrics=metrics), ctx
@@ -609,6 +619,10 @@ def stage_resilience(cfg: SimConfig) -> Stage:
         throttle = resilience_mod.next_throttle(
             flow.it_kw, ctx["raw_it_kw"], ctx["wet_bulb_c"], derate, cap,
             rcfg, threshold_c=ctx.get("throttle_inlet_c"))
+        # the throttle this step RAN under (stage_progress/stage_power read
+        # state.throttle before this stage replaces it) — stashed for the
+        # probe bus, which samples after the recurrence has advanced
+        ctx["throttle_factor"] = state.throttle
         return state._replace(metrics=m, throttle=throttle), ctx
     return fn
 
@@ -683,6 +697,13 @@ def stage_probes(cfg: SimConfig) -> Stage:
         sample["soc_kwh"] = state.battery.charge
         sample["window_peak_kw"] = state.metrics.window_peak_kw
         sample["queue_depth"] = _queue_depth(state)
+        # resilience channels: applied throttle / derate / PDU cap — the
+        # ctx carries 1.0 / 1.0 / +inf series when resilience is off, so
+        # the channels exist (and agree across backends) unconditionally
+        sample["throttle_factor"] = ctx.get("throttle_factor",
+                                            jnp.float32(1.0))
+        sample["chiller_derate"] = ctx["chiller_derate"]
+        sample["pdu_cap_kw"] = ctx["pdu_cap_kw"]
         probes = telemetry_mod.probe_write(state.probes, state.step,
                                            stride, sample)
         return state._replace(probes=probes), ctx
@@ -790,6 +811,9 @@ def _build_demand_step(cfg: SimConfig, dyn: dict):
             p = host_power_kw(cpu_u, gpu_u, state.hosts.n_gpus, on,
                               cfg.cpu_power, cfg.gpu_power)
         it_kw = jnp.sum(p)
+        # throttle the step RAN under (the probe-bus channel; the recurrence
+        # below replaces state.throttle with the NEXT step's value)
+        applied_throttle = state.throttle if resil else jnp.float32(1.0)
         if resil:  # mirror stage_power's clamp + stage_resilience's update
             raw_it_kw = it_kw
             it_kw = jnp.minimum(it_kw, ctx["pdu_cap_kw"])
@@ -813,6 +837,7 @@ def _build_demand_step(cfg: SimConfig, dyn: dict):
         ys = {"it_kw": it_kw}
         if qd is not None:
             ys["queue_depth"] = qd
+            ys["throttle_factor"] = applied_throttle
         if cfg.collect_series:
             free_c, free_g = scheduler_mod.free_capacity(state.tasks,
                                                          state.hosts)
@@ -984,6 +1009,11 @@ def _simulate_megakernel(state0: SimState, inputs: StepInputs,
         series["soc_kwh"] = flows["soc"]
         series["window_peak_kw"] = wp
         series["queue_depth"] = demand_ys["queue_depth"]
+        series["throttle_factor"] = demand_ys["throttle_factor"]
+        # the facility chain echoes the derate series it actually applied
+        # (ones when healthy); the PDU cap is demand-side, from the inputs
+        series["chiller_derate"] = flows["chiller_derate"]
+        series["pdu_cap_kw"] = inputs.pdu_cap_kw
         final = final._replace(probes=telemetry_mod.probes_from_series(
             cfg.n_steps, cfg.probes, series))
     if not cfg.collect_series:
@@ -1077,6 +1107,19 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
         from . import state as state_mod
         tasks = state_mod.with_interactive_frac(
             tasks, interactive_frac, cfg.interactive_grace_h, seed=cfg.seed)
+    # priority scheduling: permute rows into (priority desc, arrival) order
+    # ONCE, outside the scan, so the per-step priority select runs as the
+    # plain FIFO prefix (scheduler.schedule_first_fit presorted path) with
+    # no [L*T] level-major flatten+cumsum in the demand hot loop.  The
+    # final table is un-permuted below, so callers see original row order.
+    unpermute = None
+    if _presort_enabled(cfg):
+        from . import state as state_mod
+        order = state_mod.priority_schedule_order(
+            tasks, cfg.scheduler.priority_levels)
+        tasks = state_mod.permute_task_table(tasks, order)
+        inv = state_mod.inverse_permutation(order)
+        unpermute = lambda tt: state_mod.permute_task_table(tt, inv)
     inputs = build_step_inputs(ci_trace, cfg, dyn=dyn)
     dyn.pop("wet_bulb_trace", None)  # consumed by the inputs, not a ctx key
     dyn.pop("price_trace", None)
@@ -1091,9 +1134,13 @@ def simulate(tasks: TaskTable, hosts: HostTable, ci_trace, cfg: SimConfig,
 
     def run():
         if cfg.backend == "megakernel":
-            return _simulate_megakernel(state0, inputs, cfg, dyn)
-        step = build_step_fn(cfg, stages, dyn)
-        return jax.lax.scan(step, state0, inputs)
+            final, ys = _simulate_megakernel(state0, inputs, cfg, dyn)
+        else:
+            step = build_step_fn(cfg, stages, dyn)
+            final, ys = jax.lax.scan(step, state0, inputs)
+        if unpermute is not None:
+            final = final._replace(tasks=unpermute(final.tasks))
+        return final, ys
 
     # cut a RunRecord only for eager top-level calls: under jit/vmap (grid
     # sweeps, fleet cells) the outer driver records instead, and blocking

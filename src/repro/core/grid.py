@@ -162,6 +162,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .config import SimConfig
@@ -758,6 +759,115 @@ class ScenarioGrid:
             [run_chunk(_slice_lead(payloads[0], s, chunk_size))
              for s in range(0, self.axes[0].length, chunk_size)])
 
+    def _mesh_lead_devices(self, mesh) -> int:
+        """Device count along the mesh axes the leading dim shards over."""
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        ndev = 1
+        for a in (_mesh_spec(mesh)[0] or ()):
+            ndev *= sizes[a]
+        return ndev
+
+    def shard_map_callable(self, tasks: TaskTable, hosts: HostTable,
+                           cfg: SimConfig, ci_trace=None, *, mesh=None,
+                           donate: bool = True):
+        """Build the weak-scaling executor: `f(*payloads) -> SimResult`.
+
+        The returned callable places each leading-axis chunk of
+        ``lead / n_devices`` grid cells on its own device via
+        :func:`jax.experimental.shard_map.shard_map` — every device runs
+        the SAME per-shard program on its local block, with no collectives
+        (grid cells are independent), so weak scaling (cells ∝ devices)
+        holds the per-device working set and per-device wall time constant.
+        The sharded payload is donated (``donate=True``) so each call's
+        input block buffer can be reused for its output on device —
+        matching the chunked executor's donation discipline.  Pass
+        ``donate=False`` when the SAME payload arrays will be re-submitted
+        (e.g. repeated benchmark timing calls).
+
+        Build once, call many times: the jit wrapper is created here, not
+        per call, so repeated invocations hit the executable cache.
+        """
+        if self.axes[0].kind == "region":
+            raise ValueError("cannot shard a grid whose leading axis is the "
+                             "region_axis: add a swept leading axis")
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        spec = _mesh_spec(mesh)
+        ndev = self._mesh_lead_devices(mesh)
+        lead = self.axes[0].length
+        if lead % ndev:
+            raise ValueError(
+                f"shard_map executor: leading axis ({lead} cells) must "
+                f"divide evenly over the mesh's {ndev} devices — pad the "
+                f"axis or size the grid as cells = k * device_count")
+        fn = self.grid_fn(tasks, hosts, cfg, ci_trace)
+        n_pay = len(self.axes)
+        in_specs = tuple(spec if i == 0 else P() for i in range(n_pay))
+        sm = shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=spec,
+                       check_rep=False)
+        jfn = jax.jit(sm, donate_argnums=(0,) if donate else ())
+        lead_sh = NamedSharding(mesh, spec)
+        repl_sh = NamedSharding(mesh, P())
+
+        def call(*payloads):
+            args = (jax.device_put(payloads[0], lead_sh),) + tuple(
+                jax.device_put(p, repl_sh) for p in payloads[1:])
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                return jfn(*args)
+
+        return call
+
+    def run_shard_map(self, tasks: TaskTable, hosts: HostTable,
+                      cfg: SimConfig, ci_trace=None, *, mesh=None,
+                      donate: bool = True) -> SimResult:
+        """Evaluate the grid with the shard_map weak-scaling executor.
+
+        Same contract as :meth:`run` (leading result dims = ``self.shape``)
+        with the leading axis split one-chunk-per-device instead of looped
+        host-side; requires ``lead % device_count == 0``.  At one device the
+        compiled per-shard program sees exactly the shapes the single-device
+        chunked path compiles, so the results are bitwise-equal
+        (tests/test_grid.py pins this).
+        """
+        self._check_cfg(cfg)
+        self._check_tasks(tasks)
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        with telemetry_mod.span("grid.build", shape=str(self.shape),
+                                executor="shard_map"):
+            call = self.shard_map_callable(tasks, hosts, cfg, ci_trace,
+                                           mesh=mesh, donate=donate)
+            payloads = self.payloads()
+        recording = (telemetry_mod.enabled()
+                     and not telemetry_mod.is_tracing((tasks, hosts,
+                                                       payloads)))
+        if not recording:
+            with telemetry_mod.span("grid.execute", executor="shard_map"):
+                return call(*payloads)
+        with telemetry_mod.run_recorder("grid", cfg) as rec:
+            rec.grid_shape = [int(s) for s in self.shape]
+            rec.extra["executor"] = "shard_map"
+            rec.extra["n_scenarios"] = int(self.n_scenarios)
+            rec.mesh = {"axis_names": [str(a) for a in mesh.axis_names],
+                        "shape": [int(s) for s in mesh.devices.shape]}
+            ndev = self._mesh_lead_devices(mesh)
+            rec.chunk = {
+                "chunk_size": int(self.axes[0].length // ndev),
+                "n_chunks": int(ndev),
+                "auto": False,
+                "predicted_bytes_per_lead": float(
+                    self._per_lead_bytes(tasks, hosts, cfg)),
+                "actual_payload_bytes": int(sum(
+                    jnp.asarray(l).size * jnp.asarray(l).dtype.itemsize
+                    for p in payloads for l in jax.tree.leaves(p))),
+            }
+            with telemetry_mod.span("grid.execute", executor="shard_map"):
+                out = call(*payloads)
+            jax.block_until_ready(out)
+        return out
+
     def lower(self, tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
               ci_trace=None, *, mesh=None,
               reduce: tuple[str, int] | None = None):
@@ -819,15 +929,29 @@ def sweep_grid(tasks: TaskTable, hosts: HostTable, cfg: SimConfig,
                dyn: dict | None = None, chunk_size: int | None = None,
                mesh=None, jit: bool = True,
                reduce: tuple[str, int] | None = None,
-               memory_budget_bytes: float | None = None) -> SimResult:
+               memory_budget_bytes: float | None = None,
+               executor: str = "chunked") -> SimResult:
     """One-call entry point: `sweep_grid(tasks, hosts, cfg, [axis, ...])`.
 
     `dyn` holds fixed (non-swept) traced scenario values applied to every grid
     point, e.g. `dyn={"n_active_hosts": 12}` to run the whole grid on a
     down-scaled datacenter.  `reduce=(op, axis)` folds an axis inside the
     compiled program.  See the module docstring for the axis zoo.
+
+    `executor="shard_map"` routes through the weak-scaling executor
+    (`ScenarioGrid.run_shard_map`): one leading-axis chunk per device via
+    `shard_map`, donated buffers, `lead % device_count == 0` required;
+    `chunk_size` / `reduce` / `memory_budget_bytes` do not apply there.
     """
     grid = ScenarioGrid(axes, base_dyn=dyn)
+    if executor == "shard_map":
+        if chunk_size is not None or reduce is not None:
+            raise ValueError("executor='shard_map' places one chunk per "
+                             "device: chunk_size/reduce do not apply")
+        return grid.run_shard_map(tasks, hosts, cfg, ci_trace, mesh=mesh)
+    if executor != "chunked":
+        raise ValueError(f"unknown executor {executor!r}; "
+                         f"pick 'chunked' or 'shard_map'")
     return grid.run(tasks, hosts, cfg, ci_trace, chunk_size=chunk_size,
                     mesh=mesh, jit=jit, reduce=reduce,
                     memory_budget_bytes=memory_budget_bytes)

@@ -103,21 +103,23 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
     n_started = jnp.maximum(jnp.sum(started.astype(jnp.float32)), 1.0)
     sdelay = jnp.where(started, tasks.first_start - tasks.arrival, 0.0)
 
-    # per-class splits via masked [C, T] row reductions (scatter-free, and —
-    # unlike a dot — the vmapped lowering reduces in the same order as the
-    # unbatched one, keeping simulate_fleet R=1 bitwise == simulate);
-    # violated_done and violated_undone are disjoint (done vs not-done), so
-    # the class counts sum exactly to the totals above
+    # per-class splits via ONE masked [M, C, T] reduction over the stacked
+    # per-task vectors (scatter-free, and — unlike a dot — the vmapped
+    # lowering reduces each (metric, class) row in the same order as the
+    # unbatched one, keeping simulate_fleet R=1 bitwise == simulate); the
+    # four separate [C, T] reductions this fuses cost four broadcasts of
+    # the class mask per grid cell.  violated_done and violated_undone are
+    # disjoint (done vs not-done), so the class counts sum exactly to the
+    # totals above
     cw = (tasks.job_class[None, :]
           == jnp.arange(N_JOB_CLASSES, dtype=jnp.int32)[:, None])
-
-    def _csum(x):
-        return jnp.sum(jnp.where(cw, x[None, :], 0.0), axis=-1)
-
-    class_n_viol = _csum((violated_done | violated_undone).astype(jnp.float32))
-    class_n_decided = _csum(decided.astype(jnp.float32))
-    class_n_started = _csum(started.astype(jnp.float32))
-    class_sdelay = _csum(sdelay)
+    stacked = jnp.stack([
+        (violated_done | violated_undone).astype(jnp.float32),
+        decided.astype(jnp.float32),
+        started.astype(jnp.float32),
+        sdelay])                                             # [M, T]
+    class_n_viol, class_n_decided, class_n_started, class_sdelay = jnp.sum(
+        jnp.where(cw[None, :, :], stacked[:, None, :], 0.0), axis=-1)
 
     it_safe = jnp.maximum(m.it_energy, 1e-9)
     # settle the final (still open) demand-charge billing window

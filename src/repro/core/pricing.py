@@ -33,6 +33,7 @@ fuses into the simulation step; the price trace is a sweepable grid axis
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from .config import BatteryConfig, PricingConfig
 from .shifting import forward_window_quantiles
@@ -53,10 +54,13 @@ def precompute_price_signals(price_trace, dt_h: float, cfg: BatteryConfig):
     collapse onto the price itself), the arbitrage analogue of a flat
     carbon trace.
     """
+    # np.asarray keeps the static config levels CONCRETE under jit — a
+    # jnp.stack here would stage them into a tracer and silently demote
+    # forward_window_quantiles to its blocked per-window-sort fallback
     bands = forward_window_quantiles(
         price_trace, dt_h, cfg.price_window_h,
-        jnp.stack([jnp.float32(cfg.price_charge_quantile),
-                   jnp.float32(cfg.price_discharge_quantile)]))
+        np.asarray([cfg.price_charge_quantile,
+                    cfg.price_discharge_quantile], np.float32))
     return bands[0], bands[1]
 
 

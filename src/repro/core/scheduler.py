@@ -95,12 +95,39 @@ def _first_k_indices(mask, k: int):
 def _first_k_by_priority(mask, priority, k: int, levels: int):
     """First k True rows of mask in (priority desc, arrival) order.
 
-    Priority-aware candidate selection, still scatter-free: one
-    `_first_k_indices` pass per priority level (`levels` is a small static
-    int from SchedulerConfig), then one merge pass over the concatenated
-    per-level candidate lists.  Higher classes fill the k slots first; FIFO
-    (row) order is preserved within a class because each per-level pass
-    already returns rows in arrival order.  `priority` may be traced.
+    ONE sorted-key pass: the level-major flattened mask `[L, T] -> [L*T]`
+    (levels descending, rows in arrival order within each level) is already
+    sorted by the composite key (priority level, arrival), so a single
+    cumsum + searchsorted selects the first k set bits and `idx % T`
+    recovers the task rows.  The per-level form this replaces
+    (`_first_k_by_priority_reference`) ran `levels + 1` cumsum passes and a
+    gather merge — per step, inside the hot loop, and batched over every
+    grid cell; it was the single largest term in the typed-variant vmap
+    collapse.  `priority` may be traced.
+
+    Equivalence with the reference (which truncates each level to k before
+    merging): a row dropped by a per-level truncation sits at position
+    >= k within its OWN level, so at position >= k of the merged order too
+    — never selectable among the first k.  Pinned by differential tests
+    (hypothesis + lexsort model) in tests/test_core_properties.py.
+    """
+    prio = jnp.asarray(priority)
+    t = prio.shape[0]
+    lvl = jnp.arange(levels - 1, -1, -1, dtype=prio.dtype)
+    m = (mask[None, :] & (prio[None, :] == lvl[:, None])).reshape(-1)
+    csum = jnp.cumsum(m.astype(jnp.int32))
+    wanted = jnp.arange(1, k + 1, dtype=jnp.int32)
+    idx = jnp.searchsorted(csum, wanted, side="left").astype(jnp.int32)
+    return jnp.where(wanted <= csum[-1], idx % t, -1)
+
+
+def _first_k_by_priority_reference(mask, priority, k: int, levels: int):
+    """Per-level reference form of `_first_k_by_priority` (kept as the
+    differential-test oracle): one `_first_k_indices` pass per priority
+    level, then one merge pass over the concatenated per-level candidate
+    lists.  Higher classes fill the k slots first; FIFO (row) order is
+    preserved within a class because each per-level pass already returns
+    rows in arrival order.
     """
     prio = jnp.asarray(priority)
     cands = [_first_k_indices(mask & (prio == p), k)
@@ -111,7 +138,8 @@ def _first_k_by_priority(mask, priority, k: int, levels: int):
 
 
 def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
-                       cfg: SchedulerConfig, slots=None, host_order=None):
+                       cfg: SchedulerConfig, slots=None, host_order=None,
+                       presorted: bool = False):
     """Exact bounded first-fit.  Returns updated task table.
 
     `cfg.slots_per_step` is the STATIC placement bound (it shapes the
@@ -127,44 +155,131 @@ def schedule_first_fit(tasks: TaskTable, hosts: HostTable, now, shift_ok,
     deactivated host never fits, even for zero-footprint tasks: `0 >= 0`
     used to admit a coreless task onto a failed host (whose free capacity
     reads as exactly 0), parking it there forever.
+
+    `presorted=True` asserts the table rows are ALREADY in
+    (priority desc, arrival) order (`state.priority_schedule_order`), so
+    priority admission is the plain FIFO prefix of the row order and the
+    per-step `[L*T]` level-major flatten+cumsum disappears entirely.  The
+    engine permutes the table once per simulation and sets this; direct
+    callers with arrival-ordered tables keep the default.
     """
     k = cfg.slots_per_step
+    t = tasks.arrival.shape[0]
+    h_n = hosts.cores.shape[0]
     elig = _eligible(tasks, now, shift_ok)
-    if cfg.priority_levels > 1:
-        cand = _first_k_by_priority(elig, tasks.priority, k,
-                                    cfg.priority_levels)
-    else:  # single class: the plain FIFO prefix, bit-for-bit the old path
-        cand = _first_k_indices(elig, k)
+    multi = cfg.priority_levels > 1 and not presorted
+    if multi:
+        # level-major flattened mask: merged (priority desc, arrival) order
+        prio = jnp.asarray(tasks.priority)
+        lvl = jnp.arange(cfg.priority_levels - 1, -1, -1, dtype=prio.dtype)
+        m = (elig[None, :] & (prio[None, :] == lvl[:, None])).reshape(-1)
+    else:  # single class, or presorted rows: row order IS admission order
+        m = elig
+    # One cumsum serves BOTH directions of the candidate mapping:
+    # slot -> row (cand, via k binary searches) and row -> slot (rank,
+    # via a gather) — the k-th set bit of m sits at the first position
+    # whose cumsum equals k+1, and a set row's rank is its cumsum - 1.
+    csum = jnp.cumsum(m.astype(jnp.int32))
+    wanted = jnp.arange(1, k + 1, dtype=jnp.int32)
+    idx = jnp.searchsorted(csum, wanted, side="left").astype(jnp.int32)
+    cand = jnp.where(wanted <= csum[-1], idx % t if multi else idx, -1)
     free_c, free_g = free_capacity(tasks, hosts)
     usable = hosts.active & hosts.up
+    hidx = jnp.arange(h_n, dtype=jnp.int32)
+    # per-slot resource needs, gathered ONCE before the loop (the body used
+    # to re-gather from the [T] columns every iteration, a batched gather
+    # per iteration under vmapped grids)
+    cj = jnp.maximum(cand, 0)
+    nc_all = jnp.where(cand >= 0, tasks.cores[cj], 0.0)
+    ng_all = jnp.where(cand >= 0, tasks.gpus[cj], 0.0)
+    # suffix minima of the per-slot needs: once NO remaining candidate fits
+    # on ANY usable host, every later iteration is a placement no-op (it
+    # skips the candidate and changes no capacity), so the loop may stop —
+    # bit-for-bit the same outcome.  Saturated steps (full hosts behind a
+    # backlog, e.g. shifting holding a green-window burst) used to burn all
+    # k iterations doing nothing.
+    inf32 = jnp.float32(jnp.inf)
+    suf_c = jax.lax.cummin(jnp.where(cand >= 0, nc_all, inf32)[::-1])[::-1]
+    suf_g = jax.lax.cummin(jnp.where(cand >= 0, ng_all, inf32)[::-1])[::-1]
 
-    def body(i, carry):
-        free_c, free_g, status, host, first_start = carry
-        ti = cand[i]
-        valid = ti >= 0
-        if slots is not None:  # masked tail: loop runs to the static bound
-            valid = valid & (i < slots)
-        tj = jnp.maximum(ti, 0)
-        need_c, need_g = tasks.cores[tj], tasks.gpus[tj]
+    # Sequential first-fit over the candidate slots, restructured for the
+    # batched (vmapped-grid) hot path:
+    #   * `while_loop` instead of `fori_loop(0, k)`: candidate lists are
+    #     -1-padded at the tail, and iterations past the first -1 were
+    #     no-ops, so stopping there is bit-for-bit the same placement.
+    #     Under vmap the loop runs until every lane's candidates are done —
+    #     the mean eligible count per step (1-2) instead of the static
+    #     bound k (64), which was the dominant per-step cost.
+    #   * the [T]-wide status/host/first_start updates leave the loop:
+    #     the body only records each slot's chosen host in a k-vector
+    #     (a dynamic-update-slice, not a scatter) and the table updates
+    #     happen ONCE after the loop.
+    #   * per-host free-capacity updates use a select instead of a scatter:
+    #     `free - take * (hidx == hj)` applies `x + (-take)` to the chosen
+    #     host and `x - 0.0` (an IEEE no-op) elsewhere, matching the old
+    #     `.at[hj].add(-take)` bit-for-bit.
+    def cond(carry):
+        i, fc, fg = carry[0], carry[1], carry[2]
+        ii = jnp.minimum(i, k - 1)
+        more = cand[ii] >= 0
+        # conservative feasibility: continue while SOME usable host clears
+        # the remaining candidates' component-wise minimum needs (the minima
+        # may come from different candidates, so this can keep iterating
+        # past the last possible placement — but it never stops before one)
+        more = more & jnp.any((fc >= suf_c[ii]) & (fg >= suf_g[ii]) & usable)
+        if slots is not None:  # masked tail, as in the fori_loop form
+            more = more & (i < slots)
+        return (i < k) & more
+
+    def body(carry):
+        i, free_c, free_g, sel_host = carry
+        ii = jnp.minimum(i, k - 1)
+        need_c, need_g = nc_all[ii], ng_all[ii]
         fits = (free_c >= need_c) & (free_g >= need_g) & usable
         if host_order is None:
             h = jnp.argmax(fits)        # first host that fits (first-fit)
         else:  # first fitting host in preference order
             h = host_order[jnp.argmax(fits[host_order])]
-        placed = valid & fits[h]
+        placed = fits[h]
         hj = jnp.where(placed, h, 0).astype(jnp.int32)
         take_c = jnp.where(placed, need_c, 0.0)
         take_g = jnp.where(placed, need_g, 0.0)
-        free_c = free_c.at[hj].add(-take_c)
-        free_g = free_g.at[hj].add(-take_g)
-        tset = jnp.where(placed, tj, tasks.arrival.shape[0])  # OOB -> dropped
-        status = status.at[tset].set(RUNNING, mode="drop")
-        host = host.at[tset].set(h.astype(jnp.int32), mode="drop")
-        first_start = first_start.at[tset].min(now, mode="drop")
-        return free_c, free_g, status, host, first_start
+        free_c = free_c - jnp.where(hidx == hj, take_c, 0.0)
+        free_g = free_g - jnp.where(hidx == hj, take_g, 0.0)
+        sel_host = sel_host.at[ii].set(
+            jnp.where(placed, h.astype(jnp.int32), -1))
+        return i + 1, free_c, free_g, sel_host
 
-    free_c, free_g, status, host, first_start = jax.lax.fori_loop(
-        0, k, body, (free_c, free_g, tasks.status, tasks.host, tasks.first_start))
+    _, free_c, free_g, sel_host = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), free_c, free_g, jnp.full((k,), -1, jnp.int32)))
+    # Deferred table writes via the INVERSE candidate map: each row's slot
+    # is its rank in the admission order (csum - 1), so a [T] gather from
+    # sel_host replaces the three [T]-target scatters this used to do —
+    # XLA CPU serializes batched scatters per lane, and they were ~half
+    # the scheduler stage's cost under vmapped grids.  Rows map to at most
+    # one slot and vice versa, so the select-form updates are bitwise the
+    # scatters they replace.
+    if multi:
+        # clip is index safety only: an out-of-range priority has
+        # m[pos_t] == False (it matched no level), so it never places —
+        # exactly the original per-level behaviour
+        lvl_t = (cfg.priority_levels - 1
+                 - jnp.clip(prio, 0, cfg.priority_levels - 1))
+        pos_t = lvl_t.astype(jnp.int32) * t + jnp.arange(t, dtype=jnp.int32)
+        rank = csum[pos_t] - 1
+        in_k = m[pos_t] & (rank < k)
+    else:
+        rank = csum - 1
+        in_k = elig & (rank < k)
+    host_t = sel_host[jnp.clip(rank, 0, k - 1)]
+    placed_t = in_k & (host_t >= 0)
+    status = jnp.where(placed_t, RUNNING, tasks.status).astype(
+        tasks.status.dtype)
+    host = jnp.where(placed_t, jnp.maximum(host_t, 0),
+                     tasks.host).astype(tasks.host.dtype)
+    first_start = jnp.where(placed_t, jnp.minimum(tasks.first_start, now),
+                            tasks.first_start)
     return tasks._replace(status=status, host=host, first_start=first_start)
 
 
@@ -208,10 +323,12 @@ def schedule_aggregate(tasks: TaskTable, hosts: HostTable, now, shift_ok,
 
 
 def schedule_step(tasks: TaskTable, hosts: HostTable, now, shift_ok,
-                  cfg: SchedulerConfig, slots=None, host_order=None):
+                  cfg: SchedulerConfig, slots=None, host_order=None,
+                  presorted: bool = False):
     if cfg.mode == "first_fit":
         return schedule_first_fit(tasks, hosts, now, shift_ok, cfg,
-                                  slots=slots, host_order=host_order)
+                                  slots=slots, host_order=host_order,
+                                  presorted=presorted)
     if cfg.mode == "aggregate":
         if cfg.priority_levels > 1:
             raise ValueError(

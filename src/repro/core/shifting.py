@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .config import ShiftingConfig
 
@@ -45,6 +46,34 @@ def forward_window_quantiles(trace, dt_h: float, window_h: float, quantiles,
     two levels of the SAME windows, so the stacked form halves the
     dominant precompute cost.
 
+    Two implementations, bitwise-identical outputs (the fast path is pinned
+    against the blocked `jnp.quantile` form in tests):
+
+    * concrete `quantiles` (the production case) take `_window_quantiles_fast`
+      — order statistics instead of per-window sorts.  `jnp.quantile` re-sorts
+      every [W] window (O(S·W·logW) and the dominant precompute cost of the
+      `typed` bench variant once the demand scan is batched over grid cells);
+      the linear-interpolation method only ever reads TWO order statistics per
+      window, which the fast path computes directly.
+    * a traced `quantiles` scalar (dyn-swept level) needs a data-dependent
+      order-statistic depth, so it falls back to the blocked quantile form.
+    """
+    x = jnp.asarray(trace, jnp.float32)
+    s = x.shape[0]
+    w = max(int(round(window_h / dt_h)), 1)
+    try:  # concrete levels? (jnp.asarray would stage them into a tracer)
+        levels = np.atleast_1d(np.asarray(quantiles, np.float32))
+    except (jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return _window_quantiles_blocked(
+            x, s, w, jnp.asarray(quantiles, jnp.float32), chunk_size)
+    out = _window_quantiles_fast(x, s, w, levels, chunk_size)
+    return out[0] if jnp.ndim(quantiles) == 0 else out
+
+
+def _window_quantiles_blocked(x, s: int, w: int, q, chunk_size: int):
+    """Blocked `jnp.quantile` over explicit [chunk, W] window gathers.
+
     The window matrix is built in [chunk_size, W] blocks (`lax.map` over
     start-index blocks) instead of one [S, W] allocation: ~590 MB f32 at a
     year horizon with dt_h=0.1, multiplied under vmapped grids.  Each row's
@@ -54,10 +83,6 @@ def forward_window_quantiles(trace, dt_h: float, window_h: float, quantiles,
     differ by final-ULP rounding because XLA compiles each block shape
     separately).
     """
-    x = jnp.asarray(trace, jnp.float32)
-    s = x.shape[0]
-    w = max(int(round(window_h / dt_h)), 1)
-    q = jnp.asarray(quantiles, jnp.float32)
     off = jnp.arange(w)
 
     def block(starts):  # [C] start indices -> [C] or [Q, C] quantiles
@@ -75,6 +100,175 @@ def forward_window_quantiles(trace, dt_h: float, window_h: float, quantiles,
     return jnp.moveaxis(out, 1, 0).reshape(q.shape[0], n * chunk_size)[:, :s]
 
 
+def _window_quantiles_fast(x, s: int, w: int, levels: np.ndarray,
+                           chunk_size: int):
+    """Exact windowed quantiles via order statistics.  Returns f32[Q, S].
+
+    Bitwise-identical to `_window_quantiles_blocked`: `jnp.quantile`'s
+    "linear" method reads the sorted window at the two static positions
+    low = floor(q·(W-1)) and high = ceil(q·(W-1)) and interpolates in f32;
+    order statistics are VALUES, so any route that produces the same two
+    values per window yields the same bits.  The interpolation constants
+    below replicate jax's `_quantile` f32 arithmetic exactly, including the
+    clamp and the NaN-poisoning of windows that contain a NaN.
+
+    * Full windows (start t <= S-W) never materialize [S, W] rows OR run
+      per-row top_k (XLA CPU TopK over [nfull, W] rows dominated the typed
+      bench's precompute).  A window of length W spans exactly TWO aligned
+      W-blocks: with a = t // W and offset o = t mod W, window(t) =
+      suffix(block_a, o) ∪ prefix(block_{a+1}, o).  Each consecutive block
+      pair is merged-argsorted ONCE (2W elements); membership of merged
+      rank r in offset-o's window is `pos >= o` for block-a elements and
+      `pos < o` for block-(a+1) elements.  Rather than a [W, 2W]
+      membership cumsum (O(W^2) table), merged-rank space is cut into
+      ~sqrt(2W) buckets: per-bucket member counts for every offset come
+      from two [W, NBK] cumsums over o (a suffix count for block-a hits, an
+      exclusive prefix count for block-b hits), the answer's bucket from a
+      [W, NBK] row scan, and the within-bucket position from one [W, BS]
+      membership gather — O(W * sqrt(W)) total, all offsets of a pair
+      sharing a single sort.  The trailing partial block is padded with
+      +inf, which no full window ever selects.
+    * Clipped windows (t > S-W) never materialize their rows at all.  A
+      clipped window's multiset is suffix(t) ∪ {pad}×m_t with pad = x[S-1]
+      and m_t = t+W-S, so its sorted form interleaves the sorted suffix with
+      a run of pads starting at c_t = #{i >= t : x[i] < pad}.  One global
+      argsort of the tail plus the same bucket decomposition (per-bucket
+      suffix counts, then a within-bucket gather) gives every suffix's
+      order statistics without a [tail, tail] table, and the pad run is
+      spliced in arithmetically.
+    """
+    # static per-level interpolation constants, f32 like jnp.quantile's
+    n1 = np.float32(w) - np.float32(1.0)
+    qn = levels.astype(np.float32) * n1
+    low = np.clip(np.floor(qn), np.float32(0.0), n1).astype(np.int32)
+    high = np.clip(np.ceil(qn), np.float32(0.0), n1).astype(np.int32)
+    hw = (qn - np.floor(qn)).astype(np.float32)
+    lw = (np.float32(1.0) - hw).astype(np.float32)
+    nan32 = jnp.float32(np.nan)
+    parts = []
+
+    nfull = s - w + 1
+    if nfull > 0:  # full windows: t in [0, S-W], two-block decomposition
+        nan_csum = jnp.concatenate([
+            jnp.zeros((1,), jnp.int32),
+            jnp.cumsum(jnp.isnan(x).astype(jnp.int32))])
+        nb = -(-s // w)
+        ypad = jnp.concatenate(
+            [x, jnp.full(((nb + 1) * w - s,), jnp.inf, x.dtype)])
+        blocks = ypad.reshape(nb + 1, w)
+        amax = (s - w) // w  # last block index any full window starts in
+        pair_arr = jnp.stack([jnp.concatenate([blocks[a], blocks[a + 1]])
+                              for a in range(amax + 1)])  # [P, 2W]
+        # unique order-statistic depths shared across the Q levels
+        depths = sorted(set(low.tolist()) | set(high.tolist()))
+        d_of = {p: i for i, p in enumerate(depths)}
+        cdtype = jnp.int16 if w < 2 ** 15 else jnp.int32
+        nbk = min(max(8, int(round(1.3 * (2 * w) ** 0.5 / 8)) * 8), 2 * w)
+        bs = -(-2 * w // nbk)  # merged ranks per bucket
+
+        def per_pair(ya):  # [2W] -> [U, W]: stats at each unique depth
+            order = jnp.argsort(ya)
+            ys = ya[order]
+            pos = order % w
+            blk0 = order < w
+            inv = jnp.argsort(order)  # source index -> merged rank
+            bks = jnp.arange(nbk, dtype=jnp.int32)
+            oha = ((inv[:w] // bs)[:, None] == bks[None, :])
+            ohb = ((inv[w:] // bs)[:, None] == bks[None, :])
+            # cnt[o, b] = members of window(o) with merged rank in bucket b:
+            # block-a hits are a suffix count over o, block-b an exclusive
+            # prefix count
+            cnt_a = jnp.cumsum(oha[::-1].astype(cdtype), axis=0)[::-1]
+            cnt_b = jnp.cumsum(ohb.astype(cdtype), axis=0)
+            cnt_b = jnp.concatenate(
+                [jnp.zeros((1, nbk), cdtype), cnt_b[:-1]], axis=0)
+            ccum = jnp.cumsum((cnt_a + cnt_b).astype(jnp.int32), axis=1)
+            o_idx = jnp.arange(w)
+
+            def stat(p):  # (p+1)-th smallest of every offset's window
+                bstar = jnp.sum((ccum <= p).astype(jnp.int32), axis=1)
+                below = jnp.where(
+                    bstar > 0, ccum[o_idx, jnp.maximum(bstar - 1, 0)], 0)
+                j = p - below  # 0-based depth within the answer's bucket
+                base = bstar * bs
+                rloc = base[:, None] + jnp.arange(bs)[None, :]
+                rc = jnp.minimum(rloc, 2 * w - 1)
+                mloc = jnp.where(blk0[rc], pos[rc] >= o_idx[:, None],
+                                 pos[rc] < o_idx[:, None])
+                mloc &= rloc < 2 * w
+                lcs = jnp.cumsum(mloc.astype(cdtype), axis=1)
+                li = jnp.sum((lcs <= j[:, None].astype(cdtype)), axis=1)
+                return ys[jnp.minimum(base + li, 2 * w - 1)]
+
+            return jnp.stack([stat(int(p)) for p in depths])
+
+        p_n = amax + 1
+        # [W, 2W] membership transient per pair: chunk pairs like the
+        # blocked path chunks window starts, same footprint bound
+        pair_chunk = max(1, chunk_size // max(w, 1))
+        if p_n <= pair_chunk:
+            stats = jax.vmap(per_pair)(pair_arr)  # [P, U, W]
+        else:
+            n = -(-p_n // pair_chunk)
+            pidx = jnp.minimum(jnp.arange(n * pair_chunk), p_n - 1)
+            stats = jax.lax.map(
+                jax.vmap(per_pair),
+                pair_arr[pidx].reshape(n, pair_chunk, 2 * w))
+            stats = stats.reshape(n * pair_chunk, len(depths), w)[:p_n]
+        flat = jnp.moveaxis(stats, 1, 0).reshape(len(depths), -1)[:, :nfull]
+        vals = jnp.stack([flat[d_of[int(lo)]] * l + flat[d_of[int(hi)]] * h
+                          for lo, hi, l, h in zip(low, high, lw, hw)])
+        starts = jnp.arange(nfull)
+        poison = (nan_csum[starts + w] - nan_csum[starts]) > 0
+        parts.append(jnp.where(poison[None, :], nan32, vals))
+
+    t0 = max(nfull, 0)
+    tail = s - t0
+    if tail > 0:  # clipped windows: t in [t0, S-1], suffix + m_t pads
+        y = x[t0:]
+        pad = x[s - 1]
+        order = jnp.argsort(y)
+        ys = y[order]
+        rows = jnp.arange(tail)
+        m = rows.astype(jnp.int32) + jnp.int32(t0 + w - s)  # pads per window
+        c = jnp.cumsum((y < pad).astype(jnp.int32)[::-1])[::-1]
+        poison = jnp.cumsum(jnp.isnan(y)[::-1].astype(jnp.int32))[::-1] > 0
+        # suffix i's members are the sorted-rank set {inv[j] : j >= i}; the
+        # same bucket decomposition as the full-window path replaces the
+        # [tail, tail] membership cumsum: per-bucket suffix counts from one
+        # [tail, NBK] reverse cumsum, then a [tail, BS] local gather
+        ctyp = jnp.int16 if tail < 2 ** 15 else jnp.int32
+        nbk_t = min(max(8, int(round(1.3 * tail ** 0.5 / 8)) * 8), tail)
+        bs_t = -(-tail // nbk_t)
+        inv = jnp.argsort(order)  # source position -> sorted rank
+        oh = ((inv // bs_t)[:, None]
+              == jnp.arange(nbk_t, dtype=jnp.int32)[None, :])
+        cnt = jnp.cumsum(oh[::-1].astype(ctyp), axis=0)[::-1]
+        ccum = jnp.cumsum(cnt.astype(jnp.int32), axis=1)  # [tail, NBK]
+
+        def merged_at(p: int):  # sorted clipped window at static position p
+            # suffix rank feeding position p: p below the pad run, p - m_t
+            # above it (the pad run itself short-circuits in the where)
+            j = jnp.clip(jnp.where(p < c, p, p - m), 0, tail - 1)
+            bstar = jnp.sum((ccum <= j[:, None]).astype(jnp.int32), axis=1)
+            below = jnp.where(bstar > 0,
+                              ccum[rows, jnp.maximum(bstar - 1, 0)], 0)
+            jj = j - below  # 0-based depth within the answer's bucket
+            base = bstar * bs_t
+            rloc = base[:, None] + jnp.arange(bs_t)[None, :]
+            rc = jnp.minimum(rloc, tail - 1)
+            mloc = (order[rc] >= rows[:, None]) & (rloc < tail)
+            lcs = jnp.cumsum(mloc.astype(ctyp), axis=1)
+            li = jnp.sum((lcs <= jj[:, None].astype(ctyp)), axis=1)
+            v = ys[jnp.minimum(base + li, tail - 1)]
+            return jnp.where((p >= c) & (p < c + m), pad, v)
+
+        vals = jnp.stack([merged_at(int(lo)) * l + merged_at(int(hi)) * h
+                          for lo, hi, l, h in zip(low, high, lw, hw)])
+        parts.append(jnp.where(poison[None, :], nan32, vals))
+    return jnp.concatenate(parts, axis=1)
+
+
 def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig,
                                quantile=None):
     """threshold[t] = `quantile` of ci over the forward window [t, t + window).
@@ -83,7 +277,11 @@ def precompute_shift_threshold(ci_trace, dt_h: float, cfg: ShiftingConfig,
     scenario grids can sweep the threshold level inside one compiled program;
     None falls back to the static `cfg.quantile`.
     """
-    q = jnp.float32(cfg.quantile) if quantile is None else quantile
+    # np.float32, NOT jnp.float32: under jit the latter stages a
+    # convert_element_type and hands forward_window_quantiles a TRACER,
+    # silently demoting the static config level to the blocked fallback
+    # (per-window jnp.quantile re-sorts — the typed-variant vmap collapse)
+    q = np.float32(cfg.quantile) if quantile is None else quantile
     return forward_window_quantile(ci_trace, dt_h, cfg.forecast_window_h, q)
 
 

@@ -235,6 +235,42 @@ def retime_task_table(tasks: TaskTable, arrival) -> TaskTable:
     return tasks._replace(arrival=arrival, status=status.astype(jnp.int32))
 
 
+def priority_schedule_order(tasks: TaskTable, levels: int) -> jax.Array:
+    """Stable permutation sorting rows into (priority desc, arrival) order.
+
+    The scheduler's merged admission order for priority classes is
+    "higher level first, FIFO within a level".  Rows are already
+    arrival-sorted, so the stable composite key
+    `(levels-1-priority) * T + row` makes that merged order the ROW order —
+    selection then degenerates to the plain FIFO prefix scan
+    (`scheduler._first_k_indices`) instead of a level-major `[L*T]`
+    flatten+cumsum EVERY step of the demand scan.  The permutation is
+    computed once per simulation, outside the scan; `priority` may be
+    traced (dyn `interactive_frac`), so this stays jit/vmap-safe.  INVALID
+    padding rows carry priority 0 and sit at the tail of the arrival
+    order, so they stay at the very end of the permuted table.
+    """
+    t = tasks.n
+    prio = jnp.clip(jnp.asarray(tasks.priority).astype(jnp.int32), 0,
+                    levels - 1)
+    key = (jnp.int32(levels - 1) - prio) * jnp.int32(t) + jnp.arange(
+        t, dtype=jnp.int32)
+    return jnp.argsort(key).astype(jnp.int32)
+
+
+def permute_task_table(tasks: TaskTable, order) -> TaskTable:
+    """Reorder every column of the table by `order` (i32[T] permutation).
+
+    Invert with `permute_task_table(t, inverse_permutation(order))`.
+    """
+    return jax.tree.map(lambda col: col[order], tasks)
+
+
+def inverse_permutation(order) -> jax.Array:
+    """Inverse of a permutation vector: inv[order[i]] = i."""
+    return jnp.argsort(order).astype(jnp.int32)
+
+
 def stack_task_tables(tables) -> TaskTable:
     """Stack equal-width task tables along a new leading region/batch axis.
 

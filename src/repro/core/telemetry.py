@@ -224,6 +224,7 @@ class RunRecord:
     grid_shape: Optional[list] = None
     chunk: Optional[dict] = None    # chunk plan: predicted vs actual bytes
     mesh: Optional[dict] = None
+    memory: Optional[list] = None   # per-device allocator watermarks
     trace_dtypes: Optional[dict] = None
     probes: Optional[dict] = None   # {"stride": ..., "capacity": ...}
     extra: dict = dataclasses.field(default_factory=dict)
@@ -472,6 +473,7 @@ def run_recorder(kind: str, cfg: Any, **extra: Any):
         execute_time_s=max(wall - compile_s, 0.0),
         compiles=watch.count,
         pallas_interpret=interp,
+        memory=device_memory_watermarks(),
         grid_shape=builder.grid_shape,
         chunk=builder.chunk,
         mesh=builder.mesh,
@@ -479,6 +481,32 @@ def run_recorder(kind: str, cfg: Any, **extra: Any):
         probes=probes,
         extra=builder.extra,
     ))
+
+
+def device_memory_watermarks() -> list:
+    """Per-device allocator stats from the PJRT client (the backing store of
+    ``jax.profiler``'s device-memory view).  Each entry reports
+    ``peak_bytes_in_use`` / ``bytes_in_use`` or ``None`` where the platform
+    exposes no allocator stats (the CPU backend): absence is data —
+    downstream tables print it next to the *predicted* chunk-plan bytes so
+    a reader can tell "no watermark available" from "zero bytes"."""
+    out = []
+    for d in jax.local_devices():
+        try:
+            stats = d.memory_stats() or {}
+        except Exception:  # pragma: no cover - backend without memory_stats
+            stats = {}
+        out.append({"device": str(d),
+                    "peak_bytes_in_use": stats.get("peak_bytes_in_use"),
+                    "bytes_in_use": stats.get("bytes_in_use")})
+    return out
+
+
+def peak_bytes_per_device() -> Optional[int]:
+    """Max ``peak_bytes_in_use`` across local devices, or None (CPU)."""
+    peaks = [m["peak_bytes_in_use"] for m in device_memory_watermarks()
+             if m["peak_bytes_in_use"] is not None]
+    return max(peaks) if peaks else None
 
 
 def is_tracing(tree: Any) -> bool:
@@ -497,8 +525,12 @@ class Probes(NamedTuple):
     whose ``step`` is ``-1`` were never written (horizon shorter than
     the buffer).  Fields mirror the settled :class:`~.engine.EnergyFlow`
     ledger for the step, plus battery state of charge (post-dispatch),
-    the intra-billing-window running peak (post-pricing) and the
-    scheduler queue depth (tasks arrived but still pending).
+    the intra-billing-window running peak (post-pricing), the scheduler
+    queue depth (tasks arrived but still pending), and the resilience
+    series: the thermal throttle the step ran under, the chiller derate
+    and the PDU power cap in force (1.0 / 1.0 / +inf whenever
+    ``cfg.resilience`` is off — the channels exist on both backends
+    regardless, so probe consumers never branch on the config).
     """
 
     step: jax.Array             # i32[K]: sim step index of the sample
@@ -513,6 +545,9 @@ class Probes(NamedTuple):
     soc_kwh: jax.Array          # battery charge after dispatch
     window_peak_kw: jax.Array   # running intra-window demand peak
     queue_depth: jax.Array      # arrived-but-pending tasks
+    throttle_factor: jax.Array  # thermal throttle APPLIED this step (1 = none)
+    chiller_derate: jax.Array   # facility-failure cooling derate (1 = healthy)
+    pdu_cap_kw: jax.Array       # rack-power clamp in force (+inf = healthy)
 
 
 PROBE_VALUE_FIELDS = tuple(f for f in Probes._fields if f != "step")

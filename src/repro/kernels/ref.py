@@ -106,8 +106,10 @@ def fused_facility_chain(it_kw, ci, wet_bulb_c, price, price_lo, price_hi,
     vectorized form differently than the scalar scan body).
 
     Flow keys mirror `engine.EnergyFlow`; extras: `water_l_per_h`,
-    `heat_reuse_kw`, `soc` (post-step charge, kWh) and `want_charge` (the
-    final dispatch decision, for `BatteryState.was_charging`).
+    `heat_reuse_kw`, `soc` (post-step charge, kWh), `want_charge` (the
+    final dispatch decision, for `BatteryState.was_charging`) and
+    `chiller_derate` (the derate series the cooling model applied — ones
+    when healthy — consumed by the probe-bus export).
 
     `chiller_derate` (f32[S] facility-failure series, core/resilience.py)
     degrades the cooling model exactly as `stage_cooling` does — it is
@@ -207,4 +209,11 @@ def fused_facility_chain(it_kw, ci, wet_bulb_c, price, price_lo, price_hi,
             "grid_import_kw": grid_import_kw, "grid_export_kw": export_kw,
             "curtailed_kw": curtailed_kw, "water_l_per_h": water_l_per_h,
             "heat_reuse_kw": heat_reuse_kw, "soc": soc,
-            "want_charge": want_charge}
+            "want_charge": want_charge,
+            # the derate series the cooling model actually applied (ones =
+            # healthy): echoed so the probe bus reads every facility-side
+            # channel from one flows dict instead of re-deriving it
+            "chiller_derate": (jnp.ones_like(it_kw) if chiller_derate is None
+                               else jnp.broadcast_to(
+                                   jnp.asarray(chiller_derate, jnp.float32),
+                                   it_kw.shape))}

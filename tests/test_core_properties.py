@@ -130,3 +130,118 @@ def test_carbon_trace_population_matches_paper():
     # population spans the paper's Fig 13 ranges
     assert mean.min() < 40.0 and mean.max() > 500.0
     assert var.max() > 0.3 and var.min() < 0.1
+
+
+# ---------------------------------------------------------------------------
+# single-pass priority scheduler: differential properties (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+from repro.core import RUNNING, SchedulerConfig  # noqa: E402
+from repro.core.scheduler import (_first_k_by_priority,  # noqa: E402
+                                  _first_k_by_priority_reference,
+                                  schedule_first_fit)
+from repro.core.state import (inverse_permutation,  # noqa: E402
+                              permute_task_table, priority_schedule_order)
+
+
+@st.composite
+def priority_select_case(draw):
+    n = draw(st.integers(1, 96))
+    levels = draw(st.integers(1, 5))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    return dict(
+        mask=rng.uniform(size=n) < draw(st.floats(0.0, 1.0)),
+        # include out-of-range codes: they match no level and never select
+        prio=rng.integers(-1, levels + 1, n),
+        k=draw(st.integers(1, 2 * n)),
+        levels=levels,
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(priority_select_case())
+def test_single_pass_select_matches_per_level_reference(c):
+    """The one-cumsum `[L*T]` select is the per-level oracle, bit for bit."""
+    mask = jnp.asarray(c["mask"])
+    prio = jnp.asarray(c["prio"], jnp.int32)
+    got = np.asarray(_first_k_by_priority(mask, prio, c["k"], c["levels"]))
+    ref = np.asarray(_first_k_by_priority_reference(
+        mask, prio, c["k"], c["levels"]))
+    np.testing.assert_array_equal(got, ref)
+    # and both match the numpy lexsort model on in-range rows
+    idx = np.nonzero(c["mask"] & (c["prio"] >= 0)
+                     & (c["prio"] < c["levels"]))[0]
+    order = idx[np.lexsort((idx, -c["prio"][idx]))][:c["k"]]
+    expect = np.full(c["k"], -1, np.int64)
+    expect[:order.shape[0]] = order
+    np.testing.assert_array_equal(got, expect)
+
+
+@st.composite
+def admission_case(draw):
+    seed = draw(st.integers(0, 2**16))
+    n = draw(st.integers(1, 48))
+    levels = draw(st.integers(2, 4))
+    rng = np.random.default_rng(seed)
+    arrival = np.sort(rng.uniform(0.0, 12.0, n))
+    duration = rng.uniform(0.5, 6.0, n)
+    cores = rng.integers(1, 4, n).astype(float)
+    prio = rng.integers(0, levels, n)
+    return dict(arrival=arrival, duration=duration, cores=cores,
+                prio=prio, levels=levels,
+                k=draw(st.integers(1, 16)),
+                n_hosts=draw(st.integers(1, 3)),
+                host_cores=draw(st.sampled_from([2, 4])),
+                now=draw(st.floats(0.0, 14.0)))
+
+
+def _admission_tables(c):
+    tasks = make_task_table(c["arrival"], c["duration"], c["cores"],
+                            priority=np.asarray(c["prio"], np.int32))
+    hosts = make_host_table(c["n_hosts"], c["host_cores"])
+    shift_ok = jnp.ones(tasks.n, bool)
+    cfg = SchedulerConfig(slots_per_step=c["k"],
+                          priority_levels=c["levels"])
+    return tasks, hosts, shift_ok, cfg
+
+
+@settings(max_examples=50, deadline=None)
+@given(admission_case())
+def test_presorted_schedule_matches_level_major(c):
+    """Permute once + plain-FIFO select (the engine's presorted demand-scan
+    path) places the same tasks on the same hosts as the level-major
+    flatten, bit for bit, for arbitrary priority/arrival/footprint tables."""
+    tasks, hosts, shift_ok, cfg = _admission_tables(c)
+    now = jnp.float32(c["now"])
+    plain = schedule_first_fit(tasks, hosts, now, shift_ok, cfg)
+    order = priority_schedule_order(tasks, cfg.priority_levels)
+    pre = schedule_first_fit(permute_task_table(tasks, order), hosts, now,
+                             shift_ok[order], cfg, presorted=True)
+    pre = permute_task_table(pre, inverse_permutation(order))
+    for name in ("status", "host", "first_start", "remaining"):
+        np.testing.assert_array_equal(np.asarray(getattr(plain, name)),
+                                      np.asarray(getattr(pre, name)), name)
+
+
+@settings(max_examples=50, deadline=None)
+@given(admission_case())
+def test_admission_is_exactly_once_and_level_ordered(c):
+    """With unconstrained capacity the admitted set is EXACTLY the first-k
+    prefix of the (priority desc, arrival) order — each eligible row at
+    most once, higher classes never displaced by lower ones."""
+    tasks, _, shift_ok, cfg = _admission_tables(c)
+    hosts = make_host_table(1, 10_000)  # capacity never binds
+    now = jnp.float32(c["now"])
+    out = schedule_first_fit(tasks, hosts, now, shift_ok, cfg)
+    placed = np.asarray(out.status) == RUNNING
+    elig = np.asarray(tasks.arrival) <= c["now"]
+    idx = np.nonzero(elig)[0]
+    prio = np.asarray(tasks.priority)
+    expect = np.zeros_like(placed)
+    expect[idx[np.lexsort((idx, -prio[idx]))][:c["k"]]] = True
+    np.testing.assert_array_equal(placed, expect)
+    # exactly-once: every placed row landed on a real host, once
+    assert np.all(np.asarray(out.host)[placed] == 0)
+    assert np.all(np.asarray(out.first_start)[placed] == c["now"])
+    assert np.all(~np.isfinite(np.asarray(out.first_start)[~placed]))

@@ -13,7 +13,8 @@ import pytest
 from jax.sharding import Mesh
 
 from repro.core import (BatteryConfig, CoolingConfig, FailureConfig,
-                        ScenarioGrid, ShiftingConfig, SimConfig, dyn_axis,
+                        ScenarioGrid, SchedulerConfig, ShiftingConfig,
+                        SimConfig, dyn_axis,
                         make_host_table, make_task_table, seed_axis, simulate,
                         summarize, sweep_grid, trace_axis, weather_axis,
                         with_scale)
@@ -393,3 +394,114 @@ class TestValidation:
         with pytest.raises(ValueError, match="cooling.enabled"):
             sweep_grid(tasks, hosts, SimConfig(n_steps=N_STEPS),
                        [weather_axis(traces)], ci_trace=traces[0])
+
+
+class TestShardMapExecutor:
+    """The ISSUE-10 weak-scaling executor: one leading-axis chunk per
+    device via shard_map.  Acceptance pin: at device_count=1 it is
+    BITWISE-equal to the chunked path."""
+
+    def test_matches_chunked_bitwise_single_device(self, workload, traces):
+        tasks, hosts = workload
+        caps = np.array([2.0, 6.0], np.float32)
+        cfg = SimConfig(n_steps=N_STEPS, battery=BatteryConfig(enabled=True))
+        axes = [trace_axis(np.concatenate([traces, traces * 0.8])),
+                dyn_axis(batt_capacity_kwh=caps)]
+        chunked = sweep_grid(tasks, hosts, cfg, axes, chunk_size=4)
+        weak = sweep_grid(tasks, hosts, cfg, axes, executor="shard_map")
+        for field in chunked._fields:
+            if getattr(chunked, field) is None:  # probes: off by default
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(getattr(weak, field)),
+                np.asarray(getattr(chunked, field)), err_msg=field)
+
+    def test_typed_grid_matches_bitwise(self, workload, traces):
+        """The weak-scaling bench's typed variant: priority levels +
+        shifting + the interactive_frac dyn key, same bitwise pin."""
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS,
+                        shifting=ShiftingConfig(enabled=True,
+                                                max_delay_h=24.0),
+                        scheduler=SchedulerConfig(priority_levels=3))
+        axes = [trace_axis(traces)]
+        dyn = {"interactive_frac": np.float32(0.35)}
+        chunked = sweep_grid(tasks, hosts, cfg, axes, dyn=dyn)
+        grid = ScenarioGrid(axes, base_dyn=dyn)
+        weak = grid.run_shard_map(tasks, hosts, cfg)
+        for field in chunked._fields:
+            if getattr(chunked, field) is None:
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(getattr(weak, field)),
+                np.asarray(getattr(chunked, field)), err_msg=field)
+
+    def test_rejects_chunk_size_and_unknown_executor(self, workload, traces):
+        tasks, hosts = workload
+        cfg = SimConfig(n_steps=N_STEPS)
+        axes = [trace_axis(traces)]
+        with pytest.raises(ValueError, match="one chunk per"):
+            sweep_grid(tasks, hosts, cfg, axes, executor="shard_map",
+                       chunk_size=1)
+        with pytest.raises(ValueError, match="unknown executor"):
+            sweep_grid(tasks, hosts, cfg, axes, executor="pmap")
+
+    def test_rejects_region_leading_axis(self, workload, traces):
+        from repro.core import region_axis
+        from repro.core.fleet import FleetSpec
+        grid = ScenarioGrid([region_axis(FleetSpec(ci_traces=traces))])
+        tasks, hosts = workload
+        with pytest.raises(ValueError, match="region_axis"):
+            grid.shard_map_callable(tasks, hosts, SimConfig(n_steps=N_STEPS))
+
+    def test_multidevice_weak_scaling(self):
+        """4 forced host devices: divisibility enforced, results bitwise
+        equal to the single-program path, record carries the mesh/chunk
+        plan.  Subprocess: device count is fixed at backend init."""
+        import os
+        import subprocess
+        import sys
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro.core import (SimConfig, BatteryConfig, SchedulerConfig,
+                        ShiftingConfig, sweep_grid, trace_axis, dyn_axis,
+                        make_host_table, make_task_table)
+rng = np.random.default_rng(0)
+tasks = make_task_table(np.sort(rng.uniform(0, 6, 12)),
+                        rng.uniform(0.5, 4.0, 12),
+                        rng.integers(1, 3, 12).astype(float),
+                        job_class=rng.integers(0, 3, 12).astype(np.int32))
+hosts = make_host_table(3, 4)
+S = 48
+t = np.arange(S) * 0.25
+traces = np.stack([300 + 100 * np.sin(2 * np.pi * t / 24 + p)
+                   for p in np.linspace(0, 3, 8)]).astype(np.float32)
+cfg = SimConfig(n_steps=S, battery=BatteryConfig(enabled=True),
+                shifting=ShiftingConfig(enabled=True, max_delay_h=24.0),
+                scheduler=SchedulerConfig(priority_levels=3))
+axes = [trace_axis(traces)]
+full = sweep_grid(tasks, hosts, cfg, axes)
+weak = sweep_grid(tasks, hosts, cfg, axes, executor="shard_map")
+for f in full._fields:
+    a = getattr(full, f)
+    if a is None:
+        continue
+    assert np.array_equal(np.asarray(a), np.asarray(getattr(weak, f))), f
+try:  # 6 cells over 4 devices: must refuse, not pad silently
+    sweep_grid(tasks, hosts, cfg, [trace_axis(traces[:6])],
+               executor="shard_map")
+except ValueError as e:
+    assert "divide evenly" in str(e)
+else:
+    raise SystemExit("indivisible lead not rejected")
+print("OK")
+"""
+        env = dict(os.environ, PYTHONPATH=os.path.join(
+            os.path.dirname(__file__), "..", "src"))
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=300,
+                             env=env)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert out.stdout.strip().endswith("OK")

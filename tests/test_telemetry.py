@@ -25,7 +25,8 @@ import numpy as np
 import pytest
 
 from repro.core import (BatteryConfig, CoolingConfig, PricingConfig,
-                        ProbeConfig, RenewableConfig, SimConfig, dyn_axis,
+                        ProbeConfig, RenewableConfig, ResilienceConfig,
+                        SimConfig, dyn_axis,
                         make_host_table, make_task_table, simulate,
                         simulate_fleet, summarize, sweep_grid, telemetry,
                         trace_axis)
@@ -260,6 +261,41 @@ class TestProbeBus:
             np.testing.assert_allclose(np.asarray(getattr(probed, f)),
                                        np.asarray(getattr(plain, f)),
                                        rtol=1e-5, atol=1e-4, err_msg=f)
+
+    def test_resilience_channels_healthy_defaults(self):
+        """The resilience channels exist unconditionally: with the loops
+        open they read the identity values (no throttle, no derate, no
+        clamp) on BOTH backends — dashboards never branch on config."""
+        cfg = _cfg(probes=ProbeConfig(enabled=True, stride=1))
+        for c in (cfg, cfg.replace(backend="megakernel")):
+            p = _run(c).probes
+            assert np.all(np.asarray(p.throttle_factor) == 1.0)
+            assert np.all(np.asarray(p.chiller_derate) == 1.0)
+            assert np.all(np.isinf(np.asarray(p.pdu_cap_kw)))
+
+    def test_resilience_channels_match_across_backends(self):
+        """Hazards forced high so every loop actually bites: the stage
+        pipeline's in-scan samples and the megakernel's vectorized gather
+        must report the same throttle/derate/clamp series."""
+        cfg = _cfg(cool=True,
+                   resilience=ResilienceConfig(
+                       enabled=True, chiller_mtbf_h=8.0, chiller_repair_h=6.0,
+                       pdu_mtbf_h=12.0, pdu_repair_h=4.0, pdu_cap_kw=5.0,
+                       throttle_inlet_c=10.0, throttle_factor=0.5),
+                   probes=ProbeConfig(enabled=True, stride=1))
+        ps = _run(cfg).probes
+        pm = _run(cfg.replace(backend="megakernel")).probes
+        for f in ("throttle_factor", "chiller_derate", "pdu_cap_kw"):
+            np.testing.assert_allclose(np.asarray(getattr(ps, f)),
+                                       np.asarray(getattr(pm, f)),
+                                       rtol=1e-6, err_msg=f)
+        # the loops really closed: derate, throttle and clamp all engaged
+        assert np.asarray(ps.chiller_derate).min() < 1.0
+        assert np.asarray(ps.throttle_factor).min() < 1.0
+        assert np.asarray(ps.pdu_cap_kw).min() == 5.0
+        # throttle channel is the factor the step RAN under: step 0 is
+        # always un-throttled (the trip applies on the NEXT tick)
+        assert np.asarray(ps.throttle_factor)[0] == 1.0
 
     def test_queue_depth_is_sane(self):
         # oversubscribed on purpose: 8 two-core tasks, one 4-core host

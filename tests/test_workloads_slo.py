@@ -24,10 +24,13 @@ from repro.core import (DONE, INVALID, JOB_BATCH, JOB_INTERACTIVE,
 from repro.core.fleet import FleetSpec
 from repro.core.power import (JOB_CLASS_CPU_UTIL, JOB_CLASS_GPU_UTIL,
                               class_utilization)
-from repro.core.scheduler import (_first_k_by_priority, _first_k_indices,
+from repro.core.scheduler import (_first_k_by_priority,
+                                  _first_k_by_priority_reference,
+                                  _first_k_indices, schedule_first_fit,
                                   schedule_step)
 from repro.core.shifting import should_stop, start_allowed
-from repro.core.state import init_sim_state
+from repro.core.state import (init_sim_state, inverse_permutation,
+                              permute_task_table, priority_schedule_order)
 from repro.tasktraces import (make_arrival_rate_traces, make_arrival_sets,
                               sample_traffic_params, traffic_stats)
 from repro.workloads.synthetic import make_workload
@@ -431,3 +434,127 @@ class TestGridIntegration:
         assert float(plain.op_carbon_kg) == float(frac0.op_carbon_kg)
         assert float(plain.sla_violation_frac) == float(
             frac0.sla_violation_frac)
+
+
+class TestSinglePassScheduler:
+    """Differential pins for the ISSUE-10 single-pass priority select and
+    the presorted demand-scan path (hypothesis twins live in
+    tests/test_core_properties.py; these run in the base tier)."""
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_single_pass_matches_per_level_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 96))
+        levels = int(rng.integers(1, 6))
+        k = int(rng.integers(1, 2 * n + 1))
+        mask = rng.uniform(size=n) < rng.uniform()
+        # out-of-range codes match no level and must never be selected
+        prio = rng.integers(-1, levels + 1, n)
+        got = np.asarray(_first_k_by_priority(
+            jnp.asarray(mask), jnp.asarray(prio, jnp.int32), k, levels))
+        ref = np.asarray(_first_k_by_priority_reference(
+            jnp.asarray(mask), jnp.asarray(prio, jnp.int32), k, levels))
+        np.testing.assert_array_equal(got, ref)
+        idx = np.nonzero(mask & (prio >= 0) & (prio < levels))[0]
+        order = idx[np.lexsort((idx, -prio[idx]))][:k]
+        expect = np.full(k, -1, np.int64)
+        expect[:order.shape[0]] = order
+        np.testing.assert_array_equal(got, expect)
+
+    @staticmethod
+    def _case(seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 48))
+        levels = int(rng.integers(2, 5))
+        tasks = make_task_table(
+            np.sort(rng.uniform(0.0, 12.0, n)), rng.uniform(0.5, 6.0, n),
+            rng.integers(1, 4, n).astype(float),
+            priority=rng.integers(0, levels, n).astype(np.int32))
+        cfg = SchedulerConfig(slots_per_step=int(rng.integers(1, 17)),
+                              priority_levels=levels)
+        now = jnp.float32(rng.uniform(0.0, 14.0))
+        return tasks, cfg, now
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_presorted_matches_level_major(self, seed):
+        """Permute once + plain-FIFO prefix (the engine's presorted path)
+        is bit-for-bit the per-step level-major flatten."""
+        tasks, cfg, now = self._case(seed)
+        hosts = make_host_table(int(seed % 3) + 1, 4)
+        ok = jnp.ones(tasks.n, bool)
+        plain = schedule_first_fit(tasks, hosts, now, ok, cfg)
+        order = priority_schedule_order(tasks, cfg.priority_levels)
+        pre = schedule_first_fit(permute_task_table(tasks, order), hosts,
+                                 now, ok[order], cfg, presorted=True)
+        pre = permute_task_table(pre, inverse_permutation(order))
+        for name in ("status", "host", "first_start", "remaining"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(plain, name)),
+                np.asarray(getattr(pre, name)), name)
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_admission_exactly_once_and_level_ordered(self, seed):
+        """With capacity unconstrained the admitted set is EXACTLY the
+        first-k prefix of (priority desc, arrival): each eligible row at
+        most once, higher classes never displaced by lower ones."""
+        tasks, cfg, now = self._case(seed)
+        hosts = make_host_table(1, 10_000)  # capacity never binds
+        out = schedule_first_fit(tasks, hosts, now,
+                                 jnp.ones(tasks.n, bool), cfg)
+        placed = np.asarray(out.status) == RUNNING
+        elig = np.asarray(tasks.arrival) <= float(now)
+        idx = np.nonzero(elig)[0]
+        prio = np.asarray(tasks.priority)
+        expect = np.zeros_like(placed)
+        expect[idx[np.lexsort((idx, -prio[idx]))][:cfg.slots_per_step]] = True
+        np.testing.assert_array_equal(placed, expect)
+        assert np.all(np.asarray(out.host)[placed] == 0)
+        assert np.all(np.asarray(out.first_start)[placed] == float(now))
+        assert np.all(~np.isfinite(np.asarray(out.first_start)[~placed]))
+
+
+def _collect_scans(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            out.append(eqn)
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for x in vs:
+                if isinstance(x, jax.core.ClosedJaxpr):
+                    _collect_scans(x.jaxpr, out)
+                elif isinstance(x, jax.core.Jaxpr):
+                    _collect_scans(x, out)
+    return out
+
+
+def test_typed_vmap_demand_scan_is_batched():
+    """vmap over carbon traces must BATCH the typed demand scan (one scan
+    over time with a batched carry), never rewrite it into a loop over the
+    batch axis — the per-cell fallback behind the ISSUE-10 typed-vmap16
+    collapse."""
+    n_steps, batch = 96, 5
+    rng = np.random.default_rng(0)
+    tasks = make_task_table(np.sort(rng.uniform(0, 12, 12)),
+                            rng.uniform(0.5, 4.0, 12),
+                            rng.integers(1, 3, 12).astype(float),
+                            job_class=rng.integers(0, 3, 12).astype(np.int32))
+    hosts = make_host_table(3, 4)
+    cfg = SimConfig(n_steps=n_steps,
+                    shifting=ShiftingConfig(enabled=True, max_delay_h=24.0),
+                    scheduler=SchedulerConfig(priority_levels=3))
+    traces = jnp.asarray(
+        np.abs(300.0 * (1 + 0.4 * rng.standard_normal((batch, n_steps)))),
+        jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        jax.vmap(lambda tr: simulate(tasks, hosts, tr, cfg)))(traces)
+    scans = _collect_scans(jaxpr.jaxpr, [])
+    assert all(e.params["length"] != batch for e in scans)
+    step_scans = [e for e in scans if e.params["length"] == n_steps]
+    assert step_scans, "demand scan missing from vmapped jaxpr"
+
+    def batched_carry(e):
+        nc, ncar = e.params["num_consts"], e.params["num_carry"]
+        carry = e.params["jaxpr"].jaxpr.invars[nc:nc + ncar]
+        return any(batch in getattr(v.aval, "shape", ()) for v in carry)
+
+    assert any(batched_carry(e) for e in step_scans)
